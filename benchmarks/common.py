@@ -1,0 +1,67 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import statistics
+from dataclasses import asdict
+from pathlib import Path
+
+from repro.agents.orchestrator import RunResult, make_sim_llm, run_task
+from repro.agents.tasks import TASKS
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+_CACHE: dict = {}
+
+
+def sim_llm():
+    if "llm" not in _CACHE:
+        _CACHE["llm"] = make_sim_llm()
+    return _CACHE["llm"]
+
+
+def run_suite(runs_per_mode: int = 5, n_agents: int = 4,
+              tasks: list[str] | None = None, force: bool = False
+              ) -> dict[str, dict[str, list[RunResult]]]:
+    """Run (or load cached) seq/par trials for every task.
+
+    Results are cached to JSON so the per-table benchmarks share one suite
+    (the paper's 600-trial design, scaled to CPU budget).
+    """
+    tasks = tasks or list(TASKS)
+    cache_f = RESULTS_DIR / f"suite_r{runs_per_mode}_a{n_agents}.json"
+    if cache_f.exists() and not force:
+        raw = json.loads(cache_f.read_text())
+        return {t: {m: [RunResult(**r) for r in raw[t][m]]
+                    for m in raw[t]} for t in raw if t in tasks}
+
+    cfg, params = sim_llm()
+    out: dict = {}
+    for name in tasks:
+        out[name] = {"sequential": [], "parallel": []}
+        for mode in ("sequential", "parallel"):
+            for run in range(runs_per_mode):
+                r = run_task(cfg, params, TASKS[name], mode=mode,
+                             n_agents=n_agents, seed=run)
+                out[name][mode].append(r)
+    cache_f.write_text(json.dumps(
+        {t: {m: [asdict(r) for r in rs] for m, rs in ms.items()}
+         for t, ms in out.items()}))
+    return out
+
+
+def mean(xs):
+    return statistics.fmean(xs) if xs else float("nan")
+
+
+def stdev(xs):
+    return statistics.stdev(xs) if len(xs) > 1 else 0.0
+
+
+def pct_delta(seq: float, par: float) -> float:
+    return 100.0 * (par - seq) / seq if seq else float("nan")
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

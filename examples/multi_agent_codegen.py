@@ -1,0 +1,59 @@
+"""End-to-end driver: parallel vs sequential multi-agent code generation.
+
+Runs the paper's experiment on one task with a real (tiny) decoder serving
+stack: batched decode, CRDT claims, observation-driven invalidation,
+convergence check — then prints the seq/par comparison.
+
+    PYTHONPATH=src python examples/multi_agent_codegen.py [task] [n_agents]
+"""
+import sys
+
+from repro.agents.orchestrator import make_sim_llm, run_task
+from repro.agents.tasks import TASKS
+
+task_name = sys.argv[1] if len(sys.argv) > 1 else "dashboard"
+n_agents = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+
+cfg, params = make_sim_llm()
+task = TASKS[task_name]
+print(f"task={task.name} coupling={task.coupling} todos={task.n_todos} "
+      f"volume_inflation={task.par_inflation}x")
+
+results = {}
+for mode in ("sequential", "parallel"):
+    r = run_task(cfg, params, task, mode=mode, n_agents=n_agents, seed=0)
+    results[mode] = r
+    print(f"\n{mode:>10s}: steps={r.steps}  wall={r.wall_s:.2f}s  "
+          f"tokens={r.gen_tokens}  replayed={r.replay_tokens}")
+    print(f"{'':>10s}  invalidations={r.invalidations}  "
+          f"claim_collisions={r.claim_collisions}  "
+          f"semantic_conflicts={r.semantic_conflicts}")
+    print(f"{'':>10s}  converged={r.converged}  digest={r.digest}")
+
+s, p = results["sequential"], results["parallel"]
+print(f"\nraw response (decode steps): {s.steps} -> {p.steps} "
+      f"({100 * (p.steps - s.steps) / s.steps:+.1f}%)")
+print(f"normalized (steps / 1k tokens): {s.steps_per_1k_tokens:.0f} -> "
+      f"{p.steps_per_1k_tokens:.0f} "
+      f"({100 * (p.steps_per_1k_tokens - s.steps_per_1k_tokens) / s.steps_per_1k_tokens:+.1f}%)")
+print("(paper's finding: raw time can invert on coupled tasks while "
+      "normalized time still favors parallel)")
+
+# Evaluator pass (paper §4.3): detect semantic conflicts the CRDT cannot
+# see, auto-reconcile duplicates with rename patches (themselves CRDT edits).
+from repro.agents import evaluator
+from repro.agents.orchestrator import make_sim_llm as _m  # noqa: E402
+from repro.core import doc as doc_mod
+import jax.numpy as jnp
+
+# Rebuild the merged doc from the parallel run's digest path: re-run briefly
+# to get a document object for the demo.
+r = run_task(cfg, params, task, mode="parallel", n_agents=n_agents, seed=0)
+# (run_task returns metrics; for the demo, reconstruct a conflicted doc)
+demo = doc_mod.empty(4, 32)
+demo = doc_mod.append(demo, 0, jnp.asarray([5, 7, 0, 0]), 2)   # declares sym 5
+demo = doc_mod.append(demo, 1, jnp.asarray([5, 9, 0, 0]), 2)   # duplicate!
+fixed, report = evaluator.reconcile(demo)
+print(f"\nevaluator: {len(report.conflicts)} conflict(s), "
+      f"{report.fixed} auto-fixed, {len(report.flagged)} flagged")
+print(f"scores: {evaluator.score(fixed)}")

@@ -1,0 +1,2 @@
+"""repro — CodeCRDT observation-driven coordination framework on JAX/TPU."""
+__version__ = "1.0.0"

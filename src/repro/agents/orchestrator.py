@@ -1,0 +1,379 @@
+"""Multi-agent code-generation orchestrator (the paper's experiment loop).
+
+Agents are rows of one batched decode engine — the TPU-native analogue of
+"N concurrent LLM API calls".  Coordination is exclusively through CRDT
+state (TodoBoard + per-agent SlotDoc replicas, merged through the join):
+no message passing, no scheduler.  The loop implements the paper's four
+observation-driven behaviours:
+
+  completed-work detection   claims skip DONE TODOs (board observation)
+  context integration        prompts embed the *current* content of read slots
+  naming alignment           (same mechanism — context replay of neighbors)
+  conflict avoidance         optimistic claim → LWW arbitration → losers re-pick
+
+Invalidations: if a read slot's version advances mid-generation, the agent
+re-contextualizes (replays a fresh prompt) — the measured source of the
+coupled-task slowdown (paper §4.2, Table 7).
+
+Sequential mode is the same machinery with one agent.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agents.tasks import TaskSpec
+from repro.core import doc as doc_mod
+from repro.core import merge as merge_mod
+from repro.core import observe, protocol, todo
+from repro.core.clock import Lamport
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving import engine as engine_mod
+
+IDLE, PREFILL, GEN, HALT = "idle", "prefill", "gen", "halt"
+OBSERVE_EVERY = 8          # steps between observation sweeps
+MAX_REPREFILL = 2          # bounded re-contextualizations per TODO
+SLOT_CAP = 1024
+
+
+@dataclass
+class AgentState:
+    row: int                            # engine batch row
+    client: int                         # CRDT client id (>=1)
+    phase: str = IDLE
+    todo_id: int = -1
+    queue: list = field(default_factory=list)     # prompt tokens to replay
+    tokens_left: int = 0
+    reprefills: int = 0
+    snapshot: Optional[observe.Snapshot] = None
+    lamport: Lamport = None
+
+
+@dataclass
+class RunResult:
+    task: str
+    mode: str
+    n_agents: int
+    wall_s: float
+    gen_tokens: int
+    replay_tokens: int
+    steps: int
+    invalidations: int
+    claim_collisions: int
+    observation_events: int
+    semantic_conflicts: int
+    declared_symbols: int
+    converged: bool
+    digest: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.gen_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def s_per_1k_tokens(self) -> float:
+        return 1000.0 * self.wall_s / max(self.gen_tokens, 1)
+
+    # Response time in decode-step units: on the serving target (TPU v5e)
+    # decode latency is weight-streaming-bound and batch-invariant for B≤8,
+    # so steps ≡ latency; CPU wall-clock scales with batch (no idle lanes)
+    # and is reported as the secondary column.  See EXPERIMENTS.md §Agents.
+    @property
+    def response_steps(self) -> int:
+        return self.steps
+
+    @property
+    def steps_per_1k_tokens(self) -> float:
+        return 1000.0 * self.steps / max(self.gen_tokens, 1)
+
+
+# ---------------------------------------------------------------------------
+# Content model: prompts + semantic-conflict detection
+# ---------------------------------------------------------------------------
+
+def _prompt_tokens(task: TaskSpec, todo_id: int, docs, vocab: int,
+                   rng: np.random.Generator) -> list[int]:
+    """Deterministic task/TODO header + current content of read slots."""
+    base = np.random.default_rng(hash((task.name, todo_id)) % (2**31))
+    toks = list(2 + base.integers(0, vocab - 2, size=task.prompt_tokens))
+    merged = merge_mod.fold_join(docs)
+    lengths = np.asarray(merged.length)
+    tokens = np.asarray(merged.tokens)
+    for r in task.reads.get(todo_id, ()):
+        n = int(lengths[r])
+        if n > 0:     # context integration: read the neighbor's latest code
+            tail = tokens[r, max(0, n - task.read_prompt_tokens): n]
+            toks.extend(int(t) for t in tail)
+    return toks
+
+
+def count_conflicts(merged: doc_mod.SlotDoc) -> tuple[int, int]:
+    """Semantic conflicts: the same symbol *declared* in two different slots.
+
+    Declaration tokens are tokens ≡ 5 (mod 13); the symbol is tok mod 64 —
+    a fixed projection of real generated content into a symbol namespace
+    (duplicate declarations are exactly the paper's dominant conflict class).
+    Returns (conflicts, total_declarations).
+    """
+    lengths = np.asarray(merged.length)
+    tokens = np.asarray(merged.tokens)
+    declared: dict[int, int] = {}
+    conflicts = 0
+    total = 0
+    for s in range(merged.num_slots):
+        for t in tokens[s, : lengths[s]]:
+            t = int(t)
+            if t % 13 == 5:
+                total += 1
+                sym = t % 64
+                if sym in declared and declared[sym] != s:
+                    conflicts += 1
+                else:
+                    declared.setdefault(sym, s)
+    return conflicts, total
+
+
+# ---------------------------------------------------------------------------
+# The run loop
+# ---------------------------------------------------------------------------
+
+def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
+             n_agents: int = 4, seed: int = 0, max_len: int = 1024,
+             time_fn=time.perf_counter) -> RunResult:
+    assert mode in ("sequential", "parallel")
+    if mode == "sequential":
+        n_agents = 1
+    rng = np.random.default_rng(seed)
+    k_todos = task.n_todos
+    vocab = cfg.vocab_size
+
+    # Shared coordination state (board) + per-agent document replicas.
+    board = todo.empty(k_todos)
+    out_lam = Lamport.create(client=100)
+    deps_np = np.zeros((k_todos, k_todos), bool)
+    for k, ds in task.deps.items():
+        for d in ds:
+            deps_np[k, d] = True
+
+    docs = [doc_mod.empty(k_todos, SLOT_CAP) for _ in range(n_agents)]
+    agents = [AgentState(row=i, client=i + 1, lamport=Lamport.create(i + 1))
+              for i in range(n_agents)]
+
+    # Jit every hot helper once: eager lax.fori_loop (claims) re-traces and
+    # re-compiles per call — at one claim round per step that dominated wall
+    # time (~0.5 s/step) and, worse, contaminated the seq-vs-par comparison.
+    step_fn = jax.jit(engine_mod.make_serve_step(cfg))
+    claims_fn = jax.jit(protocol.concurrent_claims)
+    fold_fn = jax.jit(merge_mod.fold_join)
+    ready_fn = jax.jit(todo.ready_mask)
+    all_done_fn = jax.jit(todo.all_done)
+    complete_fn = jax.jit(todo.complete)
+    append_fn = jax.jit(doc_mod.append_token)
+    append_run_fn = jax.jit(doc_mod.append)
+    digest_fn = jax.jit(doc_mod.digest)
+    cache = lm.init_cache(cfg, n_agents, max_len)
+    pos = jnp.zeros((n_agents,), jnp.int32)
+    token = jnp.ones((n_agents,), jnp.int32)
+    key = jax.random.PRNGKey(seed)
+
+    # Warmup: compile every helper shape outside the timed region (the claim
+    # helper has one shape per idle-agent count).
+    _ = step_fn(params, cache, token, pos, key)
+    warm_board = todo.post(todo.empty(k_todos), 0,
+                           jnp.zeros((k_todos,), bool), jnp.int32(1),
+                           jnp.int32(100))
+    for m in range(1, n_agents + 1):
+        _ = claims_fn(warm_board, jnp.arange(1, m + 1, dtype=jnp.int32),
+                      jnp.full((m,), 10, jnp.int32), jnp.int32(0))
+    _ = complete_fn(warm_board, jnp.int32(0), jnp.int32(1), jnp.int32(5))
+    _ = fold_fn(docs)
+    warm = append_run_fn(docs[0], jnp.int32(0),
+                         jnp.zeros((128,), jnp.int32), jnp.int32(0))
+    jax.block_until_ready(warm.length)
+
+    t0 = time_fn()
+
+    # --- Outliner: generates the skeleton, posts TODOs (both modes pay it).
+    for _ in range(6 * k_todos // max(n_agents, 1) + 4):
+        key, sub = jax.random.split(key)
+        token, cache, pos = step_fn(params, cache, token, pos, sub)
+    for k in range(k_todos):
+        out_lam = out_lam.tick()
+        board = todo.post(board, k, jnp.asarray(deps_np[k]), out_lam.time,
+                          out_lam.client)
+    pos = jnp.zeros((n_agents,), jnp.int32)
+
+    gen_budget = int(round(task.base_tokens
+                           * (task.par_inflation if mode == "parallel"
+                              else 1.0)))
+    stats = dict(gen=0, replay=0, steps=0, inval=0, collide=0, observe=0)
+    merge_perm_seed = 0
+
+    # Host-side mirrors: CRDT appends are buffered per agent and flushed at
+    # observation boundaries (one jitted run-append per agent per sweep) so
+    # the steady-state step costs exactly one jitted decode dispatch — the
+    # LLM must dominate wall time for the seq/par comparison to be honest.
+    host_len = np.zeros((k_todos,), np.int64)          # merged view lengths
+    buffers: list[list[int]] = [[] for _ in range(n_agents)]
+    buf_slot = [-1] * n_agents
+    done_count = 0
+    board_dirty = True
+    run_buf_cap = 128
+
+    def flush_agent(i: int):
+        nonlocal docs
+        if buf_slot[i] < 0 or not buffers[i]:
+            return
+        toks = buffers[i]
+        for off in range(0, len(toks), run_buf_cap):
+            chunk = toks[off: off + run_buf_cap]
+            arr = np.zeros((run_buf_cap,), np.int32)
+            arr[: len(chunk)] = chunk
+            docs[i] = append_run_fn(docs[i], jnp.int32(buf_slot[i]),
+                                    jnp.asarray(arr), jnp.int32(len(chunk)))
+        host_len[buf_slot[i]] += len(toks)
+        buffers[i] = []
+
+    def sync_replicas():
+        nonlocal docs, merge_perm_seed
+        for i in range(n_agents):
+            flush_agent(i)
+        perm = np.random.default_rng(merge_perm_seed).permutation(n_agents)
+        merge_perm_seed += 1
+        m = fold_fn([docs[i] for i in perm])
+        docs = [m for _ in range(n_agents)]
+
+    snap_len = {a.client: host_len.copy() for a in agents}
+
+    while True:
+        # -- claims: all idle agents observe the SAME board snapshot --------
+        idle = [a for a in agents if a.phase == IDLE]
+        if idle and board_dirty:
+            clients = jnp.asarray([a.client for a in idle], jnp.int32)
+            clocks = jnp.asarray(
+                [int(a.lamport.observe(board.max_clock()).time)
+                 for a in idle], jnp.int32)
+            board, ks, won = claims_fn(
+                board, clients, clocks, jnp.int32(stats["steps"]))
+            any_won = False
+            for a, k, w, c in zip(idle, np.asarray(ks), np.asarray(won),
+                                  np.asarray(clocks)):
+                a.lamport = a.lamport._replace(time=jnp.int32(int(c)))
+                if bool(w):
+                    any_won = True
+                    a.todo_id = int(k)
+                    a.phase = PREFILL
+                    a.reprefills = 0
+                    a.queue = _prompt_tokens(task, a.todo_id, docs, vocab, rng)
+                    a.tokens_left = gen_budget
+                    snap_len[a.client] = host_len.copy()
+                    buf_slot[a.row] = a.todo_id
+                    pos = pos.at[a.row].set(0)
+                else:
+                    stats["collide"] += 1
+            if not any_won:
+                board_dirty = False      # wait for a completion to retry
+
+        if all(a.phase == HALT for a in agents):
+            break
+        if done_count >= k_todos and all(
+                a.phase in (IDLE, HALT) for a in agents):
+            break
+        if not any(a.phase in (PREFILL, GEN) for a in agents):
+            # Deadlock guard: nothing runnable and nothing claimable yet.
+            if done_count >= k_todos:
+                break
+            board_dirty = True
+            stats["steps"] += 1
+            if stats["steps"] > 20_000:
+                break
+            continue
+
+        # -- one batched decode step ----------------------------------------
+        forced = np.array(token)      # writable host copy
+        for a in agents:
+            if a.phase == PREFILL and a.queue:
+                forced[a.row] = a.queue.pop(0)
+                stats["replay"] += 1
+            elif a.phase == PREFILL:
+                a.phase = GEN
+        token = jnp.asarray(forced)
+        key, sub = jax.random.split(key)
+        token, cache, pos = step_fn(params, cache, token, pos, sub)
+        stats["steps"] += 1
+        sampled = np.array(token)
+
+        # -- generation & completion ----------------------------------------
+        for a in agents:
+            if a.phase != GEN:
+                continue
+            buffers[a.row].append(int(sampled[a.row]) % vocab)
+            stats["gen"] += 1
+            a.tokens_left -= 1
+            if a.tokens_left <= 0:
+                flush_agent(a.row)
+                a.lamport = a.lamport.observe(board.max_clock())
+                board = complete_fn(board, jnp.int32(a.todo_id),
+                                    jnp.int32(a.client), a.lamport.time)
+                done_count += 1
+                board_dirty = True
+                a.phase = IDLE
+                buf_slot[a.row] = -1
+                a.todo_id = -1
+                sync_replicas()
+
+        # -- observation sweep (paper §4.2) ----------------------------------
+        if stats["steps"] % OBSERVE_EVERY == 0:
+            sync_replicas()
+            for a in agents:
+                if a.phase not in (GEN, PREFILL):
+                    continue
+                delta = host_len - snap_len[a.client]
+                stats["observe"] += int(delta.clip(0).sum())
+                reads = task.reads.get(a.todo_id, ())
+                if any(delta[r] > 0 for r in reads):
+                    if a.reprefills < MAX_REPREFILL:
+                        a.reprefills += 1
+                        stats["inval"] += 1
+                        a.queue = _prompt_tokens(task, a.todo_id, docs,
+                                                 vocab, rng)
+                        a.phase = PREFILL
+                        pos = pos.at[a.row].set(0)
+                    snap_len[a.client] = host_len.copy()
+
+        if stats["steps"] > 20_000:   # safety valve
+            for a in agents:
+                a.phase = HALT
+            break
+
+    sync_replicas()
+    wall = time_fn() - t0
+
+    final = fold_fn(docs)
+    digests = [int(digest_fn(d)) for d in docs]
+    conflicts, total_decl = count_conflicts(final)
+    return RunResult(
+        task=task.name, mode=mode, n_agents=n_agents, wall_s=wall,
+        gen_tokens=stats["gen"], replay_tokens=stats["replay"],
+        steps=stats["steps"], invalidations=stats["inval"],
+        claim_collisions=stats["collide"],
+        observation_events=stats["observe"],
+        semantic_conflicts=conflicts, declared_symbols=total_decl,
+        converged=all(d == digests[0] for d in digests),
+        digest=digests[0],
+    )
+
+
+def make_sim_llm(seed: int = 0):
+    """Tiny but real decoder used as the agents' LLM (CPU-friendly)."""
+    import repro.configs as configs
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=64,
+                          vocab=512).replace(num_layers=2)
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params

@@ -1,0 +1,41 @@
+"""Assigned input-shape sets and (arch × shape) applicability.
+
+Four LM shapes (seq_len × global_batch):
+  train_4k     4_096 × 256   -> lowers train_step
+  prefill_32k  32_768 × 32   -> lowers prefill (inference prompt pass)
+  decode_32k   32_768 × 128  -> lowers serve_step (1 new token, 32k cache)
+  long_500k    524_288 × 1   -> serve_step; ONLY sub-quadratic archs
+
+Skips (DESIGN.md §4): long_500k is skipped for pure full-attention archs
+(granite, olmo, command-r+, starcoder2, both deepseeks, paligemma) and for
+the enc-dec audio arch (whisper) — recorded as N/A in the roofline table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(arch_cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k":
+        if arch_cfg.is_encdec:
+            return False, "enc-dec audio arch: 500k-token decode undefined"
+        if not arch_cfg.sub_quadratic:
+            return False, "pure full-attention arch: needs sub-quadratic attention"
+    return True, ""

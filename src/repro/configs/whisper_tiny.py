@@ -1,0 +1,16 @@
+"""whisper-tiny [audio] — enc-dec; conv frontend STUB (arXiv:2212.04356).
+
+input_specs() provides 1500 precomputed frame embeddings (the conv stem is
+out of assignment scope); 4-layer bidirectional encoder + 4-layer decoder
+with cross-attention.
+"""
+from repro.models.config import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="audio",
+    num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+    d_ff=1536, vocab_size=51865,
+    block_pattern=("xattn",),
+    norm_type="layernorm", use_bias=True, ffn_activation="gelu_mlp",
+    encoder=EncoderConfig(num_layers=4, num_heads=6, seq_len=1500),
+)

@@ -1,0 +1,18 @@
+"""repro.core — CodeCRDT's contribution as composable JAX modules.
+
+Observation-driven coordination over join-semilattice (CRDT) state:
+
+  clock     Lamport clocks, packed (clock, client) keys, version vectors
+  lww       LWW register banks (Y.Map analogue) — the TODO board substrate
+  gset      G-counter / G-set / per-client append-only logs (Y.Array analogue)
+  rga       sequence CRDT with deterministic materialization (Y.Text analogue)
+  doc       SlotDoc — fixed-shape production code document
+  todo      TodoBoard + status/dependency semantics
+  protocol  optimistic write-verify claim protocol (at-most-one-winner)
+  observe   version-vector subscriptions, invalidation signals
+  merge     replica joins: local fold, all-gather, and O(S) pmax collectives
+"""
+from repro.core import clock, doc, gset, lww, merge, observe, protocol, rga, todo
+
+__all__ = ["clock", "doc", "gset", "lww", "merge", "observe", "protocol",
+           "rga", "todo"]

@@ -1,0 +1,69 @@
+"""Lamport clocks and version vectors.
+
+Clients (agents / workers / pods) are identified by small positive integers
+``1 .. MAX_CLIENTS-1``; client 0 is reserved for "unset".  Lamport clocks are
+positive int32 values bounded by ``MAX_CLOCK`` so that the pair
+``(clock, client)`` packs losslessly into a single int32 key — this is what
+lets the whole coordination state merge with plain ``lax.pmax`` collectives
+(see core/merge.py and DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+CLIENT_BITS = 10
+MAX_CLIENTS = 1 << CLIENT_BITS          # 1024
+MAX_CLOCK = (1 << 20) - 1               # packed key stays < 2^30 (int32-safe)
+
+
+def pack_key(clock: jax.Array, client: jax.Array) -> jax.Array:
+    """Pack (clock, client) into one int32, preserving lexicographic order."""
+    return clock.astype(jnp.int32) * MAX_CLIENTS + client.astype(jnp.int32)
+
+
+def unpack_key(key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return key // MAX_CLIENTS, key % MAX_CLIENTS
+
+
+class Lamport(NamedTuple):
+    """Per-client Lamport clock."""
+
+    time: jax.Array      # i32 scalar
+    client: jax.Array    # i32 scalar, in [1, MAX_CLIENTS)
+
+    @classmethod
+    def create(cls, client: int) -> "Lamport":
+        return cls(time=jnp.int32(0), client=jnp.int32(client))
+
+    def tick(self) -> "Lamport":
+        return self._replace(time=self.time + 1)
+
+    def observe(self, other_time: jax.Array) -> "Lamport":
+        """Lamport receive rule: local = max(local, observed) + 1."""
+        return self._replace(time=jnp.maximum(self.time, other_time) + 1)
+
+    @property
+    def key(self) -> jax.Array:
+        return pack_key(self.time, self.client)
+
+
+class VersionVector(NamedTuple):
+    """How many ops of each client this replica has observed."""
+
+    counts: jax.Array    # i32[MAX? C]
+
+    @classmethod
+    def zeros(cls, num_clients: int) -> "VersionVector":
+        return cls(counts=jnp.zeros((num_clients,), jnp.int32))
+
+    def join(self, other: "VersionVector") -> "VersionVector":
+        return VersionVector(jnp.maximum(self.counts, other.counts))
+
+    def dominates(self, other: "VersionVector") -> jax.Array:
+        return jnp.all(self.counts >= other.counts)
+
+    def advance(self, client: jax.Array, count: jax.Array) -> "VersionVector":
+        return VersionVector(self.counts.at[client].max(count))

@@ -1,0 +1,131 @@
+"""SlotDoc: the production-path shared code document (DESIGN.md §2).
+
+The outliner's skeleton fixes an ordered set of K regions (one per TODO).
+After a TODO is claimed, exactly one agent appends tokens into its region —
+so each region is a single-writer append-only buffer and the document is the
+in-order concatenation of regions.  The join is exact and pmax-compatible
+(lengths: max; tokens: identical where observed).  Character-level
+convergence is therefore structural, matching the paper's "0% character-level
+conflicts"; *semantic* conflicts (duplicate declarations across regions) can
+and do still occur and are detected by the evaluator agent.
+
+The general concurrent-editing path (arbitrary interleaved inserts) is
+core/rga.py; SlotDoc is the fixed-shape fast path that serving fuses with
+decode steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotDoc(NamedTuple):
+    tokens: jax.Array    # i32[K, S]
+    length: jax.Array    # i32[K]   monotone, owner-only writes
+    owner: jax.Array     # i32[K]   informational (set by claim winner)
+
+    @property
+    def num_slots(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def slot_capacity(self) -> int:
+        return self.tokens.shape[1]
+
+    @property
+    def version(self) -> jax.Array:
+        """Per-slot content version — observation-driven invalidation key."""
+        return self.length
+
+
+def empty(num_slots: int, slot_capacity: int) -> SlotDoc:
+    return SlotDoc(
+        tokens=jnp.zeros((num_slots, slot_capacity), jnp.int32),
+        length=jnp.zeros((num_slots,), jnp.int32),
+        owner=jnp.zeros((num_slots,), jnp.int32),
+    )
+
+
+def set_owner(doc: SlotDoc, slot: jax.Array, agent: jax.Array) -> SlotDoc:
+    return doc._replace(owner=doc.owner.at[slot].max(jnp.asarray(agent, jnp.int32)))
+
+
+def append(doc: SlotDoc, slot: jax.Array, tokens: jax.Array,
+           length: jax.Array) -> SlotDoc:
+    """Owner appends ``length`` tokens (from a fixed-size staging buffer)."""
+    run_cap = tokens.shape[0]
+    pos0 = doc.length[slot]
+    room = jnp.clip(doc.slot_capacity - pos0, 0, run_cap)
+    n = jnp.minimum(jnp.asarray(length, jnp.int32), room)
+    j = jnp.arange(run_cap, dtype=jnp.int32)
+    # Masked lanes go out of bounds and are dropped (no duplicate indices).
+    pos = jnp.where(j < n, pos0 + j, doc.slot_capacity)
+    new_tokens = doc.tokens.at[slot, pos].set(
+        jnp.asarray(tokens, jnp.int32), mode="drop")
+    return doc._replace(tokens=new_tokens, length=doc.length.at[slot].add(n))
+
+
+def append_token(doc: SlotDoc, slot: jax.Array, token: jax.Array) -> SlotDoc:
+    """One-token append (the per-decode-step fused path)."""
+    pos = jnp.minimum(doc.length[slot], doc.slot_capacity - 1)
+    ok = doc.length[slot] < doc.slot_capacity
+    return doc._replace(
+        tokens=doc.tokens.at[slot, pos].set(
+            jnp.where(ok, jnp.asarray(token, jnp.int32), doc.tokens[slot, pos])),
+        length=doc.length.at[slot].add(jnp.where(ok, 1, 0)),
+    )
+
+
+def append_token_batch(doc: SlotDoc, slots: jax.Array, tokens: jax.Array,
+                       active: jax.Array) -> SlotDoc:
+    """N agents each append one token to their own slot (vectorized).
+
+    ``slots`` i32[N] must be distinct where ``active`` — guaranteed by the
+    claim protocol's at-most-one-winner invariant.
+    """
+    pos = jnp.minimum(doc.length[slots], doc.slot_capacity - 1)
+    ok = active & (doc.length[slots] < doc.slot_capacity)
+    cur = doc.tokens[slots, pos]
+    return doc._replace(
+        tokens=doc.tokens.at[slots, pos].set(
+            jnp.where(ok, jnp.asarray(tokens, jnp.int32), cur)),
+        length=doc.length.at[slots].add(jnp.where(ok, 1, 0)),
+    )
+
+
+def valid_mask(doc: SlotDoc) -> jax.Array:
+    idx = jnp.arange(doc.slot_capacity, dtype=jnp.int32)[None, :]
+    return idx < doc.length[:, None]
+
+
+def merge(a: SlotDoc, b: SlotDoc) -> SlotDoc:
+    mine = valid_mask(a)
+    return SlotDoc(
+        tokens=jnp.where(mine, a.tokens, b.tokens),
+        length=jnp.maximum(a.length, b.length),
+        owner=jnp.maximum(a.owner, b.owner),
+    )
+
+
+def render(doc: SlotDoc) -> tuple[jax.Array, jax.Array]:
+    """Flatten to (tokens i32[K*S], total_len): in-slot-order concatenation."""
+    K, S = doc.tokens.shape
+    mask = valid_mask(doc).reshape(-1)
+    flat = doc.tokens.reshape(-1)
+    total = jnp.sum(mask.astype(jnp.int32))
+    # Stable left-pack: valid entries first, original order preserved.
+    order = jnp.argsort(~mask, stable=True)
+    out = jnp.where(jnp.arange(K * S) < total, flat[order], -1)
+    return out, total
+
+
+def digest(doc: SlotDoc) -> jax.Array:
+    """Order-sensitive content hash — replicas must agree post-merge (RQ3)."""
+    mask = valid_mask(doc)
+    K, S = doc.tokens.shape
+    idx = jnp.arange(K * S, dtype=jnp.uint32).reshape(K, S)
+    h = jnp.where(mask, doc.tokens.astype(jnp.uint32), jnp.uint32(0))
+    mixed = (h * jnp.uint32(2654435761) + idx * jnp.uint32(40503)) % jnp.uint32(2**31 - 1)
+    return jnp.sum(jnp.where(mask, mixed, jnp.uint32(0)), dtype=jnp.uint32)

@@ -1,0 +1,102 @@
+"""Grow-only CRDTs: counters, flag sets, and per-client append-only logs.
+
+All three are join-semilattices whose join is an elementwise max (with
+masking), which means they merge across replicas with a bare ``lax.pmax``
+collective — see core/merge.py.
+
+``GLog`` is the array-backed analogue of Yjs Y.Array used as an audit trail:
+each client owns a row and only ever appends to it; rows are immutable
+prefixes, so the entry at (client, i) is identical on every replica that has
+observed it and the join is exact.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GCounter(NamedTuple):
+    counts: jax.Array    # i32[C] — per-client monotone count
+
+    @classmethod
+    def zeros(cls, num_clients: int) -> "GCounter":
+        return cls(jnp.zeros((num_clients,), jnp.int32))
+
+    def increment(self, client: jax.Array, amount: jax.Array = 1) -> "GCounter":
+        return GCounter(self.counts.at[client].add(jnp.int32(amount)))
+
+    def bump_to(self, client: jax.Array, value: jax.Array) -> "GCounter":
+        """Monotone set (e.g. heartbeat timestamps)."""
+        return GCounter(self.counts.at[client].max(jnp.int32(value)))
+
+    def join(self, other: "GCounter") -> "GCounter":
+        return GCounter(jnp.maximum(self.counts, other.counts))
+
+    @property
+    def value(self) -> jax.Array:
+        return jnp.sum(self.counts)
+
+
+class GSet(NamedTuple):
+    """Grow-only flag set over a fixed universe of N elements."""
+
+    member: jax.Array    # bool[N]
+
+    @classmethod
+    def empty(cls, universe: int) -> "GSet":
+        return cls(jnp.zeros((universe,), jnp.bool_))
+
+    def add(self, idx: jax.Array) -> "GSet":
+        return GSet(self.member.at[idx].set(True))
+
+    def add_mask(self, mask: jax.Array) -> "GSet":
+        return GSet(self.member | mask)
+
+    def join(self, other: "GSet") -> "GSet":
+        return GSet(self.member | other.member)
+
+
+class GLog(NamedTuple):
+    """Per-client append-only log with arbitrary int payload fields."""
+
+    count: jax.Array          # i32[C] entries valid at row c are [0, count[c])
+    fields: dict[str, Any]    # field -> i32/f32 [C, L, ...]
+
+    @classmethod
+    def empty(cls, num_clients: int, capacity: int,
+              field_spec: dict[str, tuple[tuple[int, ...], Any]]) -> "GLog":
+        fields = {
+            name: jnp.zeros((num_clients, capacity, *shape), dtype)
+            for name, (shape, dtype) in field_spec.items()
+        }
+        return cls(count=jnp.zeros((num_clients,), jnp.int32), fields=fields)
+
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.fields.values())).shape[1]
+
+    def append(self, client: jax.Array, **values: jax.Array) -> "GLog":
+        """Append one entry to ``client``'s own row (drops silently if full)."""
+        pos = jnp.minimum(self.count[client], self.capacity - 1)
+        ok = self.count[client] < self.capacity
+        fields = {}
+        for name, arr in self.fields.items():
+            val = jnp.asarray(values[name], arr.dtype)
+            fields[name] = arr.at[client, pos].set(jnp.where(ok, val, arr[client, pos]))
+        return GLog(count=self.count.at[client].add(jnp.where(ok, 1, 0)), fields=fields)
+
+    def valid_mask(self) -> jax.Array:
+        """bool[C, L] — which slots hold observed entries."""
+        idx = jnp.arange(self.capacity, dtype=jnp.int32)[None, :]
+        return idx < self.count[:, None]
+
+    def join(self, other: "GLog") -> "GLog":
+        mine = self.valid_mask()
+        fields = {}
+        for name, arr in self.fields.items():
+            ob = other.fields[name]
+            m = mine.reshape(mine.shape + (1,) * (arr.ndim - 2))
+            fields[name] = jnp.where(m, arr, ob)
+        return GLog(count=jnp.maximum(self.count, other.count), fields=fields)

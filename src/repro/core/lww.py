@@ -1,0 +1,108 @@
+"""Last-writer-wins register bank — the array-backed analogue of Yjs Y.Map.
+
+A bank holds ``K`` registers.  Each register carries a Lamport ``(clock,
+client)`` pair plus an arbitrary pytree of int32/float32 payload fields, all
+shaped ``[K, ...]``.  The merge is the join of the total order on
+``(clock, client)`` — a join-semilattice, hence strong eventual consistency
+(Shapiro et al. 2011): commutative, associative, idempotent.  Ties on
+``(clock, client)`` are impossible between well-behaved clients (a client
+never reuses a clock), which makes the winner's payload well-defined.
+
+Hot-path merge has a Pallas kernel (repro/kernels/lww_merge.py); this module
+is the pure-jnp semantics used everywhere else.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clock import pack_key
+
+
+class LWWBank(NamedTuple):
+    clock: jax.Array     # i32[K]   0 = never written
+    client: jax.Array    # i32[K]   0 = never written
+    payload: Any         # pytree of arrays, each [K, ...]
+
+    @property
+    def key(self) -> jax.Array:
+        return pack_key(self.clock, self.client)
+
+    @property
+    def written(self) -> jax.Array:
+        return self.clock > 0
+
+
+def empty(num_keys: int, payload_spec: dict[str, tuple[tuple[int, ...], Any]]) -> LWWBank:
+    """payload_spec: field -> (trailing_shape, dtype)."""
+    payload = {
+        name: jnp.zeros((num_keys, *shape), dtype)
+        for name, (shape, dtype) in payload_spec.items()
+    }
+    return LWWBank(
+        clock=jnp.zeros((num_keys,), jnp.int32),
+        client=jnp.zeros((num_keys,), jnp.int32),
+        payload=payload,
+    )
+
+
+def write(bank: LWWBank, key: jax.Array, clock: jax.Array, client: jax.Array,
+          **fields: jax.Array) -> LWWBank:
+    """Local write: set register ``key`` if (clock, client) beats current.
+
+    Well-behaved writers tick their Lamport clock past anything they observed,
+    so local writes normally win; the guard keeps writes monotone even for
+    stale writers (their write is simply dropped — LWW semantics).
+    """
+    new_key = pack_key(clock, client)
+    wins = new_key > bank.key[key]
+    new_payload = dict(bank.payload)
+    for name, value in fields.items():
+        cur = bank.payload[name]
+        new_payload[name] = cur.at[key].set(
+            jnp.where(wins, jnp.asarray(value, cur.dtype), cur[key]))
+    return LWWBank(
+        clock=bank.clock.at[key].set(jnp.where(wins, clock, bank.clock[key])),
+        client=bank.client.at[key].set(jnp.where(wins, client, bank.client[key])),
+        payload=new_payload,
+    )
+
+
+def write_masked(bank: LWWBank, mask: jax.Array, clock: jax.Array,
+                 client: jax.Array, **fields: jax.Array) -> LWWBank:
+    """Vectorized write to every register where ``mask`` (bool[K]) holds."""
+    new_key = pack_key(jnp.broadcast_to(clock, mask.shape),
+                       jnp.broadcast_to(client, mask.shape))
+    wins = mask & (new_key > bank.key)
+    new_payload = dict(bank.payload)
+    for name, value in fields.items():
+        cur = bank.payload[name]
+        val = jnp.broadcast_to(jnp.asarray(value, cur.dtype), cur.shape)
+        w = wins.reshape(wins.shape + (1,) * (cur.ndim - 1))
+        new_payload[name] = jnp.where(w, val, cur)
+    return LWWBank(
+        clock=jnp.where(wins, clock, bank.clock),
+        client=jnp.where(wins, client, bank.client),
+        payload=new_payload,
+    )
+
+
+def merge(a: LWWBank, b: LWWBank) -> LWWBank:
+    """Join: per-register lexicographic max of (clock, client); winner's payload."""
+    b_wins = b.key > a.key
+    payload = {}
+    for name, av in a.payload.items():
+        bv = b.payload[name]
+        w = b_wins.reshape(b_wins.shape + (1,) * (av.ndim - 1))
+        payload[name] = jnp.where(w, bv, av)
+    return LWWBank(
+        clock=jnp.where(b_wins, b.clock, a.clock),
+        client=jnp.where(b_wins, b.client, a.client),
+        payload=payload,
+    )
+
+
+def read(bank: LWWBank, field: str, key: jax.Array) -> jax.Array:
+    return bank.payload[field][key]

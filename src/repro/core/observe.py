@@ -1,0 +1,65 @@
+"""Observation-driven adaptation (paper §4.2).
+
+An agent's "subscription" to CRDT events is, on TPU, a version-vector diff:
+between decode steps the agent compares the merged state's per-slot versions
+against its own snapshot.  Four behaviours from the paper map to:
+
+  * completed-work detection — TODO status flips observed via the board,
+  * context integration      — slot version advanced => new content to read,
+  * naming alignment         — context re-read includes other slots' tokens,
+  * conflict avoidance       — claim protocol (losers back off and re-pick).
+
+``invalidations`` implements the context-invalidation signal that drives the
+paper's coupled-task slowdown: if a dependency's content changed after the
+agent snapshotted it, the agent must re-contextualize (re-prefill).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.doc import SlotDoc
+from repro.core.rga import RGA
+
+
+class Snapshot(NamedTuple):
+    """What an agent last observed, per document slot."""
+
+    versions: jax.Array    # i32[K]
+
+
+def snapshot(doc: SlotDoc) -> Snapshot:
+    return Snapshot(versions=doc.version)
+
+
+def changed_mask(snap: Snapshot, doc: SlotDoc) -> jax.Array:
+    """bool[K] — slots whose content advanced since the snapshot."""
+    return doc.version > snap.versions
+
+
+def invalidations(snap: Snapshot, doc: SlotDoc, deps_row: jax.Array) -> jax.Array:
+    """True if any dependency slot changed since the snapshot (re-prefill)."""
+    return jnp.any(changed_mask(snap, doc) & deps_row)
+
+
+def observation_count(snap: Snapshot, doc: SlotDoc) -> jax.Array:
+    """Number of update events this observation delivers (O(N×U) accounting)."""
+    return jnp.sum((doc.version - snap.versions).clip(0))
+
+
+class RGAFrontier(NamedTuple):
+    """Version vector over an RGA replica (per-client op counts)."""
+
+    counts: jax.Array    # i32[C]
+
+
+def rga_frontier(state: RGA) -> RGAFrontier:
+    return RGAFrontier(counts=state.count)
+
+
+def rga_delta_mask(state: RGA, frontier: RGAFrontier) -> jax.Array:
+    """bool[C, L] — ops not yet observed at ``frontier``."""
+    idx = jnp.arange(state.capacity, dtype=jnp.int32)[None, :]
+    return (idx >= frontier.counts[:, None]) & state.valid_mask()

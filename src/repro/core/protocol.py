@@ -1,0 +1,106 @@
+"""TODO-claim protocol: optimistic write-verify (paper §3.5 / §A.5).
+
+The paper's four steps — scan, claim, wait-for-sync, verify — become on TPU:
+
+  1. scan   — ``todo.pick`` over the merged board (deterministic, rotated),
+  2. claim  — LWW write with the agent's ticked Lamport clock,
+  3. sync   — a collective (or pairwise) merge replaces the 50 ms wait; the
+              merge is an exact join, so the verify read is exact,
+  4. verify — claim succeeded iff the merged register names this agent.
+
+Safety (at-most-one-winner) is the paper's theorem verbatim: concurrent
+claims on key k resolve via the lexicographic (clock, client) total order,
+and every replica converges to the same winner.  Property-tested in
+tests/test_todo_protocol.py under random interleavings and merge orders.
+
+``merge_fn`` is injected: agents running on a mesh pass a collective merge
+(core.merge.collective_merge); host-side orchestration passes a fold over
+replica states.  The protocol is agnostic — that is the substrate-
+independence argument of paper §3.2.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import todo
+from repro.core.clock import Lamport
+
+MergeFn = Callable[[todo.TodoBoard], todo.TodoBoard]
+
+
+class ClaimOutcome(NamedTuple):
+    board: todo.TodoBoard    # post-merge board
+    lamport: Lamport         # advanced clock
+    todo_id: jax.Array       # i32 — the key this agent attempted
+    attempted: jax.Array     # bool — a ready TODO existed
+    won: jax.Array           # bool — verify read names this agent
+
+
+def try_claim(board: todo.TodoBoard, lamport: Lamport, now: jax.Array,
+              merge_fn: MergeFn) -> ClaimOutcome:
+    """One scan→claim→sync→verify round for one agent."""
+    # Lamport receive rule against everything observed so far.
+    lam = lamport.observe(board.max_clock())
+    k, found = todo.pick(board, lam.client)
+    proposed = jax.tree.map(
+        lambda new, old: jnp.where(found, new, old),
+        todo.claim(board, k, lam.client, lam.time, now),
+        board,
+    )
+    merged = merge_fn(proposed)
+    won = found & (merged.status[k] == todo.CLAIMED) & (merged.assignee[k] == lam.client)
+    return ClaimOutcome(board=merged, lamport=lam, todo_id=k,
+                        attempted=found, won=won)
+
+
+def complete(board: todo.TodoBoard, lamport: Lamport, k: jax.Array,
+             merge_fn: MergeFn) -> tuple[todo.TodoBoard, Lamport]:
+    lam = lamport.observe(board.max_clock())
+    return merge_fn(todo.complete(board, k, lam.client, lam.time)), lam
+
+
+def reclaim_stale(board: todo.TodoBoard, lamport: Lamport, now: jax.Array,
+                  timeout: jax.Array, merge_fn: MergeFn
+                  ) -> tuple[todo.TodoBoard, Lamport]:
+    """Liveness sweep (paper's 120 s reclaim): any live agent may run it."""
+    lam = lamport.observe(board.max_clock())
+    return merge_fn(todo.reset_stale(board, now, timeout, lam.time, lam.client)), lam
+
+
+# ---------------------------------------------------------------------------
+# Vectorized N-agent round (used by the fused serving step): all agents claim
+# concurrently against the same observed board; the merge arbitrates.
+# ---------------------------------------------------------------------------
+
+def concurrent_claims(board: todo.TodoBoard, clients: jax.Array,
+                      clocks: jax.Array, now: jax.Array
+                      ) -> tuple[todo.TodoBoard, jax.Array, jax.Array]:
+    """N agents propose claims against one observed board snapshot.
+
+    Returns (merged_board, todo_ids i32[N], won bool[N]).  Implemented as a
+    fold of per-agent proposals through the join — equivalent to any delivery
+    order by commutativity (that equivalence is property-tested).
+    """
+    n = clients.shape[0]
+
+    def propose(i):
+        k, found = todo.pick(board, clients[i])
+        prop = todo.claim(board, k, clients[i], clocks[i], now)
+        prop = jax.tree.map(lambda new, old: jnp.where(found, new, old), prop, board)
+        return prop, k, found
+
+    def body(i, carry):
+        acc, ks, founds = carry
+        prop, k, found = propose(i)
+        from repro.core import merge as merge_mod
+        acc = merge_mod.join(acc, prop)
+        return acc, ks.at[i].set(k), founds.at[i].set(found)
+
+    ks0 = jnp.zeros((n,), jnp.int32)
+    f0 = jnp.zeros((n,), jnp.bool_)
+    merged, ks, founds = jax.lax.fori_loop(0, n, body, (board, ks0, f0))
+    won = founds & (merged.status[ks] == todo.CLAIMED) & (merged.assignee[ks] == clients)
+    return merged, ks, won

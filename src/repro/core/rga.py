@@ -1,0 +1,203 @@
+"""Array-backed RGA sequence CRDT — the Y.Text analogue (DESIGN.md §2).
+
+State = per-client append-only op logs.  An op is identified by its stable
+slot ``oid = client * capacity + index`` (rows are append-only and immutable,
+so slots are stable ids).  Each op carries:
+
+  * ``op_clock``  — Lamport timestamp (orders same-origin siblings),
+  * ``origin``    — oid of the element it was inserted after (HEAD for doc start),
+  * ``token``     — payload token id,
+  * ``deleted``   — tombstone (2P-set: any replica may set; join = OR).
+
+The *join* of two states is trivial (per-slot "whoever knows it" union +
+tombstone OR), hence strong eventual consistency.  The *document* is a pure
+deterministic function ``materialize(state)`` of the op set:
+
+  RGA tree order: an op is a child of its origin; siblings sort by
+  descending (clock, client); document = preorder traversal.
+
+``materialize`` exploits the classic insight that inserting ops in ascending
+(clock, client) order, each immediately after its origin in a linked list,
+reconstructs exactly this preorder (each new op is the largest-key child of
+its origin at insertion time, i.e. its first child).  That gives an
+O(n log n) sort + O(n) linked-list build with fixed shapes — no recursion,
+no dynamic allocation, fully jittable.
+
+Lamport clocks respect causality (clients tick past everything they have
+observed), so an op's origin always has a smaller key and is inserted first.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clock import MAX_CLIENTS, pack_key
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class RGA(NamedTuple):
+    count: jax.Array      # i32[C]    valid ops in row c are [0, count[c])
+    op_clock: jax.Array   # i32[C, L]
+    origin: jax.Array     # i32[C, L] dense oid of left neighbour at insert; HEAD = C*L
+    token: jax.Array      # i32[C, L]
+    deleted: jax.Array    # bool[C, L]
+
+    @property
+    def num_clients(self) -> int:
+        return self.op_clock.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.op_clock.shape[1]
+
+    @property
+    def head_oid(self) -> int:
+        return self.num_clients * self.capacity
+
+    def valid_mask(self) -> jax.Array:
+        idx = jnp.arange(self.capacity, dtype=jnp.int32)[None, :]
+        return idx < self.count[:, None]
+
+    def max_clock(self) -> jax.Array:
+        """Largest observed Lamport time (for Lamport receive rule)."""
+        return jnp.max(jnp.where(self.valid_mask(), self.op_clock, 0))
+
+
+def empty(num_clients: int, capacity: int) -> RGA:
+    shape = (num_clients, capacity)
+    return RGA(
+        count=jnp.zeros((num_clients,), jnp.int32),
+        op_clock=jnp.zeros(shape, jnp.int32),
+        origin=jnp.zeros(shape, jnp.int32),
+        token=jnp.zeros(shape, jnp.int32),
+        deleted=jnp.zeros(shape, jnp.bool_),
+    )
+
+
+def insert(state: RGA, client: jax.Array, clock: jax.Array,
+           origin_oid: jax.Array, token: jax.Array) -> RGA:
+    """Append one insert-op to ``client``'s own row."""
+    pos = jnp.minimum(state.count[client], state.capacity - 1)
+    ok = state.count[client] < state.capacity
+    upd = lambda arr, v: arr.at[client, pos].set(
+        jnp.where(ok, jnp.asarray(v, arr.dtype), arr[client, pos]))
+    return RGA(
+        count=state.count.at[client].add(jnp.where(ok, 1, 0)),
+        op_clock=upd(state.op_clock, clock),
+        origin=upd(state.origin, origin_oid),
+        token=upd(state.token, token),
+        deleted=state.deleted,
+    )
+
+
+def insert_run(state: RGA, client: jax.Array, clock0: jax.Array,
+               origin_oid: jax.Array, tokens: jax.Array,
+               length: jax.Array) -> RGA:
+    """Insert a contiguous run of ``length`` tokens after ``origin_oid``.
+
+    Each token's origin is its predecessor in the run, so a run is a chain in
+    the RGA tree and can never be interleaved by a concurrent run (tested).
+    This is the common fast path — an agent committing a generated chunk is a
+    single O(run) slice write, no per-token host loop.
+    """
+    run_cap = tokens.shape[0]
+    c = jnp.asarray(client, jnp.int32)
+    pos0 = state.count[c]
+    room = jnp.clip(state.capacity - pos0, 0, run_cap)
+    n = jnp.minimum(jnp.asarray(length, jnp.int32), room)
+    j = jnp.arange(run_cap, dtype=jnp.int32)
+    write = j < n
+    # Masked lanes are routed out of bounds and dropped — clipping them onto a
+    # valid slot would create duplicate scatter indices that can clobber the
+    # real write (XLA scatter order is unspecified).
+    pos = jnp.where(write, pos0 + j, state.capacity)
+    oid_prev = c * state.capacity + (pos0 + j) - 1
+    origins = jnp.where(j == 0, jnp.asarray(origin_oid, jnp.int32), oid_prev)
+    clocks = jnp.asarray(clock0, jnp.int32) + j
+    row_upd = lambda arr, vals: arr.at[c, pos].set(
+        vals.astype(arr.dtype), mode="drop")
+    return RGA(
+        count=state.count.at[c].add(n),
+        op_clock=row_upd(state.op_clock, clocks),
+        origin=row_upd(state.origin, origins),
+        token=row_upd(state.token, jnp.asarray(tokens, jnp.int32)),
+        deleted=state.deleted,
+    )
+
+
+def delete(state: RGA, oid: jax.Array) -> RGA:
+    c, i = oid // state.capacity, oid % state.capacity
+    return state._replace(deleted=state.deleted.at[c, i].set(True))
+
+
+def merge(a: RGA, b: RGA) -> RGA:
+    """Join: per-slot union of observed ops; tombstones OR."""
+    mine = a.valid_mask()
+    pick = lambda x, y: jnp.where(mine, x, y)
+    return RGA(
+        count=jnp.maximum(a.count, b.count),
+        op_clock=pick(a.op_clock, b.op_clock),
+        origin=pick(a.origin, b.origin),
+        token=pick(a.token, b.token),
+        deleted=a.deleted | b.deleted,
+    )
+
+
+def materialize(state: RGA) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Deterministic document: (tokens i32[N], oids i32[N], visible_len).
+
+    ``tokens``/``oids`` are left-packed over *visible* (non-tombstoned) ops;
+    entries at index >= visible_len are -1.  ``oids`` lets callers name an
+    insertion origin for subsequent edits.
+    """
+    C, L = state.op_clock.shape
+    N = C * L
+    HEAD = N
+
+    valid = state.valid_mask().reshape(-1)                      # [N]
+    clock_f = state.op_clock.reshape(-1)
+    client_f = jnp.repeat(jnp.arange(C, dtype=jnp.int32), L)
+    origin_f = state.origin.reshape(-1)
+    key = jnp.where(valid, pack_key(clock_f, client_f), INT32_MAX)
+
+    order = jnp.argsort(key)                                    # ascending
+    # Linked list over oids; slot HEAD is the document start sentinel.
+    nxt0 = jnp.full((N + 2,), -1, jnp.int32)                    # [-1] tail
+
+    def body(k, nxt):
+        x = order[k]
+        ok = valid[x]
+        o = jnp.where(ok, origin_f[x], N + 1)                   # scratch slot if invalid
+        succ = nxt[o]
+        nxt = nxt.at[x].set(jnp.where(ok, succ, nxt[x]))
+        nxt = nxt.at[o].set(jnp.where(ok, x, nxt[o]))
+        return nxt
+
+    nxt = jax.lax.fori_loop(0, N, body, nxt0)
+
+    deleted_f = state.deleted.reshape(-1)
+
+    def walk(k, carry):
+        cur, out_tok, out_oid, pos = carry
+        live = cur >= 0
+        cur_c = jnp.clip(cur, 0, N - 1)
+        vis = live & ~deleted_f[cur_c]
+        out_tok = out_tok.at[pos].set(
+            jnp.where(vis, state.token.reshape(-1)[cur_c], out_tok[pos]))
+        out_oid = out_oid.at[pos].set(jnp.where(vis, cur_c, out_oid[pos]))
+        pos = pos + jnp.where(vis, 1, 0)
+        cur = jnp.where(live, nxt[cur_c], -1)
+        return cur, out_tok, out_oid, pos
+
+    out_tok = jnp.full((N,), -1, jnp.int32)
+    out_oid = jnp.full((N,), -1, jnp.int32)
+    cur0 = nxt[HEAD]
+    cur, out_tok, out_oid, pos = jax.lax.fori_loop(
+        0, N, walk, (cur0, out_tok, out_oid, jnp.int32(0)))
+    return out_tok, out_oid, pos
+
+
+materialize_jit = jax.jit(materialize)

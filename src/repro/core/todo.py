@@ -1,0 +1,125 @@
+"""TodoBoard: the paper's Y.Map TODO coordination state (§3.5).
+
+A fixed bank of K TODO registers over an LWWBank.  Each register packs the
+paper's record {status, assignedTo, logicalClock} plus claim_time (for the
+120 s stale-claim liveness rule) and a dependency mask (task coupling
+structure, §5.2.1).  All writes go through LWW semantics, so the at-most-one
+-winner safety theorem (paper §A.5) holds verbatim: concurrent claims resolve
+by lexicographic (clock, client) order, identically on every replica.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lww
+
+# Status enum (monotone in intent, enforced by protocol not by type).
+EMPTY, PENDING, CLAIMED, DONE = 0, 1, 2, 3
+
+
+class TodoBoard(NamedTuple):
+    bank: lww.LWWBank     # payload: status, assignee, claim_time i32[K]; deps bool[K, K]
+
+    @property
+    def num_todos(self) -> int:
+        return self.bank.clock.shape[0]
+
+    @property
+    def status(self) -> jax.Array:
+        return self.bank.payload["status"]
+
+    @property
+    def assignee(self) -> jax.Array:
+        return self.bank.payload["assignee"]
+
+    @property
+    def claim_time(self) -> jax.Array:
+        return self.bank.payload["claim_time"]
+
+    @property
+    def deps(self) -> jax.Array:
+        return self.bank.payload["deps"]
+
+    def max_clock(self) -> jax.Array:
+        return jnp.max(self.bank.clock)
+
+
+def empty(num_todos: int) -> TodoBoard:
+    spec = {
+        "status": ((), jnp.int32),
+        "assignee": ((), jnp.int32),
+        "claim_time": ((), jnp.int32),
+        "deps": ((num_todos,), jnp.bool_),
+    }
+    return TodoBoard(bank=lww.empty(num_todos, spec))
+
+
+def post(board: TodoBoard, k: jax.Array, deps_row: jax.Array,
+         clock: jax.Array, client: jax.Array) -> TodoBoard:
+    """Outliner publishes TODO k with its dependency row (bool[K])."""
+    return TodoBoard(lww.write(
+        board.bank, k, clock, client,
+        status=PENDING, assignee=0, claim_time=0, deps=deps_row))
+
+
+def claim(board: TodoBoard, k: jax.Array, agent: jax.Array,
+          clock: jax.Array, now: jax.Array) -> TodoBoard:
+    return TodoBoard(lww.write(
+        board.bank, k, clock, agent,
+        status=CLAIMED, assignee=agent, claim_time=now,
+        deps=board.deps[k]))
+
+
+def complete(board: TodoBoard, k: jax.Array, agent: jax.Array,
+             clock: jax.Array) -> TodoBoard:
+    return TodoBoard(lww.write(
+        board.bank, k, clock, agent,
+        status=DONE, assignee=agent, claim_time=board.claim_time[k],
+        deps=board.deps[k]))
+
+
+def reset_stale(board: TodoBoard, now: jax.Array, timeout: jax.Array,
+                clock: jax.Array, client: jax.Array) -> TodoBoard:
+    """Liveness: claims whose holder went silent revert to PENDING.
+
+    Mirrors the paper's 120 s timeout + status reset.  Safe because shard/TODO
+    completion is idempotent (LWW/G-set), so duplicated work merges cleanly.
+    """
+    stale = (board.status == CLAIMED) & (now - board.claim_time > timeout)
+    return TodoBoard(lww.write_masked(
+        board.bank, stale, clock, client,
+        status=PENDING, assignee=0, claim_time=0, deps=board.deps))
+
+
+def done_mask(board: TodoBoard) -> jax.Array:
+    return board.status == DONE
+
+
+def ready_mask(board: TodoBoard) -> jax.Array:
+    """PENDING and every dependency DONE."""
+    done = done_mask(board)
+    deps_ok = jnp.all(~board.deps | done[None, :], axis=1)
+    return (board.status == PENDING) & deps_ok
+
+
+def pick(board: TodoBoard, agent: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Deterministic next-TODO choice, rotated per agent to de-collide claims.
+
+    Returns (k, found).  Rotation is a heuristic only — safety never depends
+    on it (colliding claims are resolved by LWW; losers re-pick).
+    """
+    k_count = board.num_todos
+    ready = ready_mask(board)
+    idx = jnp.arange(k_count, dtype=jnp.int32)
+    rot = (idx - jnp.asarray(agent, jnp.int32) * 3) % k_count
+    score = jnp.where(ready, k_count - rot, -1)
+    k = jnp.argmax(score)
+    return k.astype(jnp.int32), ready[k]
+
+
+def all_done(board: TodoBoard) -> jax.Array:
+    posted = board.status != EMPTY
+    return jnp.all(~posted | (board.status == DONE))

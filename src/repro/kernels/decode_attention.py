@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: flash-decode attention (single-token query).
+
+Decode is HBM-bandwidth-bound: one query row must stream the whole KV cache.
+The kernel splits the KV length across the innermost grid axis (split-K),
+keeping per-tile partial online-softmax state (m, l, acc) in VMEM scratch and
+normalizing on the final tile — so the cache is read exactly once at full
+bandwidth and no [S]-sized logits buffer ever exists in HBM.
+
+Padding rows (>= kv_len) are masked with a per-(batch,head) valid length
+passed as a tiny i32 input block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, bs: int, ns: int):
+    isb = pl.program_id(1)
+
+    @pl.when(isb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0]
+    s_start = isb * bs
+
+    @pl.when(s_start < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # [1, D] row
+        k = k_ref[0].astype(jnp.float32)                    # [Bs, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # [1, Bs]
+        cols = s_start + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]                                 # [1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(isb == ns - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_s", "interpret", "num_q_heads"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, scale: float, num_q_heads: int,
+                     block_s: int = 512, interpret: bool = False) -> jax.Array:
+    """q: [BHq, 1, D]; k, v: [BHkv, S, D]; kv_len: i32[BHq] (valid prefix)."""
+    bhq, _, d = q.shape
+    bhkv, s_pad, _ = k.shape
+    batch = bhq // num_q_heads
+    num_kv_heads = bhkv // batch
+    group = num_q_heads // num_kv_heads
+    ns = s_pad // block_s
+    grid = (bhq, ns)
+
+    def kv_row(bh):
+        b = bh // num_q_heads
+        h = bh % num_q_heads
+        return b * num_kv_heads + h // group
+
+    len_spec = pl.BlockSpec((1,), lambda bh, isb: (bh,))
+    q_spec = pl.BlockSpec((1, 1, d), lambda bh, isb: (bh, 0, 0))
+    kv_spec = pl.BlockSpec((1, block_s, d), lambda bh, isb: (kv_row(bh), isb, 0))
+    o_spec = pl.BlockSpec((1, 1, d), lambda bh, isb: (bh, 0, 0))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bs=block_s, ns=ns)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[len_spec, q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q, k, v)

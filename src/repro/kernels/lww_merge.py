@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: LWW register-bank merge (the coordination hot-spot).
+
+The paper's replicas pay O(N×U) observation work in JavaScript callbacks; on
+TPU the per-replica join is a single fused pass over the register bank.  This
+kernel merges two banks (packed int32 keys + payload matrix) tile-by-tile in
+VMEM.  Keys and payloads stream through once — the op is bandwidth-bound, so
+the win over unfused jnp is one pass instead of three (compare, select key,
+select payload) and no HBM round-trip for the ``wins`` mask.
+
+Blocks are 128-aligned (TPU lane width); the ops.py wrapper pads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(key_a_ref, pay_a_ref, key_b_ref, pay_b_ref,
+                  key_o_ref, pay_o_ref):
+    ka = key_a_ref[...]
+    kb = key_b_ref[...]
+    wins = kb > ka
+    key_o_ref[...] = jnp.where(wins, kb, ka)
+    pay_o_ref[...] = jnp.where(wins[:, None], pay_b_ref[...], pay_a_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def lww_merge(key_a: jax.Array, pay_a: jax.Array,
+              key_b: jax.Array, pay_b: jax.Array,
+              *, block_k: int = 1024, interpret: bool = False
+              ) -> tuple[jax.Array, jax.Array]:
+    """key_*: i32[K]; pay_*: [K, D].  K, D already padded by ops.py."""
+    k_dim, d = pay_a.shape
+    grid = (k_dim // block_k,)
+    key_spec = pl.BlockSpec((block_k,), lambda i: (i,))
+    pay_spec = pl.BlockSpec((block_k, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[key_spec, pay_spec, key_spec, pay_spec],
+        out_specs=[key_spec, pay_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(key_a.shape, key_a.dtype),
+            jax.ShapeDtypeStruct(pay_a.shape, pay_a.dtype),
+        ],
+        interpret=interpret,
+    )(key_a, pay_a, key_b, pay_b)

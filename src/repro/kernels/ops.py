@@ -1,0 +1,112 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to TPU-aligned block shapes, layout flattening, backend
+dispatch (interpret=True off-TPU so kernels execute correctly on CPU), and
+an escape hatch to the pure-jnp reference path (used by the dry-run so XLA
+cost analysis sees portable HLO).
+
+    from repro.kernels import ops
+    out = ops.flash_attention(q, k, v, causal=True)          # [B,H,T,D]
+    out = ops.decode_attention(q, k, v, kv_len)              # [B,H,D]
+    key, pay = ops.lww_merge(key_a, pay_a, key_b, pay_b)
+    h, h_T  = ops.linear_scan(a, b, h0)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lww_merge as _lww
+from repro.kernels import ref
+from repro.kernels import rglru_scan as _rg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def lww_merge(key_a, pay_a, key_b, pay_b, *, block_k: int = 1024,
+              use_pallas: bool = True):
+    """key: i32[K]; payload: [K, D] — see kernels/lww_merge.py."""
+    if not use_pallas:
+        return ref.lww_merge(key_a, pay_a, key_b, pay_b)
+    k = key_a.shape[0]
+    blk = min(block_k, max(128, 1 << (k - 1).bit_length()))
+    ka = _pad_to(key_a, 0, blk, value=np.iinfo(np.int32).min)
+    kb = _pad_to(key_b, 0, blk, value=np.iinfo(np.int32).min)
+    pa = _pad_to(_pad_to(pay_a, 0, blk), 1, 128)
+    pb = _pad_to(_pad_to(pay_b, 0, blk), 1, 128)
+    ok, op = _lww.lww_merge(ka, pa, kb, pb, block_k=blk,
+                            interpret=not _on_tpu())
+    return ok[:k], op[:k, :pay_a.shape[1]]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    window: int | None = None, block_q: int = 256,
+                    block_k: int = 256, use_pallas: bool = True):
+    """q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D] -> [B, Hq, Tq, D]."""
+    if not use_pallas:
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   window=window)
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    bq = min(block_q, max(128, 1 << (tq - 1).bit_length()))
+    bk = min(block_k, max(128, 1 << (tk - 1).bit_length()))
+    qf = _pad_to(_pad_to(q.reshape(b * hq, tq, d), 1, bq), 2, 128)
+    kf = _pad_to(_pad_to(k.reshape(b * hkv, tk, d), 1, bk), 2, 128)
+    vf = _pad_to(_pad_to(v.reshape(b * hkv, tk, d), 1, bk), 2, 128)
+    # Padded query rows produce garbage and are sliced away below.
+    out = _fa.flash_attention(
+        qf, kf, vf, causal=causal, scale=scale, window=window,
+        num_q_heads=hq, tq_true=tq, tk_true=tk,
+        block_q=bq, block_k=bk, interpret=not _on_tpu())
+    return out[:, :tq, :d].reshape(b, hq, tq, d)
+
+
+def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
+                     block_s: int = 512, use_pallas: bool = True):
+    """q: [B, Hq, D]; k, v: [B, Hkv, S, D]; kv_len: i32[B] -> [B, Hq, D]."""
+    if not use_pallas:
+        return ref.decode_attention(q, k, v, kv_len, scale=scale)
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    bs = min(block_s, max(128, 1 << (s - 1).bit_length()))
+    qf = _pad_to(q.reshape(b * hq, 1, d), 2, 128)
+    kf = _pad_to(_pad_to(k.reshape(b * hkv, s, d), 1, bs), 2, 128)
+    vf = _pad_to(_pad_to(v.reshape(b * hkv, s, d), 1, bs), 2, 128)
+    len_f = jnp.repeat(kv_len.astype(jnp.int32), hq)
+    out = _dec.decode_attention(
+        qf, kf, vf, len_f, scale=scale, num_q_heads=hq, block_s=bs,
+        interpret=not _on_tpu())
+    return out[:, 0, :d].reshape(b, hq, d)
+
+
+def linear_scan(a, b, h0, *, block_t: int = 128, use_pallas: bool = True):
+    """h_t = a_t*h_{t-1} + b_t.  a, b: [B, T, D]; h0: [B, D]."""
+    if not use_pallas:
+        y = ref.linear_scan(a, b, h0)
+        return y, y[:, -1].astype(jnp.float32)
+    batch, t, d = a.shape
+    bt = min(block_t, max(8, 1 << (t - 1).bit_length()))
+    # Pad time with identity steps (a=1, b=0) so the carry passes through.
+    ap = _pad_to(a, 1, bt, value=1)
+    bp = _pad_to(b, 1, bt, value=0)
+    y, h_t = _rg.linear_scan(ap, bp, h0, block_t=bt, interpret=not _on_tpu())
+    return y[:, :t], h_t

@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition with no tiling/blocking —
+tests/test_kernels.py sweeps shapes and dtypes asserting the kernels match
+these to tolerance.  The model zoo also uses these as its portable path (the
+dry-run lowers reference math so XLA cost analysis sees the real FLOPs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LWW merge (the paper's coordination hot-spot)
+# ---------------------------------------------------------------------------
+
+def lww_merge(key_a: jax.Array, payload_a: jax.Array,
+              key_b: jax.Array, payload_b: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """Per-register join: winner = larger packed (clock, client) key.
+
+    key_*: i32[K]; payload_*: [K, D] (any dtype).
+    """
+    b_wins = key_b > key_a
+    out_key = jnp.where(b_wins, key_b, key_a)
+    out_payload = jnp.where(b_wins[:, None], payload_b, payload_a)
+    return out_key, out_payload
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _broadcast_kv(k: jax.Array, n_q_heads: int) -> jax.Array:
+    """[B, Hkv, T, D] -> [B, Hq, T, D] by repeating groups (GQA)."""
+    b, hkv, t, d = k.shape
+    group = n_q_heads // hkv
+    return jnp.repeat(k, group, axis=1)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None,
+                    window: int | None = None) -> jax.Array:
+    """Full-precision reference attention.
+
+    q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D] (Hq % Hkv == 0).
+    ``window``: optional local-attention window (keys within [i-window, i]).
+    """
+    b, hq, tq, d = q.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kb = _broadcast_kv(k, hq)
+    vb = _broadcast_kv(v, hq)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+    tk = k.shape[2]
+    qi = jnp.arange(tq)[:, None] + (tk - tq)   # align ends (prefill/extend)
+    ki = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki >= qi - window + 1
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, scale: float | None = None) -> jax.Array:
+    """Single-token decode attention against a (padded) KV cache.
+
+    q: [B, Hq, D]; k, v: [B, Hkv, S, D]; kv_len: i32[B] — valid prefix.
+    """
+    b, hq, d = q.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kb = _broadcast_kv(k, hq)
+    vb = _broadcast_kv(v, hq)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+    s = k.shape[2]
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vb.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Diagonal gated linear recurrence (RG-LRU / generic h_t = a_t h_{t-1} + b_t)
+# ---------------------------------------------------------------------------
+
+def linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t ⊙ h_{t-1} + b_t, returned for all t.  a,b: [B,T,D]; h0: [B,D]."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype)
+
+
+def rglru(x: jax.Array, input_gate: jax.Array, rec_gate: jax.Array,
+          log_lambda: jax.Array, h0: jax.Array, c: float = 8.0
+          ) -> tuple[jax.Array, jax.Array]:
+    """Griffin RG-LRU (arXiv:2402.19427 eq. 3-4).
+
+    x, input_gate, rec_gate: [B, T, D] (gates pre-activation);
+    log_lambda: [D] (learnt, param is softplus-domain); h0: [B, D].
+    Returns (y [B,T,D], h_T [B,D]).
+    """
+    i_t = jax.nn.sigmoid(input_gate.astype(jnp.float32))
+    r_t = jax.nn.sigmoid(rec_gate.astype(jnp.float32))
+    log_a = -c * r_t * jax.nn.softplus(log_lambda.astype(jnp.float32))[None, None, :]
+    a_t = jnp.exp(log_a)
+    gated_x = i_t * x.astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.clip(1.0 - a_t ** 2, 1e-9)) * gated_x
+    hs = linear_scan(a_t, b_t, h0)
+    return hs.astype(x.dtype), hs[:, -1].astype(jnp.float32)

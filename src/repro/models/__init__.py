@@ -1,0 +1,1 @@
+"""Model zoo: one generic stack covering all 10 assigned architectures."""

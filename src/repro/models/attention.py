@@ -1,0 +1,250 @@
+"""GQA/MQA attention with optional sliding window, QK-norm, RoPE, and a
+single-token decode path against a KV cache.
+
+The portable path is pure jnp (what the dry-run lowers — XLA sees the true
+attention FLOPs); ``impl="pallas"`` routes the contraction through the
+repro.kernels flash kernels on TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+def init(key, cfg: ModelConfig, d_model: int | None = None) -> Params:
+    d = d_model or cfg.d_model
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], d, hq * hd, cfg.use_bias),
+        "wk": common.dense_init(ks[1], d, hkv * hd, cfg.use_bias),
+        "wv": common.dense_init(ks[2], d, hkv * hd, cfg.use_bias),
+        "wo": common.dense_init(ks[3], hq * hd, d, cfg.use_bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.norm_init(hd, "rmsnorm")
+        p["k_norm"] = common.norm_init(hd, "rmsnorm")
+    return p
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, -1).transpose(0, 2, 1, 3)   # [B,H,T,D]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    q = _split_heads(common.dense(p["wq"], x), cfg.num_heads)
+    k = _split_heads(common.dense(p["wk"], x), cfg.num_kv_heads)
+    v = _split_heads(common.dense(p["wv"], x), cfg.num_kv_heads)
+    if cfg.qk_norm:
+        q = common.apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = common.apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _block_mask(rows: jax.Array, cols: jax.Array, *, tk_true: int,
+                causal: bool, window, prefix_len: int) -> jax.Array:
+    """Lazy mask for a (rows × cols) tile; same semantics as common.make_mask."""
+    r = rows[:, None]
+    c = cols[None, :]
+    mask = c < tk_true
+    if causal:
+        cm = c <= r
+        if prefix_len > 0:
+            cm |= (c < prefix_len)
+        mask &= cm
+    if window is not None:
+        wm = c >= r - window + 1
+        if prefix_len > 0:
+            wm |= (c < prefix_len)
+        mask &= wm
+    return mask
+
+
+def _sdpa_chunked(q, k, v, scale, *, causal=True, window=None, prefix_len=0,
+                  chunk: int = 1024):
+    """Blockwise online-softmax attention (portable flash structure).
+
+    Never materializes [Tq, Tk] scores: a lax.scan over KV chunks carries
+    (m, l, acc).  This is what makes prefill_32k lowerable — dense scores at
+    32k would be ~4 GiB per head-row, f32.
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    group = hq // hkv
+    nk = -(-tk // chunk)
+    pad = nk * chunk - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    ks = jnp.moveaxis(k.reshape(b, hkv, nk, chunk, d), 2, 0)
+    vs = jnp.moveaxis(v.reshape(b, hkv, nk, chunk, dv), 2, 0)
+    rows = jnp.arange(tq, dtype=jnp.int32) + (tk - tq)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc, start = carry
+        kc, vc = inp
+        kb = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
+        vb = jnp.repeat(vc, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb,
+                       preferred_element_type=jnp.float32) * scale
+        cols = start + jnp.arange(chunk, dtype=jnp.int32)
+        mask = _block_mask(rows, cols, tk_true=tk, causal=causal,
+                           window=window, prefix_len=prefix_len)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vb, preferred_element_type=jnp.float32)
+        return (m_new, l, acc, start + chunk), None
+
+    m0 = jnp.full((b, hq, tq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, tq), jnp.float32)
+    a0 = jnp.zeros((b, hq, tq, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)),
+                                     (ks, vs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, mask, scale, impl: str, window=None, causal=True,
+          chunked=False, prefix_len=0):
+    """q: [B,H,Tq,D]; k,v: [B,Hkv,Tk,D]; mask: bool[Tq,Tk] or None."""
+    if chunked:
+        return _sdpa_chunked(q, k, v, scale, causal=causal, window=window,
+                             prefix_len=prefix_len)
+    if impl == "pallas" and mask is None:
+        return kops.flash_attention(q, k, v, causal=causal, scale=scale,
+                                    window=window)
+    group = q.shape[1] // k.shape[1]
+    kb = jnp.repeat(k, group, axis=1)
+    vb = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kb,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vb)
+
+
+def forward(p: Params, cfg: ModelConfig, x: jax.Array,
+            mask: Optional[jax.Array], positions: jax.Array,
+            impl: str = "ref", chunked: bool = False,
+            prefix_len: int = 0) -> jax.Array:
+    """Full-sequence path (train / prefill-without-cache)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    scale = cfg.head_dim ** -0.5
+    out = _sdpa(q, k, v, mask, scale, impl, window=cfg.window,
+                chunked=chunked, prefix_len=prefix_len)
+    return common.dense(p["wo"], _merge_heads(out))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+            mask: Optional[jax.Array], positions: jax.Array,
+            impl: str = "ref", chunked: bool = False,
+            prefix_len: int = 0) -> tuple[jax.Array, Params]:
+    """Full-prompt forward that also fills cache positions [0, T)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    scale = cfg.head_dim ** -0.5
+    out = _sdpa(q, k, v, mask, scale, impl, window=cfg.window,
+                chunked=chunked, prefix_len=prefix_len)
+    t = x.shape[1]
+    s = cache["k"].shape[2]
+    if t <= s:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+    else:
+        # Ring cache shorter than the prompt: slot s holds the LAST token
+        # with absolute position ≡ s (mod S) — a deterministic gather (a
+        # scatter with duplicate indices would have unspecified order).
+        sl = jnp.arange(s, dtype=jnp.int32)
+        p_last = (t - 1) - ((t - 1 - sl) % s)
+        new_cache = {
+            "k": k[:, :, p_last].astype(cache["k"].dtype),
+            "v": v[:, :, p_last].astype(cache["v"].dtype),
+        }
+    return common.dense(p["wo"], _merge_heads(out)), new_cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+                pos: jax.Array, impl: str = "ref") -> tuple[jax.Array, Params]:
+    """One-token step.  x: [B, 1, D]; pos: i32[B] tokens already cached."""
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    # One-hot masked write instead of a scatter: a scatter at dynamic per-row
+    # positions into a sequence-sharded cache forces SPMD "involuntary full
+    # rematerialization" (replicates the whole cache).  The masked select is
+    # elementwise, partitions along every axis, and XLA fuses it into the
+    # cache-resident update.  The new-token K/V is resharded while tiny
+    # ([B, Hkv, D], head-sharded from the projection) BEFORE broadcasting
+    # against the cache — otherwise XLA broadcasts first and replicates the
+    # full cache to reshard it.
+    from repro.sharding import activation
+    s = cache["k"].shape[2]
+    k_tok = activation.constrain(k[:, :, 0], "batch", None, None)
+    v_tok = activation.constrain(v[:, :, 0], "batch", None, None)
+    # Ring indexing: token at absolute position p lives at slot p % S.  For
+    # unbounded caches (S >= max pos) this is the identity; for ring caches
+    # (S == window) it bounds memory while keeping exactly the attendable
+    # window resident (keys carry their absolute-position RoPE).
+    onehot = (jnp.arange(s, dtype=jnp.int32)[None] == (pos % s)[:, None])
+    oh = onehot[:, None, :, None]
+    k_cache = jnp.where(oh, k_tok[:, :, None].astype(cache["k"].dtype),
+                        cache["k"])
+    v_cache = jnp.where(oh, v_tok[:, :, None].astype(cache["v"].dtype),
+                        cache["v"])
+    kv_len = jnp.minimum(pos + 1, s)
+    scale = cfg.head_dim ** -0.5
+    if impl == "pallas":
+        out = kops.decode_attention(q[:, :, 0], k_cache, v_cache, kv_len,
+                                    scale=scale)
+    else:
+        # Grouped GQA einsum — no jnp.repeat: materializing broadcast KV
+        # forces GSPMD to reshard the (seq-sharded) cache into head layout.
+        # Contracting over the sharded seq axis instead lowers to partial
+        # logits/softmax + tiny all-reduces (flash-decode schedule).
+        group = cfg.num_heads // cfg.num_kv_heads
+        qg = q[:, :, 0].reshape(b, cfg.num_kv_heads, group, cfg.head_dim)
+        logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache,
+                            preferred_element_type=jnp.float32) * scale
+        sdim = k_cache.shape[2]
+        valid = jnp.arange(sdim)[None, :] < kv_len[:, None]
+        if cfg.window is not None and sdim > cfg.window:
+            # Unbounded cache: mask out slots older than the window.  Ring
+            # caches (sdim == window) hold exactly the window — no mask.
+            valid &= jnp.arange(sdim)[None, :] > (pos[:, None] - cfg.window)
+        logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgs,bksd->bkgd", probs, v_cache)
+        out = out.reshape(b, cfg.num_heads, cfg.head_dim)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    return common.dense(p["wo"], out), {"k": k_cache, "v": v_cache}

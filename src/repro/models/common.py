@@ -1,0 +1,109 @@
+"""Shared model components: norms, RoPE, dense layers, init helpers.
+
+Parameters are plain nested dicts of jnp arrays (bf16 storage by default;
+compute promotes to fp32 where numerically required).  Everything here is a
+pure function usable under jit / scan / shard_map.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, use_bias: bool = False,
+               scale: float | None = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(PARAM_DTYPE)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), PARAM_DTYPE)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def norm_init(d: int, norm_type: str) -> Params:
+    if norm_type == "nonparametric":
+        return {}
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), PARAM_DTYPE),
+                "bias": jnp.zeros((d,), PARAM_DTYPE)}
+    return {"scale": jnp.ones((d,), PARAM_DTYPE)}    # rmsnorm
+
+
+def apply_norm(p: Params, x: jax.Array, norm_type: str,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type in ("layernorm", "nonparametric"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if norm_type == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    # rmsnorm
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, H, T, D]; positions: [B, T] (or [T] broadcast)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                 # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,T,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def make_mask(tq: int, tk: int, *, causal: bool = True,
+              window: int | None = None, prefix_len: int = 0) -> jax.Array:
+    """bool[Tq, Tk] — True = attend.  Query rows end-aligned with keys."""
+    qi = jnp.arange(tq)[:, None] + (tk - tq)
+    ki = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki >= qi - window + 1
+    if prefix_len > 0:       # bidirectional prefix (PaliGemma-style)
+        mask |= (ki < prefix_len) & (qi < prefix_len)
+        mask |= (qi >= prefix_len) & (ki < prefix_len)
+    return mask
+
+
+def softcap(logits: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,31 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain-GELU MLP."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+def init(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d, h = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_activation == "gelu_mlp":
+        return {"up": common.dense_init(ks[0], d, h, cfg.use_bias),
+                "down": common.dense_init(ks[1], h, d, cfg.use_bias)}
+    return {"gate": common.dense_init(ks[0], d, h, cfg.use_bias),
+            "up": common.dense_init(ks[1], d, h, cfg.use_bias),
+            "down": common.dense_init(ks[2], h, d, cfg.use_bias)}
+
+
+def forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.ffn_activation == "gelu_mlp":
+        return common.dense(p["down"], jax.nn.gelu(common.dense(p["up"], x)))
+    act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
+    return common.dense(
+        p["down"], act(common.dense(p["gate"], x)) * common.dense(p["up"], x))

@@ -1,0 +1,306 @@
+"""Top-level language model: embedding → scanned block groups → head.
+
+Depth is folded into a ``lax.scan`` over stacked per-group parameters so the
+HLO (and compile time at 512 devices) is O(1) in num_layers; pattern
+remainders run unstacked as "tail" blocks.  Supports decoder-only, prefix-LM
+(VLM stub embeddings), and encoder-decoder (whisper stub frames).
+
+All entry points are pure functions over (params, cfg, inputs) — pjit them
+with the partitioner in repro.sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, common
+from repro.models.blocks import BlockCtx
+from repro.models.config import ModelConfig
+from repro.sharding import activation
+
+Params = Any
+
+# When True, the layer-group scans are fully unrolled.  Used only by the
+# dry-run's cost-extrapolation lowers: XLA's HloCostAnalysis visits while
+# bodies once, so unrolled small variants give exact per-group marginals.
+_UNROLL = False
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global _UNROLL
+    old, _UNROLL = _UNROLL, True
+    try:
+        yield
+    finally:
+        _UNROLL = old
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_size
+    p: dict[str, Any] = {
+        "embed": {"w": (jax.random.normal(keys[0], (v, d), jnp.float32)
+                        * d ** -0.5).astype(common.PARAM_DTYPE)},
+        "final_norm": common.norm_init(d, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = common.dense_init(keys[1], d, v)
+
+    g = cfg.pattern_groups
+    groups = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        gkeys = jax.random.split(jax.random.fold_in(keys[2], i), g)
+        groups[str(i)] = jax.vmap(
+            lambda k, kd=kind: blocks.block_init(kd, k, cfg))(gkeys)
+    p["groups"] = groups
+
+    tail = {}
+    for i, kind in enumerate(cfg.tail_blocks):
+        tail[str(i)] = blocks.block_init(
+            kind, jax.random.fold_in(keys[3], i), cfg)
+    if tail:
+        p["tail"] = tail
+
+    if cfg.is_encdec:
+        e = cfg.encoder
+        ekeys = jax.random.split(keys[4], e.num_layers)
+        p["encoder"] = {
+            "pos": (jax.random.normal(keys[5], (e.seq_len, d), jnp.float32)
+                    * 0.02).astype(common.PARAM_DTYPE),
+            "blocks": jax.vmap(
+                lambda k: blocks.block_init("attn", k, cfg))(ekeys),
+            "norm": common.norm_init(d, cfg.norm_type),
+        }
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def _embed(p: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = p["embed"]["w"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _head(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"]["w"].T.astype(x.dtype)
+    else:
+        logits = common.dense(p["head"], x)
+    # Keep logits vocab-sharded through the fp32 loss (see sharding/activation).
+    logits = activation.constrain(logits, "batch", None, "vocab")
+    return common.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def _encode(p: Params, cfg: ModelConfig, enc_frames: jax.Array,
+            impl: str) -> jax.Array:
+    """Bidirectional encoder over stub frame embeddings [B, Te, d]."""
+    e = p["encoder"]
+    x = enc_frames + e["pos"].astype(enc_frames.dtype)[None]
+    te = x.shape[1]
+    ctx = BlockCtx(positions=jnp.arange(te), mask_full=None, mask_local=None,
+                   mode="full", impl=impl)
+
+    def body(carry, bp):
+        y, _, _ = blocks.block_apply("attn", bp, cfg.replace(window=None),
+                                     carry, ctx, None)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, e["blocks"], unroll=_UNROLL)
+    return common.apply_norm(e["norm"], x, cfg.norm_type, cfg.norm_eps)
+
+
+CHUNKED_THRESHOLD = 8192
+
+
+def _make_ctx(cfg: ModelConfig, t: int, enc_out, impl: str,
+              prefix_len: int) -> BlockCtx:
+    if t > CHUNKED_THRESHOLD:
+        # Long sequences: lazy masks + blockwise online-softmax attention
+        # (materialized T×T masks/scores would be GiB-scale at 32k+).
+        return BlockCtx(positions=jnp.arange(t), mask_full=None,
+                        mask_local=None, enc_out=enc_out, mode="full",
+                        impl=impl, chunked=True, prefix_len=prefix_len)
+    mask_full = common.make_mask(t, t, causal=True, prefix_len=prefix_len)
+    mask_local = (common.make_mask(t, t, causal=True, window=cfg.window,
+                                   prefix_len=prefix_len)
+                  if "local" in cfg.block_pattern else None)
+    return BlockCtx(positions=jnp.arange(t), mask_full=mask_full,
+                    mask_local=mask_local, enc_out=enc_out, mode="full",
+                    impl=impl, prefix_len=prefix_len)
+
+
+def _run_blocks(p: Params, cfg: ModelConfig, x: jax.Array, ctx: BlockCtx,
+                cache: Params | None, remat: bool = False
+                ) -> tuple[jax.Array, Params | None, jax.Array]:
+    """Scanned groups + tail.  cache=None for pure training forward.
+
+    ``remat=True`` checkpoints each scanned group (activation recompute in
+    the backward pass) — the standard memory/compute trade for deep stacks.
+    """
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cache is None:
+        def body(carry, gp):
+            y, aux = carry
+            # Sequence-parallel residual stream: the remat-saved scan input is
+            # sharded over ("batch", seq->model); GSPMD all-gathers T in front
+            # of attention and reduce-scatters after (Megatron-SP schedule),
+            # shrinking the per-device saved-activation footprint by the
+            # model-axis size.
+            y = activation.constrain(y, "batch", "seq", None)
+            for i, kind in enumerate(cfg.block_pattern):
+                y, _, a = blocks.block_apply(kind, gp[str(i)], cfg, y, ctx,
+                                             None)
+                aux = aux + a
+            return (y, aux), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), p["groups"],
+                                    unroll=_UNROLL)
+        new_cache = None
+        tail_cache = {}
+    else:
+        def body_c(carry, inp):
+            y, aux = carry
+            gp, gc = inp
+            new_gc = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                y, c, a = blocks.block_apply(kind, gp[str(i)], cfg, y, ctx,
+                                             gc[str(i)])
+                new_gc[str(i)] = c
+                aux = aux + a
+            return (y, aux), new_gc
+
+        (x, aux), new_groups = jax.lax.scan(
+            body_c, (x, aux0), (p["groups"], cache["groups"]),
+            unroll=_UNROLL)
+        new_cache = dict(cache, groups=new_groups)
+        tail_cache = cache.get("tail", {})
+
+    if "tail" in p:
+        new_tail = {}
+        for i, kind in enumerate(cfg.tail_blocks):
+            c_in = tail_cache.get(str(i)) if cache is not None else None
+            x, c, a = blocks.block_apply(kind, p["tail"][str(i)], cfg, x,
+                                         ctx, c_in)
+            new_tail[str(i)] = c
+            aux = aux + a
+        if cache is not None:
+            new_cache["tail"] = new_tail
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Training / full-sequence forward
+# ---------------------------------------------------------------------------
+
+def forward(p: Params, cfg: ModelConfig, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            impl: str = "ref", remat: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+    """tokens: [B, Tt] -> (logits [B, T, V], moe_aux)."""
+    x = _embed(p, cfg, tokens)
+    prefix_len = 0
+    if cfg.num_prefix_tokens and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = cfg.num_prefix_tokens
+    enc_out = (_encode(p, cfg, enc_frames, impl)
+               if cfg.is_encdec and enc_frames is not None else None)
+    ctx = _make_ctx(cfg, x.shape[1], enc_out, impl, prefix_len)
+    x, _, aux = _run_blocks(p, cfg, x, ctx, None, remat=remat)
+    x = common.apply_norm(p["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    return _head(p, cfg, x), aux
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
+            impl: str = "ref", aux_weight: float = 0.01, remat: bool = False
+            ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """batch: tokens [B,T], targets [B,T], loss_mask f32[B,T] (+ stub inputs)."""
+    logits, aux = forward(
+        p, cfg, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_frames=batch.get("enc_frames"), impl=impl, remat=remat)
+    # Prefix positions carry no next-token loss (logits cover prefix + text).
+    logits = logits[:, -batch["tokens"].shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    xent = -jnp.sum(tgt * mask) / denom
+    total = xent + aux_weight * aux
+    return total, {"xent": xent, "moe_aux": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    groups = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        one = blocks.cache_init(kind, cfg, batch, max_len, dtype)
+        groups[str(i)] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.pattern_groups,) + x.shape)
+            .copy() if hasattr(x, "shape") else x, one)
+    cache: dict[str, Any] = {"groups": groups}
+    tail = {}
+    for i, kind in enumerate(cfg.tail_blocks):
+        tail[str(i)] = blocks.cache_init(kind, cfg, batch, max_len, dtype)
+    if tail:
+        cache["tail"] = tail
+    return cache
+
+
+def prefill(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            impl: str = "ref") -> tuple[jax.Array, Params]:
+    """Uniform-length prompt [B, P] -> (last-position logits [B, V], cache)."""
+    x = _embed(p, cfg, tokens)
+    prefix_len = 0
+    if cfg.num_prefix_tokens and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = cfg.num_prefix_tokens
+    enc_out = (_encode(p, cfg, enc_frames, impl)
+               if cfg.is_encdec and enc_frames is not None else None)
+    ctx = _make_ctx(cfg, x.shape[1], enc_out, impl, prefix_len)
+    ctx = ctx._replace(mode="prefill")
+    x, cache, _ = _run_blocks(p, cfg, x, ctx, cache)
+    x = common.apply_norm(p["final_norm"], x[:, -1:], cfg.norm_type,
+                          cfg.norm_eps)
+    return _head(p, cfg, x)[:, 0], cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, token: jax.Array, cache: Params,
+                pos: jax.Array, impl: str = "ref"
+                ) -> tuple[jax.Array, Params]:
+    """token: i32[B]; pos: i32[B] cache fill -> (logits [B, V], cache)."""
+    x = _embed(p, cfg, token[:, None])
+    ctx = BlockCtx(positions=pos[:, None], mask_full=None, mask_local=None,
+                   mode="decode", pos=pos, impl=impl)
+    x, cache, _ = _run_blocks(p, cfg, x, ctx, cache)
+    x = common.apply_norm(p["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    return _head(p, cfg, x)[:, 0], cache

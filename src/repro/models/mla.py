@@ -1,0 +1,149 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed to a shared latent c_kv (rank ``kv_lora_rank``) plus a
+small decoupled-RoPE key shared across heads — the cache stores only
+[B, S, r + rope_dim] instead of [B, S, 2·H·head_dim].
+
+Decode uses the *weight-absorption* identity: q_nopeᵀ·(c_kv·W_uk) =
+(q_nope·W_ukᵀ)ᵀ·c_kv, so attention runs directly against the compressed
+cache with no per-step decompression — the paper's serving trick, and the
+reason MLA decode is memory-roofline-friendly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dkv": common.dense_init(ks[0], d, m.kv_lora_rank),
+        "w_kr": common.dense_init(ks[1], d, m.rope_head_dim),
+        "w_uk": common.dense_init(ks[2], m.kv_lora_rank, h * m.nope_head_dim),
+        "w_uv": common.dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim),
+        "w_q": common.dense_init(ks[4], d, h * (m.nope_head_dim + m.rope_head_dim)),
+        "w_o": common.dense_init(ks[5], h * m.v_head_dim, d),
+        "kv_norm": common.norm_init(m.kv_lora_rank, "rmsnorm"),
+    }
+
+
+def _queries(p, cfg, x, positions):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    q = common.dense(p["w_q"], x).reshape(b, t, h, m.nope_head_dim + m.rope_head_dim)
+    q = q.transpose(0, 2, 1, 3)                                  # [B,H,T,*]
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg, x, positions):
+    ckv = common.apply_norm(p["kv_norm"], common.dense(p["w_dkv"], x),
+                            "rmsnorm", cfg.norm_eps)             # [B,T,r]
+    krope = common.apply_rope(common.dense(p["w_kr"], x)[:, None],
+                              positions, cfg.rope_theta)[:, 0]   # [B,T,rope]
+    return ckv, krope
+
+
+def forward(p: Params, cfg: ModelConfig, x: jax.Array,
+            mask, positions: jax.Array, impl: str = "ref",
+            chunked: bool = False, prefix_len: int = 0) -> jax.Array:
+    """Train/prefill path (expanded keys/values).
+
+    The two-term MLA logits (q_nope·k_nope + q_rope·k_rope) are expressed as
+    one contraction over concat([nope; rope]) so the shared (chunked) SDPA —
+    and its 32k-safe online softmax — applies unchanged.
+    """
+    from repro.models import attention
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    ckv, krope = _latents(p, cfg, x, positions)
+    k_nope = (ckv @ p["w_uk"]["w"].astype(ckv.dtype)).reshape(
+        b, t, h, m.nope_head_dim).transpose(0, 2, 1, 3)
+    v = (ckv @ p["w_uv"]["w"].astype(ckv.dtype)).reshape(
+        b, t, h, m.v_head_dim).transpose(0, 2, 1, 3)
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kc = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, None], (b, h, t, m.rope_head_dim)
+                                  ).astype(k_nope.dtype)], axis=-1)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    out = attention._sdpa(qc, kc, v, mask, scale, impl, chunked=chunked,
+                          prefix_len=prefix_len)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, h * m.v_head_dim)
+    return common.dense(p["w_o"], out.astype(x.dtype))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+    }
+
+
+def prefill(p, cfg, x, cache, mask, positions, impl="ref", chunked=False,
+            prefix_len=0):
+    y = forward(p, cfg, x, mask, positions, impl, chunked=chunked,
+                prefix_len=prefix_len)
+    ckv, krope = _latents(p, cfg, x, positions)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+        "krope": jax.lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0)),
+    }
+    return y, cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+                pos: jax.Array, impl: str = "ref") -> tuple[jax.Array, Params]:
+    """Absorbed-weight decode against the compressed cache.  x: [B,1,d]."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    q_nope, q_rope = _queries(p, cfg, x, pos[:, None])            # [B,H,1,*]
+    ckv_t, krope_t = _latents(p, cfg, x, pos[:, None])            # [B,1,*]
+    # One-hot masked write (not a scatter): partitions cleanly when the
+    # cache is sequence-sharded (see sharding/partition.py mla_cache="seq").
+    s_len = cache["ckv"].shape[1]
+    oh = (jnp.arange(s_len, dtype=jnp.int32)[None] == pos[:, None])[..., None]
+    ckv_c = jnp.where(oh, ckv_t.astype(cache["ckv"].dtype), cache["ckv"])
+    krope_c = jnp.where(oh, krope_t.astype(cache["krope"].dtype),
+                        cache["krope"])
+    # Absorb W_uk into the query: q_abs[b,h,r] = Σ_n q_nope · W_uk[r, h, n].
+    # fp32 throughout: the absorbed path reorders contractions vs the train
+    # path, so bf16 intermediates would not round identically.
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, :, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bsr->bhs", q_rope[:, :, 0], krope_c,
+                           preferred_element_type=jnp.float32)) * scale
+    s = ckv_c.shape[1]
+    valid = jnp.arange(s)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, ckv_c.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)          # latent ctx
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return common.dense(p["w_o"], out), {"ckv": ckv_c, "krope": krope_c}

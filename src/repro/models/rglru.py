@@ -1,0 +1,97 @@
+"""Griffin recurrent block: causal depthwise conv + RG-LRU + gated output
+(arXiv:2402.19427).  Used by recurrentgemma in a 1:2 attn:recurrent pattern.
+
+Train path scans the diagonal recurrence with repro.kernels (Pallas chunked
+scan on TPU, lax.scan reference elsewhere); decode is an O(1) state update —
+the reason `long_500k` is runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Params = Any
+C_GATE = 8.0
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 7)
+    return {
+        "in_gate": common.dense_init(ks[0], d, w),        # GeLU branch
+        "in_rec": common.dense_init(ks[1], d, w),         # recurrence branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+                   * cfg.conv_width ** -0.5).astype(common.PARAM_DTYPE),
+        "conv_b": jnp.zeros((w,), common.PARAM_DTYPE),
+        "gate_i": common.dense_init(ks[3], w, w),         # input gate
+        "gate_r": common.dense_init(ks[4], w, w),         # recurrence gate
+        # softplus(log_lambda) ≈ decay; init so a^c ≈ 0.9..0.999
+        "log_lambda": jnp.asarray(
+            jax.random.uniform(ks[5], (w,), jnp.float32, -4.6, -0.7)),
+        "out": common.dense_init(ks[6], w, d),
+    }
+
+
+def _causal_conv(p: Params, x: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv, width cw.  x: [B,T,W]; state: [B,cw-1,W]."""
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # [B, T+cw-1, W]
+    y = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+            for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad[:, :0]
+    return y + p["conv_b"].astype(x.dtype), new_state
+
+
+def _rglru_coeffs(p: Params, u: jax.Array):
+    """Decay a_t and driven input b_t for h_t = a_t h_{t-1} + b_t."""
+    i_t = jax.nn.sigmoid(common.dense(p["gate_i"], u).astype(jnp.float32))
+    r_t = jax.nn.sigmoid(common.dense(p["gate_r"], u).astype(jnp.float32))
+    log_a = -C_GATE * r_t * jax.nn.softplus(p["log_lambda"])[None, None, :]
+    a_t = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.clip(1.0 - a_t ** 2, 1e-9)) * (i_t * u.astype(jnp.float32))
+    return a_t, b_t
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    w = cfg.rglru_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+
+
+def forward(p: Params, cfg: ModelConfig, x: jax.Array,
+            cache: Params | None = None, impl: str = "ref"
+            ) -> tuple[jax.Array, Params | None]:
+    """Full-sequence path.  x: [B, T, d]."""
+    gate = jax.nn.gelu(common.dense(p["in_gate"], x))
+    u = common.dense(p["in_rec"], x)
+    conv_state = None if cache is None else cache["conv"]
+    u, new_conv = _causal_conv(p, u, conv_state)
+    a_t, b_t = _rglru_coeffs(p, u)
+    h0 = (jnp.zeros((x.shape[0], cfg.rglru_width), jnp.float32)
+          if cache is None else cache["h"])
+    h, h_last = kops.linear_scan(a_t, b_t, h0, use_pallas=(impl == "pallas"))
+    y = common.dense(p["out"], gate * h.astype(x.dtype))
+    new_cache = None if cache is None else {"h": h_last, "conv": new_conv}
+    return y, new_cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+                pos: jax.Array, impl: str = "ref") -> tuple[jax.Array, Params]:
+    """One-token step.  x: [B, 1, d] — O(1) state update."""
+    gate = jax.nn.gelu(common.dense(p["in_gate"], x))
+    u = common.dense(p["in_rec"], x)
+    u, new_conv = _causal_conv(p, u, cache["conv"])
+    a_t, b_t = _rglru_coeffs(p, u)                           # [B,1,W]
+    h = a_t[:, 0] * cache["h"] + b_t[:, 0]
+    y = common.dense(p["out"], gate * h[:, None].astype(x.dtype))
+    return y, {"h": h, "conv": new_conv}

@@ -1,0 +1,211 @@
+"""xLSTM blocks: sLSTM (scalar memory, recurrent gates) and mLSTM (matrix
+memory, parallelizable) — arXiv:2405.04517.  xlstm-125m alternates them.
+
+Both use the paper's stabilized exponential gating (running max m_t keeps
+exp() bounded).  sLSTM has true recurrent weight matrices (block-diagonal per
+head), so it scans serially; mLSTM has no hidden-to-gate recurrence and keeps
+a [H, Dh, Dh] matrix state.  Decode is an O(1) state update for both —
+xlstm runs the `long_500k` shape for exactly this reason.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+Params = Any
+
+# Chunked time scan: a flat lax.scan saves every per-step carry for the
+# backward pass — for mLSTM that is a [B, H, dh, dh] matrix PER TOKEN
+# (≈150 GB/device at train_4k).  Nesting the scan (outer over chunks, inner
+# rematerialized) keeps only chunk-boundary carries and recomputes inside,
+# cutting saved-carry memory by ~SCAN_CHUNK× for one extra forward of the
+# cell.  Exact same math (§Perf extra iteration in EXPERIMENTS.md).
+SCAN_CHUNK = 64
+
+
+def _time_scan(step, state, xs):
+    """lax.scan over time with chunk-remat when T divides SCAN_CHUNK."""
+    t = jax.tree.leaves(xs)[0].shape[0]
+    if t <= SCAN_CHUNK or t % SCAN_CHUNK != 0:
+        return jax.lax.scan(step, state, xs)
+    n_chunks = t // SCAN_CHUNK
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((n_chunks, SCAN_CHUNK) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def inner(st, xc):
+        return jax.lax.scan(step, st, xc)
+
+    state, ys_c = jax.lax.scan(inner, state, xs_c)
+    ys = jax.tree.map(
+        lambda y: y.reshape((t,) + y.shape[2:]), ys_c)
+    return state, ys
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    scale = d ** -0.5
+    # 4 gates (i, f, z, o): input weights [d, 4d]; recurrent weights are
+    # block-diagonal per head [H, dh, 4*dh].
+    return {
+        "w_in": common.dense_init(ks[0], d, 4 * d),
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+              * dh ** -0.5).astype(common.PARAM_DTYPE),
+        "out": common.dense_init(ks[2], d, d),
+        "norm": common.norm_init(d, "rmsnorm"),
+    }
+
+
+def slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "m": z() - 10.0, "h": z()}
+
+
+def _slstm_cell(p, cfg, wx_t, state):
+    """wx_t: [B, 4d] precomputed input contribution; state dict of [B, d]."""
+    b = wx_t.shape[0]
+    h_heads = state["h"].reshape(b, cfg.num_heads, -1).astype(jnp.float32)
+    rh = jnp.einsum("bhd,hde->bhe", h_heads,
+                    p["r"].astype(jnp.float32)).reshape(b, -1)   # [B, 4d]
+    pre = wx_t.astype(jnp.float32) + rh
+    i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_p + state["m"], i_p)                   # log-space
+    i_g = jnp.exp(i_p - m_new)
+    f_g = jnp.exp(f_p + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * jnp.tanh(z_p)
+    n = f_g * state["n"] + i_g
+    h = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "m": m_new, "h": h}
+
+
+def slstm_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                  state: Params | None = None
+                  ) -> tuple[jax.Array, Params | None]:
+    b, t, d = x.shape
+    keep_state = state is not None
+    if state is None:
+        state = slstm_state(cfg, b)
+    wx = common.dense(p["w_in"], x)                              # [B,T,4d]
+
+    def step(s, wx_t):
+        s = _slstm_cell(p, cfg, wx_t, s)
+        return s, s["h"]
+
+    state, hs = _time_scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                   # [B,T,d]
+    y = common.apply_norm(p["norm"], y, "rmsnorm", cfg.norm_eps)
+    return common.dense(p["out"], y), (state if keep_state else None)
+
+
+def slstm_decode(p, cfg, x, state, pos=None):
+    wx = common.dense(p["w_in"], x)[:, 0]
+    state = _slstm_cell(p, cfg, wx, state)
+    y = state["h"][:, None].astype(x.dtype)
+    y = common.apply_norm(p["norm"], y, "rmsnorm", cfg.norm_eps)
+    return common.dense(p["out"], y), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    up = int(cfg.proj_factor * d)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_mlstm": common.dense_init(ks[0], d, up),
+        "up_gate": common.dense_init(ks[1], d, up),
+        "wq": common.dense_init(ks[2], up, up),
+        "wk": common.dense_init(ks[3], up, up),
+        "wv": common.dense_init(ks[4], up, up),
+        "w_if": common.dense_init(ks[5], up, 2 * cfg.num_heads),
+        "down": common.dense_init(ks[6], up, d),
+        "norm": common.norm_init(up, "rmsnorm"),
+    }
+
+
+def mlstm_state(cfg: ModelConfig, batch: int) -> Params:
+    h = cfg.num_heads
+    dh = int(cfg.proj_factor * cfg.d_model) // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32) - 10.0,
+    }
+
+
+def _mlstm_cell(state, q_t, k_t, v_t, i_p, f_p):
+    """One step.  q/k/v: [B,H,dh]; i_p/f_p: [B,H] pre-activations."""
+    f_log = jax.nn.log_sigmoid(f_p.astype(jnp.float32))
+    m_new = jnp.maximum(f_log + state["m"], i_p.astype(jnp.float32))
+    i_g = jnp.exp(i_p - m_new)[..., None]                        # [B,H,1]
+    f_g = jnp.exp(f_log + state["m"] - m_new)[..., None]
+    kf, vf, qf = (k_t.astype(jnp.float32), v_t.astype(jnp.float32),
+                  q_t.astype(jnp.float32))
+    c = f_g[..., None] * state["C"] + i_g[..., None] * (
+        vf[..., :, None] * kf[..., None, :])                     # [B,H,dh,dh]
+    n = f_g * state["n"] + i_g * kf
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)), 1.0)
+    h_t = jnp.einsum("bhde,bhe->bhd", c, qf) / denom[..., None]
+    return {"C": c, "n": n, "m": m_new}, h_t
+
+
+def _mlstm_qkvif(p, cfg, xu):
+    b, t, up = xu.shape
+    h = cfg.num_heads
+    dh = up // h
+    split = lambda z: z.reshape(b, t, h, dh)
+    q = split(common.dense(p["wq"], xu))
+    k = split(common.dense(p["wk"], xu)) * dh ** -0.5
+    v = split(common.dense(p["wv"], xu))
+    gates = common.dense(p["w_if"], xu).reshape(b, t, 2, h)
+    return q, k, v, gates[:, :, 0], gates[:, :, 1]
+
+
+def mlstm_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                  state: Params | None = None
+                  ) -> tuple[jax.Array, Params | None]:
+    b, t, d = x.shape
+    keep_state = state is not None
+    if state is None:
+        state = mlstm_state(cfg, b)
+    xu = common.dense(p["up_mlstm"], x)
+    gate = jax.nn.silu(common.dense(p["up_gate"], x))
+    q, k, v, i_p, f_p = _mlstm_qkvif(p, cfg, xu)
+
+    def step(s, inp):
+        q_t, k_t, v_t, ip_t, fp_t = inp
+        s, h_t = _mlstm_cell(s, q_t, k_t, v_t, ip_t, fp_t)
+        return s, h_t
+
+    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (q, k, v, i_p, f_p))
+    state, hs = _time_scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, t, -1).astype(x.dtype)
+    h = common.apply_norm(p["norm"], h, "rmsnorm", cfg.norm_eps)
+    y = common.dense(p["down"], h * gate)
+    return y, (state if keep_state else None)
+
+
+def mlstm_decode(p, cfg, x, state, pos=None):
+    xu = common.dense(p["up_mlstm"], x)
+    gate = jax.nn.silu(common.dense(p["up_gate"], x))
+    q, k, v, i_p, f_p = _mlstm_qkvif(p, cfg, xu)
+    state, h_t = _mlstm_cell(state, q[:, 0], k[:, 0], v[:, 0],
+                             i_p[:, 0], f_p[:, 0])
+    b = x.shape[0]
+    h = h_t.reshape(b, 1, -1).astype(x.dtype)
+    h = common.apply_norm(p["norm"], h, "rmsnorm", cfg.norm_eps)
+    return common.dense(p["down"], h * gate), state

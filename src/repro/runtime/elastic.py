@@ -1,0 +1,139 @@
+"""Elastic, fault-tolerant work distribution via the CRDT TodoBoard.
+
+The paper's TODO-claim protocol, reused as the training control plane:
+*data shards* are the TODOs.  Workers claim shards through the optimistic
+write-verify protocol (at-most-one-winner ⇒ no duplicated work in the steady
+state), heartbeat through a G-counter, and any live worker can reclaim
+shards whose owner went silent (the paper's 120 s liveness rule).  Because
+shard → batches is a pure function (data/pipeline.py), a reclaimed shard
+reproduces identical data, so worker loss never skews the data distribution
+— duplicated work on the loss boundary is idempotent by construction.
+
+Workers may join or leave between claims (elastic scaling); no central
+scheduler exists — the merged CRDT state IS the schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gset, merge as merge_mod, protocol, todo
+from repro.core.clock import Lamport
+
+
+@dataclass
+class WorkQueueState:
+    board: todo.TodoBoard
+    heartbeats: gset.GCounter          # monotone wall-clock per worker
+    completed: gset.GSet               # shard done flags (redundant w/ board,
+                                       # kept as the idempotent commit record)
+
+    def merge(self, other: "WorkQueueState") -> "WorkQueueState":
+        return WorkQueueState(
+            board=merge_mod.join(self.board, other.board),
+            heartbeats=self.heartbeats.join(other.heartbeats),
+            completed=self.completed.join(other.completed),
+        )
+
+
+def make_queue(num_shards: int, num_workers: int) -> WorkQueueState:
+    board = todo.empty(num_shards)
+    lam = Lamport.create(client=1023)
+    deps = jnp.zeros((num_shards,), bool)
+    for k in range(num_shards):
+        lam = lam.tick()
+        board = todo.post(board, k, deps, lam.time, lam.client)
+    return WorkQueueState(
+        board=board,
+        heartbeats=gset.GCounter.zeros(max(num_workers + 1, 8)),
+        completed=gset.GSet.empty(num_shards),
+    )
+
+
+class Worker:
+    """One elastic worker's view of the queue.
+
+    ``sync_fn`` plays the relay role: it takes this worker's state and
+    returns the merged global state (in-process tests pass a shared-fold;
+    a real deployment merges through collectives or a gossip mesh —
+    the protocol is substrate-agnostic, paper §3.2).
+    """
+
+    def __init__(self, worker_id: int, state: WorkQueueState,
+                 sync_fn: Callable[[WorkQueueState], WorkQueueState],
+                 *, stale_timeout: int = 120):
+        assert worker_id >= 1
+        self.id = worker_id
+        self.state = state
+        self.sync = sync_fn
+        self.lamport = Lamport.create(worker_id)
+        self.stale_timeout = stale_timeout
+
+    def heartbeat(self, now: int) -> None:
+        self.state.heartbeats = self.state.heartbeats.bump_to(self.id, now)
+        self.state = self.sync(self.state)
+
+    def try_claim_shard(self, now: int) -> Optional[int]:
+        """Claim protocol round; returns shard id on success."""
+        def merge_board(b):
+            s = self.sync(WorkQueueState(b, self.state.heartbeats,
+                                         self.state.completed))
+            self.state = s
+            return s.board
+
+        out = protocol.try_claim(self.state.board, self.lamport,
+                                 jnp.int32(now), merge_board)
+        self.lamport = out.lamport
+        self.state.board = out.board
+        if bool(out.won):
+            return int(out.todo_id)
+        return None
+
+    def complete_shard(self, shard_id: int) -> None:
+        def merge_board(b):
+            s = self.sync(WorkQueueState(b, self.state.heartbeats,
+                                         self.state.completed))
+            self.state = s
+            return s.board
+
+        self.state.completed = self.state.completed.add(jnp.int32(shard_id))
+        board, self.lamport = protocol.complete(
+            self.state.board, self.lamport, jnp.int32(shard_id), merge_board)
+        self.state.board = board
+
+    def reclaim_stale(self, now: int) -> int:
+        """Reset claims past the timeout (paper's 120 s liveness rule)."""
+        def merge_board(b):
+            s = self.sync(WorkQueueState(b, self.state.heartbeats,
+                                         self.state.completed))
+            self.state = s
+            return s.board
+
+        before = int(jnp.sum(self.state.board.status == todo.CLAIMED))
+        board, self.lamport = protocol.reclaim_stale(
+            self.state.board, self.lamport, jnp.int32(now),
+            jnp.int32(self.stale_timeout), merge_board)
+        self.state.board = board
+        after = int(jnp.sum(board.status == todo.CLAIMED))
+        return before - after
+
+    def stragglers(self, now: int, lag: int) -> list[int]:
+        """Workers whose heartbeat lags ``now`` by more than ``lag``."""
+        hb = np.asarray(self.state.heartbeats.counts)
+        return [i for i in range(1, len(hb))
+                if hb[i] > 0 and now - int(hb[i]) > lag]
+
+    def done(self) -> bool:
+        return bool(todo.all_done(self.state.board))
+
+
+def make_shared_fold_sync(shared: dict) -> Callable:
+    """In-process 'relay': fold every worker's state into a shared cell."""
+    def sync(state: WorkQueueState) -> WorkQueueState:
+        shared["state"] = (state if "state" not in shared
+                           else shared["state"].merge(state))
+        return shared["state"]
+    return sync

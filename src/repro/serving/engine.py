@@ -1,0 +1,195 @@
+"""Serving engine: prefill/decode steps, host-side generation loop, and the
+fused decode+coordination step (the paper's architecture on a mesh).
+
+``make_serve_step`` builds the pure function the multi-pod dry-run lowers for
+decode shapes.  ``make_fused_serve_step`` additionally threads the CRDT
+coordination state through the step: each data-parallel replica hosts a set
+of agents (its decode-batch rows), appends their tokens to its own SlotDoc
+replica, and the replicas converge through a pmax (or all-gather) collective
+merge — observation-driven coordination fused into the serving step, with
+the collective playing the role of the paper's WebSocket relay.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import doc as doc_mod
+from repro.core import gset, merge as merge_mod
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+def sample_token(logits: jax.Array, rng: jax.Array,
+                 temperature: float = 0.0) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+
+
+def make_serve_step(cfg: ModelConfig, *, impl: str = "ref",
+                    temperature: float = 0.0):
+    """(params, cache, token[B], pos[B], rng) -> (next_token, cache, pos+1)."""
+
+    def serve_step(params, cache, token, pos, rng):
+        logits, cache = lm.decode_step(params, cfg, token, cache, pos,
+                                       impl=impl)
+        nxt = sample_token(logits, rng, temperature)
+        return nxt, cache, pos + 1
+
+    return serve_step
+
+
+def make_prefill_fn(cfg: ModelConfig, *, impl: str = "ref"):
+    def prefill_fn(params, cache, tokens, prefix_embeds=None, enc_frames=None):
+        return lm.prefill(params, cfg, tokens, cache,
+                          prefix_embeds=prefix_embeds, enc_frames=enc_frames,
+                          impl=impl)
+
+    return prefill_fn
+
+
+# ---------------------------------------------------------------------------
+# Fused decode + CRDT coordination
+# ---------------------------------------------------------------------------
+
+def replicate_coord(coord: Any, n_replicas: int) -> Any:
+    """Stack a coordination state into per-replica rows [R, ...]."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_replicas,) + x.shape), coord)
+
+
+def make_coord_merge(mesh: Mesh, dp_axes: tuple[str, ...],
+                     strategy: str = "pmax"):
+    """Collective merge of stacked per-replica CRDT state (leaves [R, ...])."""
+
+    def local(stacked):
+        state = jax.tree.map(lambda x: jnp.squeeze(x, 0), stacked)
+        merged = merge_mod.collective_merge(state, dp_axes, strategy)
+        return jax.tree.map(lambda x: x[None], merged)
+
+    def merge_fn(coord_stacked):
+        specs = jax.tree.map(
+            lambda x: P(dp_axes, *([None] * (x.ndim - 1))), coord_stacked)
+        return jax.shard_map(local, mesh=mesh, in_specs=(specs,),
+                             out_specs=specs, check_vma=False)(coord_stacked)
+
+    return merge_fn
+
+
+def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
+                          dp_axes: tuple[str, ...], *, impl: str = "ref",
+                          merge_strategy: str = "pmax",
+                          merge_every: int = 1):
+    """Decode one token per agent stream AND converge coordination state.
+
+    Inputs (leading dims):
+      params                     model-sharded
+      cache                      batch-sharded over dp_axes
+      token, pos: [B]            agent streams (B rows = N agents × replicas)
+      slots: [B] i32             each agent's claimed doc slot
+      active: [B] bool           streams still generating
+      coord: {doc: SlotDoc, heartbeats: GCounter} leaves stacked [R, ...]
+      step: i32                  global step (for merge cadence)
+
+    The local replica appends its rows' tokens into its own doc replica;
+    the collective join then makes every replica observe everyone's edits —
+    deterministic convergence with one-collective staleness.  ``merge_every``
+    trades staleness for collective bytes (a §Perf axis; the paper's 50 ms
+    sync delay is the analogous knob).
+    """
+    merge_fn = make_coord_merge(mesh, dp_axes, merge_strategy)
+    n_rep = 1
+    for a in dp_axes:
+        n_rep *= mesh.shape[a]
+
+    def append_local(coord_stacked, token, slots, active):
+        def local(stacked, tok, sl, act):
+            state = jax.tree.map(lambda x: jnp.squeeze(x, 0), stacked)
+            d = doc_mod.append_token_batch(state["doc"], sl, tok, act)
+            hb = state["heartbeats"]
+            hb = gset.GCounter(hb.counts + 1)          # every worker beats
+            out = dict(state, doc=d, heartbeats=hb)
+            return jax.tree.map(lambda x: x[None], out)
+
+        specs = jax.tree.map(
+            lambda x: P(dp_axes, *([None] * (x.ndim - 1))), coord_stacked)
+        bspec = P(dp_axes)
+        return jax.shard_map(local, mesh=mesh,
+                             in_specs=(specs, bspec, bspec, bspec),
+                             out_specs=specs, check_vma=False)(
+            coord_stacked, token, slots, active)
+
+    def serve_step(params, cache, token, pos, slots, active, coord, step):
+        logits, cache = lm.decode_step(params, cfg, token, cache, pos,
+                                       impl=impl)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, token)
+        coord = append_local(coord, nxt, slots, active)
+        if merge_every == 1:
+            coord = merge_fn(coord)
+        else:
+            coord = jax.lax.cond(step % merge_every == 0,
+                                 merge_fn, lambda c: c, coord)
+        pos = pos + jnp.where(active, 1, 0)
+        return nxt, cache, pos, coord
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Host-side engine (CPU benchmarks / agents layer)
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Single-process serving engine wrapping jitted prefill/decode.
+
+    Supports continuous batching at token granularity: rows carry per-row
+    position and active flags; new requests can be swapped into inactive
+    rows between steps.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *, batch: int,
+                 max_len: int, impl: str = "ref", temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_fn(cfg, impl=impl))
+        self._step = jax.jit(make_serve_step(cfg, impl=impl,
+                                             temperature=temperature))
+        self.reset()
+
+    def reset(self):
+        self.cache = lm.init_cache(self.cfg, self.batch, self.max_len)
+        self.pos = jnp.zeros((self.batch,), jnp.int32)
+        self.token = jnp.zeros((self.batch,), jnp.int32)
+        self.rng = jax.random.PRNGKey(0)
+
+    def prefill(self, tokens: jax.Array, **stubs):
+        """Uniform prompt for all rows. tokens: [B, P]."""
+        logits, self.cache = self._prefill(self.params, self.cache, tokens,
+                                           **stubs)
+        self.pos = jnp.full((self.batch,),
+                            tokens.shape[1] + self.cfg.num_prefix_tokens,
+                            jnp.int32)
+        self.token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return self.token
+
+    def step(self) -> jax.Array:
+        self.rng, sub = jax.random.split(self.rng)
+        self.token, self.cache, self.pos = self._step(
+            self.params, self.cache, self.token, self.pos, sub)
+        return self.token
+
+    def generate(self, tokens: jax.Array, steps: int, **stubs) -> jax.Array:
+        outs = [self.prefill(tokens, **stubs)]
+        for _ in range(steps - 1):
+            outs.append(self.step())
+        return jnp.stack(outs, axis=1)

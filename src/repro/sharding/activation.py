@@ -1,0 +1,44 @@
+"""Logical activation-sharding constraints.
+
+Model code stays mesh-agnostic: it annotates activations with *logical* axis
+names; the launcher binds logical names to mesh axes before lowering.  With
+no binding active (CPU smoke tests) the constraint is a no-op.
+
+The one constraint that matters most: logits stay vocab-sharded through the
+fp32 softmax/cross-entropy — without it GSPMD materializes an unsharded
+[B, T, V] fp32 buffer per device (observed: 13 GiB/device for olmo train_4k).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BINDING: dict[str, Optional[str | tuple[str, ...]]] = {}
+
+
+@contextlib.contextmanager
+def bind(mapping: dict[str, Optional[str | tuple[str, ...]]]):
+    """Bind logical axis names -> mesh axes for the enclosed lowering."""
+    global _BINDING
+    old = _BINDING
+    _BINDING = dict(mapping)
+    try:
+        yield
+    finally:
+        _BINDING = old
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    if not _BINDING:
+        return x
+    spec = P(*[_BINDING.get(name) if name else None for name in logical])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def standard_binding(dp_axes: tuple[str, ...], model_axis: str = "model",
+                     seq_parallel: bool = True):
+    return {"batch": dp_axes, "vocab": model_axis, "heads": model_axis,
+            "ffn": model_axis, "seq": model_axis if seq_parallel else None}

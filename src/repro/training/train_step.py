@@ -1,0 +1,72 @@
+"""The jittable training step: loss → grads → AdamW, with optional
+microbatch gradient accumulation and activation rematerialization.
+
+Distribution is entirely declarative: the caller pjits this function with
+the partitioner's param/opt/batch shardings; XLA inserts the gradient
+all-reduce over the (pod, data) axes, the tensor-parallel collectives on
+"model", and the ZeRO-1 reduce-scatter/all-gather from the opt-state specs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamW, AdamWState
+
+Params = Any
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, *, impl: str = "ref",
+                    remat: bool = True, microbatches: int = 1,
+                    aux_weight: float = 0.01):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_for(p, mb):
+        return lm.loss_fn(p, cfg, mb, impl=impl, aux_weight=aux_weight,
+                          remat=remat)
+
+    def train_step(params: Params, opt_state: AdamWState,
+                   batch: dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_for, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, impl: str = "ref"):
+    def eval_step(params: Params, batch):
+        loss, metrics = lm.loss_fn(params, cfg, batch, impl=impl)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device; only launch/dryrun.py
+forces 512 placeholder devices (and only when run as its own process)."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    # Keep hypothesis deadlines off: first call pays jit compile time.
+    from hypothesis import settings, HealthCheck
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")

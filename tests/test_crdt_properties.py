@@ -1,0 +1,269 @@
+"""Property-based tests: every repro.core CRDT is a join-semilattice.
+
+Strong eventual consistency (Shapiro et al. 2011) needs the merge to be
+commutative, associative, and idempotent, and the document to be a pure
+function of the op set.  These are exactly the properties hypothesis checks
+here, over randomly generated replica states and delivery orders.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import doc, gset, lww, merge, rga
+
+K = 8          # registers per bank
+C = 4          # clients
+L = 12         # log capacity
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+def lww_banks():
+    """A random LWWBank: some registers written with random (clock, client).
+
+    Reachable-state invariants encoded in the generator: unwritten registers
+    (clock == 0) hold default payloads, and the payload is a pure function of
+    the op identity (a well-behaved client never reuses a clock, so two
+    replicas holding the same (clock, client) hold the same value).
+    """
+    entry = st.tuples(
+        st.integers(0, 50),        # clock (0 = unset)
+        st.integers(1, C),         # client
+    )
+    return st.lists(entry, min_size=K, max_size=K).map(_mk_bank)
+
+
+def _mk_bank(entries):
+    clocks, clients = zip(*entries)
+    clocks = np.asarray(clocks, np.int32)
+    clients = np.where(clocks > 0, np.asarray(clients, np.int32), 0)
+    values = np.where(clocks > 0, (clocks * 7 + clients * 13) % 11 - 5, 0)
+    return lww.LWWBank(
+        clock=jnp.asarray(clocks),
+        client=jnp.asarray(clients),
+        payload={"v": jnp.asarray(values.astype(np.int32))},
+    )
+
+
+def gcounters():
+    return st.lists(st.integers(0, 20), min_size=C, max_size=C).map(
+        lambda xs: gset.GCounter(jnp.asarray(np.asarray(xs, np.int32))))
+
+
+def glogs():
+    """Random per-client logs drawn from one shared 'ground truth' history.
+
+    Append-only correctness: all replicas agree on row contents; they differ
+    only in how much of each row they have observed.  The shared history is a
+    deterministic function of nothing (fixed seed) so every generated replica
+    is a valid partial view of the same execution.
+    """
+    return st.lists(st.integers(0, L), min_size=C, max_size=C).map(_mk_glog)
+
+
+_GROUND_TRUTH = np.random.default_rng(1234).integers(0, 99, size=(C, L)).astype(np.int32)
+
+
+def _mk_glog(counts):
+    counts = np.asarray(counts, np.int32)
+    mask = np.arange(L)[None, :] < counts[:, None]
+    data = np.where(mask, _GROUND_TRUTH, 0)
+    return gset.GLog(count=jnp.asarray(counts),
+                     fields={"x": jnp.asarray(data)})
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Semilattice laws
+# ---------------------------------------------------------------------------
+
+@given(lww_banks(), lww_banks())
+def test_lww_merge_commutative(a, b):
+    assert _trees_equal(lww.merge(a, b), lww.merge(b, a))
+
+
+@given(lww_banks(), lww_banks(), lww_banks())
+def test_lww_merge_associative(a, b, c):
+    assert _trees_equal(lww.merge(lww.merge(a, b), c),
+                        lww.merge(a, lww.merge(b, c)))
+
+
+@given(lww_banks())
+def test_lww_merge_idempotent(a):
+    assert _trees_equal(lww.merge(a, a), a)
+
+
+@given(gcounters(), gcounters(), gcounters())
+def test_gcounter_laws(a, b, c):
+    assert _trees_equal(a.join(b), b.join(a))
+    assert _trees_equal(a.join(b).join(c), a.join(b.join(c)))
+    assert _trees_equal(a.join(a), a)
+
+
+@given(glogs(), glogs(), glogs())
+def test_glog_laws(a, b, c):
+    assert _trees_equal(a.join(b), b.join(a))
+    assert _trees_equal(a.join(b).join(c), a.join(b.join(c)))
+    assert _trees_equal(a.join(a), a)
+
+
+@given(glogs(), glogs())
+def test_glog_join_preserves_ground_truth(a, b):
+    j = a.join(b)
+    counts = np.asarray(j.count)
+    data = np.asarray(j.fields["x"])
+    for c in range(C):
+        np.testing.assert_array_equal(
+            data[c, :counts[c]], _GROUND_TRUTH[c, :counts[c]])
+
+
+# ---------------------------------------------------------------------------
+# RGA: convergence is independent of delivery/merge order
+# ---------------------------------------------------------------------------
+
+def _random_session(seed: int, n_rounds: int) -> list[rga.RGA]:
+    """Simulate C clients editing concurrently with random periodic merges.
+
+    Returns the per-client replica states (possibly divergent) at the end.
+    """
+    rs = np.random.default_rng(seed)
+    replicas = [rga.empty(C + 1, L) for _ in range(C)]
+    clocks = [1] * C
+    for _ in range(n_rounds):
+        who = int(rs.integers(0, C))
+        client = who + 1
+        state = replicas[who]
+        toks, oids, n = rga.materialize_jit(state)
+        n = int(n)
+        if n == 0 or rs.random() < 0.5:
+            origin = state.head_oid
+        else:
+            origin = int(oids[int(rs.integers(0, n))])
+        run_len = int(rs.integers(1, 4))
+        buf = np.zeros((4,), np.int32)
+        buf[:run_len] = rs.integers(1, 100, size=run_len)
+        clk = clocks[who]
+        replicas[who] = rga.insert_run(
+            state, client, clk, origin, jnp.asarray(buf), run_len)
+        clocks[who] = clk + run_len
+        if rs.random() < 0.3:   # random pairwise gossip
+            a, b = rs.integers(0, C, size=2)
+            m = rga.merge(replicas[int(a)], replicas[int(b)])
+            replicas[int(a)] = replicas[int(b)] = m
+            mx = int(m.max_clock())
+            clocks[int(a)] = max(clocks[int(a)], mx + 1)
+            clocks[int(b)] = max(clocks[int(b)], mx + 1)
+    return replicas
+
+
+@given(st.integers(0, 10_000), st.permutations(list(range(C))))
+def test_rga_convergence_any_merge_order(seed, perm):
+    replicas = _random_session(seed, 10)
+    # Merge all replicas in two different orders.
+    ordered = [replicas[i] for i in perm]
+    m1 = merge.fold_join(ordered)
+    m2 = merge.fold_join(list(reversed(ordered)))
+    t1, _, n1 = rga.materialize_jit(m1)
+    t2, _, n2 = rga.materialize_jit(m2)
+    assert int(n1) == int(n2)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+@given(st.integers(0, 10_000))
+def test_rga_materialize_pure_function_of_opset(seed):
+    replicas = _random_session(seed, 8)
+    full = merge.fold_join(replicas)
+    # Joining any replica back in changes nothing (idempotence at scale).
+    again = merge.fold_join([full] + replicas)
+    t1, _, n1 = rga.materialize_jit(full)
+    t2, _, n2 = rga.materialize_jit(again)
+    assert int(n1) == int(n2)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+@given(st.integers(0, 10_000))
+def test_rga_all_tokens_present_none_duplicated(seed):
+    """Zero data loss (RQ3): the converged doc contains every inserted token
+    exactly once."""
+    replicas = _random_session(seed, 10)
+    full = merge.fold_join(replicas)
+    toks, oids, n = rga.materialize_jit(full)
+    n = int(n)
+    assert n == int(jnp.sum(full.count))
+    oids = np.asarray(oids[:n])
+    assert len(set(oids.tolist())) == n     # each op appears exactly once
+
+
+# ---------------------------------------------------------------------------
+# SlotDoc
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.lists(st.integers(1, 9),
+                                                      min_size=1, max_size=4)),
+                min_size=0, max_size=10))
+def test_slotdoc_partial_views_converge(edits):
+    """Replicas observing different prefixes of each slot's history converge."""
+    d = doc.empty(4, 16)
+    history = [d]
+    for slot, toks in edits:
+        buf = np.zeros((4,), np.int32)
+        buf[:len(toks)] = toks
+        d = doc.append(d, slot, jnp.asarray(buf), len(toks))
+        history.append(d)
+    # Any two snapshots of the same execution must join to the later one.
+    for i in range(0, len(history), 2):
+        j = doc.merge(history[i], history[-1])
+        assert _trees_equal(j, history[-1])
+        j2 = doc.merge(history[-1], history[i])
+        assert int(doc.digest(j2)) == int(doc.digest(history[-1]))
+
+
+# ---------------------------------------------------------------------------
+# Observation machinery
+# ---------------------------------------------------------------------------
+
+def test_observe_deltas_and_invalidation():
+    from repro.core import observe
+    import jax.numpy as jnp
+    d = doc.empty(4, 8)
+    snap = observe.snapshot(d)
+    d = doc.append(d, 2, jnp.asarray([7, 8, 0, 0]), 2)
+    changed = np.asarray(observe.changed_mask(snap, d))
+    assert changed.tolist() == [False, False, True, False]
+    deps = jnp.asarray([False, False, True, False])
+    assert bool(observe.invalidations(snap, d, deps))
+    assert int(observe.observation_count(snap, d)) == 2
+    # Non-dep change does not invalidate.
+    assert not bool(observe.invalidations(snap, d,
+                                          jnp.asarray([True, False, False,
+                                                       False])))
+
+
+def test_rga_frontier_delta():
+    from repro.core import observe
+    import jax.numpy as jnp
+    s = rga.empty(3, 8)
+    f0 = observe.rga_frontier(s)
+    s = rga.insert_run(s, 1, 5, s.head_oid, jnp.asarray([1, 2, 3, 0]), 3)
+    mask = np.asarray(observe.rga_delta_mask(s, f0))
+    assert mask.sum() == 3 and mask[1, :3].all()
+
+
+def test_version_vector_laws():
+    from repro.core.clock import VersionVector
+    import jax.numpy as jnp
+    a = VersionVector.zeros(4).advance(jnp.int32(1), jnp.int32(5))
+    b = VersionVector.zeros(4).advance(jnp.int32(2), jnp.int32(3))
+    j = a.join(b)
+    assert bool(j.dominates(a)) and bool(j.dominates(b))
+    assert not bool(a.dominates(b))
+    assert np.asarray(j.counts).tolist() == [0, 5, 3, 0]

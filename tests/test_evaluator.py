@@ -1,0 +1,51 @@
+"""Evaluator agent: conflict scan, auto-reconciliation, scoring."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agents import evaluator
+from repro.core import doc as doc_mod, merge
+
+
+def _doc_with_dup(symbol_tok=5):
+    d = doc_mod.empty(4, 32)
+    # Slot 0 and slot 1 both declare symbol (tok % 64) via tok=5.
+    d = doc_mod.append(d, 0, jnp.asarray([symbol_tok, 7, 0, 0]), 2)
+    d = doc_mod.append(d, 1, jnp.asarray([symbol_tok, 9, 0, 0]), 2)
+    return d
+
+
+def test_scan_finds_duplicates():
+    rep = evaluator.scan(_doc_with_dup())
+    assert len(rep.conflicts) == 1
+    c = rep.conflicts[0]
+    assert (c.first_slot, c.dup_slot) == (0, 1)
+    assert rep.total_declarations == 2
+
+
+def test_reconcile_fixes_and_is_crdt_safe():
+    d = _doc_with_dup()
+    fixed, rep = evaluator.reconcile(d, patch_slot=3)
+    assert rep.fixed == 1 and not rep.flagged
+    # The patch is an ordinary append: merging the patched doc with the
+    # original (any order) yields the patched doc (monotone fix).
+    m1 = merge.join(fixed, d)
+    m2 = merge.join(d, fixed)
+    assert int(doc_mod.digest(m1)) == int(doc_mod.digest(m2)) \
+        == int(doc_mod.digest(fixed))
+    # Patch record: [old_token, dup_slot, fresh_token].
+    toks = np.asarray(fixed.tokens)[3, :3]
+    assert toks[0] == 5 and toks[1] == 1
+    fresh = int(toks[2])
+    assert fresh % 13 == 5 and fresh % 64 != 5 % 64
+
+
+def test_scores_monotone_in_conflicts():
+    clean = doc_mod.empty(2, 16)
+    clean = doc_mod.append(clean, 0, jnp.asarray([5, 1, 0, 0]), 2)
+    s_clean = evaluator.score(clean)
+    s_dup = evaluator.score(_doc_with_dup())
+    assert s_clean["code_quality"] >= s_dup["code_quality"]
+    assert s_clean["conflicts_per_1k"] == 0.0
+    assert s_dup["conflicts_per_1k"] > 0.0

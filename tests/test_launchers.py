@@ -1,0 +1,34 @@
+"""Launcher CLI smoke tests (train/serve entry points)."""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+ENV = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu"}
+
+
+def test_train_launcher_elastic_crash_recovery():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "olmo-1b",
+         "--steps", "8", "--workers", "2", "--fail-worker1-at", "3",
+         "--seq-len", "32", "--batch", "2"],
+        env=ENV, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "worker1: crashed=True" in out.stdout
+    assert "worker2: crashed=False step=8" in out.stdout
+
+
+def test_serve_launcher_json():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "olmo-1b",
+         "--task", "tic_tac_toe", "--mode", "parallel", "--agents", "2",
+         "--json"],
+        env=ENV, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    import json
+    res = json.loads(out.stdout[out.stdout.index("{"):])
+    assert res["parallel"]["converged"] is True
+    assert res["parallel"]["tokens"] > 0

@@ -1,0 +1,204 @@
+"""Runtime tests: checkpointing (atomic, async, GC, validation), elastic
+CRDT work queue (claims, reclaim, stragglers), and the fault-tolerant
+trainer (crash → reclaim → restore → identical convergence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.data.pipeline import DataConfig, shard_batches
+from repro.runtime import checkpoint as ck
+from repro.runtime.elastic import Worker, make_queue, make_shared_fold_sync
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "b": {"c": jnp.arange(7, dtype=jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 5, t)
+    restored, step = ck.restore(tmp_path, t)
+    assert step == 5
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_latest_pointer_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save(tmp_path, s, t, keep=2)
+    assert ck.latest_step(tmp_path) == 4
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_structure_validation(tmp_path):
+    ck.save(tmp_path, 1, _tree())
+    with pytest.raises(ValueError):
+        ck.restore(tmp_path, {"a": jnp.zeros((4, 3))})     # missing leaf
+    with pytest.raises(ValueError):
+        bad = _tree()
+        bad["a"] = jnp.zeros((5, 3))                       # wrong shape
+        ck.restore(tmp_path, bad)
+
+
+def test_async_checkpointer_overlap(tmp_path):
+    acp = ck.AsyncCheckpointer(tmp_path, keep=3)
+    for s in (10, 20):
+        acp.save(s, _tree(s))
+    acp.wait()
+    assert ck.latest_step(tmp_path) == 20
+
+
+def test_partial_write_never_corrupts_latest(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 1, t)
+    # Simulate a crashed write: tmp dir left behind.
+    (tmp_path / ".tmp_step_00000002").mkdir()
+    assert ck.latest_step(tmp_path) == 1
+    restored, step = ck.restore(tmp_path, t)
+    assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# Elastic work queue
+# ---------------------------------------------------------------------------
+
+def test_two_workers_drain_queue_disjointly():
+    shared = {}
+    sync = make_shared_fold_sync(shared)
+    q = make_queue(num_shards=6, num_workers=2)
+    w1, w2 = Worker(1, q, sync), Worker(2, q, sync)
+    got = {1: [], 2: []}
+    for t in range(40):
+        for w in (w1, w2):
+            w.heartbeat(t)
+            s = w.try_claim_shard(t)
+            if s is not None:
+                got[w.id].append(s)
+                w.complete_shard(s)
+        if w1.done() and w2.done():
+            break
+    assert sorted(got[1] + got[2]) == list(range(6))
+    assert not (set(got[1]) & set(got[2]))          # no duplicated shards
+
+
+def test_dead_worker_shard_reclaimed():
+    shared = {}
+    sync = make_shared_fold_sync(shared)
+    q = make_queue(num_shards=2, num_workers=2)
+    w1, w2 = Worker(1, q, sync, stale_timeout=50), Worker(2, q, sync,
+                                                          stale_timeout=50)
+    s1 = w1.try_claim_shard(0)
+    assert s1 is not None
+    # w1 dies.  w2 proceeds; before timeout the shard is locked.
+    s2 = w2.try_claim_shard(1)
+    if s2 is not None:
+        w2.complete_shard(s2)
+    assert w2.try_claim_shard(2) is None
+    # After the timeout w2 reclaims and finishes w1's shard.
+    assert w2.reclaim_stale(100) >= 1
+    s3 = w2.try_claim_shard(101)
+    assert s3 == s1
+    w2.complete_shard(s3)
+    assert w2.done()
+
+
+def test_straggler_detection():
+    shared = {}
+    sync = make_shared_fold_sync(shared)
+    q = make_queue(4, 3)
+    w1, w2 = Worker(1, q, sync), Worker(2, q, sync)
+    w1.heartbeat(100)
+    w2.heartbeat(10)     # lagging
+    assert w1.stragglers(now=100, lag=50) == [2]
+
+
+def test_elastic_join_mid_run():
+    shared = {}
+    sync = make_shared_fold_sync(shared)
+    q = make_queue(num_shards=5, num_workers=4)
+    w1 = Worker(1, q, sync)
+    done = []
+    s = w1.try_claim_shard(0)
+    done.append(s)
+    w1.complete_shard(s)
+    # New worker joins with the *merged* state (observation-driven join).
+    w3 = Worker(3, w1.state, sync)
+    for t in range(1, 20):
+        for w in (w1, w3):
+            sh = w.try_claim_shard(t)
+            if sh is not None:
+                done.append(sh)
+                w.complete_shard(sh)
+        if w1.done():
+            break
+    assert sorted(done) == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant trainer
+# ---------------------------------------------------------------------------
+
+def _tiny_setup(tmp_path, steps=12):
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=32, vocab=128)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, batch_size=2,
+                    shard_size_batches=2)
+    tc = TrainerConfig(steps=steps, checkpoint_every=4,
+                       checkpoint_dir=str(tmp_path), shard_timeout=50)
+    return cfg, dc, tc
+
+
+def test_trainer_runs_and_loss_finite(tmp_path):
+    cfg, dc, tc = _tiny_setup(tmp_path)
+    shared = {}
+    q = make_queue(num_shards=8, num_workers=1)
+    w = Worker(1, q, make_shared_fold_sync(shared))
+    tr = Trainer(cfg, dc, tc)
+    out = tr.run(w, now_fn=lambda: 0)
+    assert not out["crashed"]
+    assert out["step"] == tc.steps
+    losses = [m["loss"] for m in out["metrics"]]
+    assert all(np.isfinite(losses))
+
+
+def test_crash_restart_resumes_from_checkpoint(tmp_path):
+    cfg, dc, tc = _tiny_setup(tmp_path, steps=10)
+    shared = {}
+    sync = make_shared_fold_sync(shared)
+    q = make_queue(num_shards=6, num_workers=2)
+
+    w1 = Worker(1, q, sync, stale_timeout=50)
+    t1 = Trainer(cfg, dc, tc)
+    out1 = t1.run(w1, now_fn=lambda: 0, fail_after_steps=5)
+    assert out1["crashed"] and out1["step"] == 5
+
+    # Survivor restores the checkpoint, reclaims the stale shard, finishes.
+    w2 = Worker(2, shared["state"], sync, stale_timeout=50)
+    t2 = Trainer(cfg, dc, tc)
+    assert t2.maybe_restore()
+    assert t2.step == 4                      # last checkpoint before crash
+    out2 = t2.run(w2, now_fn=lambda: 1000)   # past the stale timeout
+    assert not out2["crashed"]
+    assert out2["step"] == tc.steps
+
+
+def test_reclaimed_shard_data_is_deterministic():
+    dc = DataConfig(vocab_size=97, seq_len=12, batch_size=2,
+                    shard_size_batches=3)
+    a = shard_batches(dc, 4)
+    b = shard_batches(dc, 4)
+    for x, y in zip(a, b):
+        for k in x:
+            np.testing.assert_array_equal(x[k], y[k])

@@ -1,0 +1,96 @@
+"""Partitioner unit tests: spec rules, divisibility guards, FSDP, caches."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+from repro.models import lm
+from repro.sharding.partition import Partitioner
+
+# Specs are pure metadata — a tiny mesh with the production axis names is
+# enough to unit-test the rules (sizes chosen to exercise divisibility).
+pytestmark = pytest.mark.usefixtures()
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Mesh stand-in with arbitrary axis sizes (specs never touch devices)."""
+    def __init__(self, data=16, model=16):
+        self.shape = {"data": data, "model": model}
+        self.axis_names = ("data", "model")
+
+
+def test_attention_param_rules():
+    part = Partitioner(FakeMesh(), fsdp=False)
+    assert part.param_spec(("blk", "attn", "wq", "w"), (1024, 2048)) == \
+        P(None, "model")
+    assert part.param_spec(("blk", "attn", "wo", "w"), (2048, 1024)) == \
+        P("model", None)
+    # Stacked (scan) params get a leading None.
+    assert part.param_spec(("groups", "0", "attn", "wq", "w"),
+                           (8, 1024, 2048)) == P(None, None, "model")
+
+
+def test_divisibility_guard_replicates():
+    part = Partitioner(FakeMesh(model=16), fsdp=False)
+    # MQA kv projection with 1 head * 128 dims = 128 columns: divisible.
+    assert part.param_spec(("a", "wk", "w"), (1024, 128)) == P(None, "model")
+    # Odd vocab (whisper): embed rows not divisible -> replicated.
+    assert part.param_spec(("embed", "w"), (51865, 384)) == P(None, None)
+
+
+def test_fsdp_adds_data_axis():
+    part = Partitioner(FakeMesh(data=16, model=16), fsdp=True)
+    spec = part.param_spec(("a", "ffn", "up", "w"), (4096, 16384))
+    assert spec == P(("data",), "model")
+    # 1-D params are never FSDP-sharded.
+    assert part.param_spec(("norm", "scale"), (4096,)) == P(None)
+
+
+def test_moe_expert_parallel():
+    part = Partitioner(FakeMesh(), fsdp=False)
+    assert part.param_spec(("ffn", "experts", "gate"), (64, 2048, 1408)) == \
+        P("model", None, None)
+
+
+def test_cache_specs_head_vs_seq():
+    part = Partitioner(FakeMesh(model=16), fsdp=False)
+    # 16 kv heads: shard heads.
+    s = part.cache_entry_spec(("groups", "0", "k"), (8, 128, 16, 32768, 128),
+                              shard_batch=True, stacked=True)
+    assert s == P(None, ("data",), "model", None, None)
+    # 8 kv heads (not divisible): shard sequence instead.
+    s = part.cache_entry_spec(("k",), (128, 8, 32768, 128),
+                              shard_batch=True, stacked=False)
+    assert s == P(("data",), None, "model", None)
+
+
+def test_mla_cache_replication_variant():
+    base = Partitioner(FakeMesh(), fsdp=False)
+    repl = Partitioner(FakeMesh(), fsdp=False, mla_cache="replicated")
+    shape = (128, 32768, 512)
+    assert base.cache_entry_spec(("ckv",), shape, shard_batch=True,
+                                 stacked=False) == P(("data",), None, "model")
+    assert repl.cache_entry_spec(("ckv",), shape, shard_batch=True,
+                                 stacked=False) == P(("data",), None, None)
+    seq = Partitioner(FakeMesh(), fsdp=False, mla_cache="seq")
+    assert seq.cache_entry_spec(("ckv",), shape, shard_batch=True,
+                                stacked=False) == P(("data",), "model", None)
+
+
+def test_every_arch_param_tree_gets_specs():
+    """No param path falls through the rules with a wrong-rank spec."""
+    part = Partitioner(FakeMesh(), fsdp=True)
+    for name in configs.ARCHS:
+        cfg = configs.reduced(configs.get(name))
+        abs_p = lm.abstract_params(cfg)
+        specs = part.params_specs(abs_p)
+        for leaf, spec in zip(jax.tree.leaves(abs_p), jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))):
+            assert len(spec) <= len(leaf.shape)

@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests for the paper's system claims.
+
+The paper's three research questions, as executable assertions on the real
+stack (tiny decoder, full coordination machinery):
+  RQ1 structure — parallel speedup on decoupled tasks (decode-step units);
+  RQ2 objective part — volume inflation appears only in parallel mode;
+  RQ3 — strong eventual consistency: replicas converge bit-identically,
+        zero character-level merge failures, at-most-one-winner claims.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agents.orchestrator import count_conflicts, make_sim_llm, run_task
+from repro.agents.tasks import TASKS
+from repro.core import doc as doc_mod
+from repro.core import merge, rga
+
+
+@pytest.fixture(scope="module")
+def llm():
+    return make_sim_llm()
+
+
+def test_rq1_decoupled_speedup_and_coupled_structure(llm):
+    cfg, params = llm
+    res = {}
+    for task in ("tic_tac_toe", "visualizer"):
+        seq = run_task(cfg, params, TASKS[task], mode="sequential", seed=0)
+        par = run_task(cfg, params, TASKS[task], mode="parallel",
+                       n_agents=4, seed=0)
+        res[task] = (seq, par)
+    # Decoupled: parallel strictly faster (raw).
+    s, p = res["tic_tac_toe"]
+    assert p.steps < s.steps
+    # Coupled + inflated: raw advantage shrinks or inverts...
+    s2, p2 = res["visualizer"]
+    decoupled_gain = p.steps / s.steps
+    coupled_gain = p2.steps / s2.steps
+    assert coupled_gain > decoupled_gain
+    # ...but normalized (per-token) time still favors parallel (paper B.1).
+    assert p2.steps_per_1k_tokens < s2.steps_per_1k_tokens
+
+
+def test_rq2_volume_inflation_only_in_parallel(llm):
+    cfg, params = llm
+    seq = run_task(cfg, params, TASKS["dashboard"], mode="sequential", seed=1)
+    par = run_task(cfg, params, TASKS["dashboard"], mode="parallel",
+                   n_agents=4, seed=1)
+    assert par.gen_tokens > 1.5 * seq.gen_tokens
+
+
+def test_rq3_full_suite_convergence(llm):
+    cfg, params = llm
+    for task in TASKS:
+        r = run_task(cfg, params, TASKS[task], mode="parallel", n_agents=3,
+                     seed=2)
+        assert r.converged, f"{task}: replicas diverged"
+
+
+def test_rq3_zero_character_level_loss():
+    """Concurrent RGA edits: all inserted tokens survive, exactly once."""
+    s = rga.empty(4, 64)
+    replicas = [s, s, s]
+    total = 0
+    for i, tok0 in enumerate((10, 20, 30)):
+        run = jnp.asarray([tok0, tok0 + 1, tok0 + 2, 0])
+        replicas[i] = rga.insert_run(replicas[i], i + 1, 5 + i,
+                                     s.head_oid, run, 3)
+        total += 3
+    m = merge.fold_join(replicas)
+    toks, _, n = rga.materialize(m)
+    assert int(n) == total
+    assert sorted(np.asarray(toks[:total]).tolist()) == sorted(
+        [10, 11, 12, 20, 21, 22, 30, 31, 32])
+
+
+def test_semantic_conflicts_detectable_despite_convergence():
+    """The paper's key distinction: character-level convergence does NOT
+    imply semantic consistency — duplicate declarations survive the merge."""
+    d = doc_mod.empty(2, 16)
+    decl = 5              # token = 5 (mod 13 == 5) declares symbol 5
+    d = doc_mod.append(d, 0, jnp.asarray([decl, 1, 0, 0]), 2)
+    d = doc_mod.append(d, 1, jnp.asarray([decl, 2, 0, 0]), 2)
+    conflicts, total = count_conflicts(d)
+    assert conflicts == 1 and total == 2

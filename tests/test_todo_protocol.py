@@ -1,0 +1,131 @@
+"""TODO-claim protocol: safety (at-most-one-winner), liveness, staleness.
+
+Paper §A.5's safety theorem states that after convergence at most one agent's
+verify read can succeed per TODO.  We check it under randomized concurrent
+claim schedules, randomized merge (delivery) orders, and adversarial clock
+collisions — plus the liveness rule (stale claims reclaimed) and idempotent
+re-claims.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import merge, protocol, todo
+from repro.core.clock import Lamport
+
+K = 8
+
+
+def _board_with(n_posted: int, deps: dict[int, list[int]] | None = None):
+    b = todo.empty(K)
+    lam = Lamport.create(client=1023)
+    deps = deps or {}
+    for k in range(n_posted):
+        row = np.zeros((K,), bool)
+        for d in deps.get(k, []):
+            row[d] = True
+        lam = lam.tick()
+        b = todo.post(b, k, jnp.asarray(row), lam.time, lam.client)
+    return b
+
+
+@given(st.integers(1, 6), st.integers(2, 6), st.integers(0, 9999))
+def test_at_most_one_winner(n_todos, n_agents, seed):
+    rs = np.random.default_rng(seed)
+    board = _board_with(n_todos)
+    clients = jnp.asarray(rs.permutation(np.arange(1, 1 + n_agents)).astype(np.int32))
+    # Adversarial: all agents use the SAME clock -> client-id tiebreak only.
+    clocks = jnp.full((n_agents,), 100, jnp.int32)
+    merged, ks, won = protocol.concurrent_claims(board, clients, clocks, jnp.int32(0))
+    wins = collections.Counter(int(k) for k, w in zip(ks, won) if bool(w))
+    assert all(v == 1 for v in wins.values()), wins
+    # Verify read matches the merged register.
+    for i in range(n_agents):
+        if bool(won[i]):
+            assert int(merged.assignee[int(ks[i])]) == int(clients[i])
+
+
+@given(st.integers(0, 9999))
+def test_winner_is_merge_order_independent(seed):
+    """The arbitration outcome is a pure function of the claim set."""
+    rs = np.random.default_rng(seed)
+    board = _board_with(4)
+    proposals = []
+    for agent in range(1, 5):
+        k, found = todo.pick(board, jnp.int32(agent))
+        prop = todo.claim(board, k, jnp.int32(agent),
+                          jnp.int32(rs.integers(50, 60)), jnp.int32(0))
+        proposals.append(prop)
+    perm = rs.permutation(4)
+    m1 = merge.fold_join([proposals[i] for i in perm])
+    m2 = merge.fold_join(list(reversed([proposals[i] for i in perm])))
+    np.testing.assert_array_equal(np.asarray(m1.assignee), np.asarray(m2.assignee))
+    np.testing.assert_array_equal(np.asarray(m1.status), np.asarray(m2.status))
+
+
+def test_claim_verify_loser_retries_and_completes():
+    """Liveness: with retries, all TODOs end up DONE; no lost work."""
+    board = _board_with(5)
+    lams = {a: Lamport.create(a) for a in (1, 2)}
+    owned = {1: [], 2: []}
+    merge_fn = lambda b: b    # single shared board (sequentialized interleave)
+    for _ in range(30):
+        for a in (1, 2):
+            out = protocol.try_claim(board, lams[a], jnp.int32(0), merge_fn)
+            board, lams[a] = out.board, out.lamport
+            if bool(out.won):
+                owned[a].append(int(out.todo_id))
+                board, lams[a] = protocol.complete(
+                    board, lams[a], out.todo_id, merge_fn)
+        if bool(todo.all_done(board)):
+            break
+    assert bool(todo.all_done(board))
+    assert sorted(owned[1] + owned[2]) == list(range(5))
+    assert not (set(owned[1]) & set(owned[2]))
+
+
+def test_dependency_gating():
+    """A TODO is never claimable before its deps are DONE."""
+    board = _board_with(3, deps={2: [0, 1]})
+    ready = np.asarray(todo.ready_mask(board))
+    assert ready[:2].all() and not ready[2]
+    lam = Lamport.create(1)
+    for k in (0, 1):
+        board = todo.claim(board, jnp.int32(k), jnp.int32(1),
+                           jnp.int32(100 + k), jnp.int32(0))
+        board = todo.complete(board, jnp.int32(k), jnp.int32(1),
+                              jnp.int32(200 + k))
+    assert bool(todo.ready_mask(board)[2])
+
+
+def test_stale_claim_reclaimed():
+    """Paper's 120 s liveness rule: dead agent's claim reverts to PENDING."""
+    board = _board_with(2)
+    board = todo.claim(board, jnp.int32(0), jnp.int32(7), jnp.int32(100),
+                       now=jnp.int32(10))
+    lam = Lamport.create(2)
+    # Too early: nothing reclaimed.
+    b2, lam = protocol.reclaim_stale(board, lam, jnp.int32(50), jnp.int32(120),
+                                     lambda b: b)
+    assert int(b2.status[0]) == todo.CLAIMED
+    # Past timeout: reverts, claimable by others.
+    b3, lam = protocol.reclaim_stale(b2, lam, jnp.int32(200), jnp.int32(120),
+                                     lambda b: b)
+    assert int(b3.status[0]) == todo.PENDING and int(b3.assignee[0]) == 0
+    out = protocol.try_claim(b3, Lamport.create(3), jnp.int32(201), lambda b: b)
+    assert bool(out.won)
+
+
+def test_done_not_reclaimed():
+    board = _board_with(1)
+    lam = Lamport.create(4)
+    board = todo.claim(board, jnp.int32(0), jnp.int32(4), jnp.int32(10), jnp.int32(0))
+    board = todo.complete(board, jnp.int32(0), jnp.int32(4), jnp.int32(11))
+    b2, _ = protocol.reclaim_stale(board, Lamport.create(2), jnp.int32(10_000),
+                                   jnp.int32(120), lambda b: b)
+    assert int(b2.status[0]) == todo.DONE
