@@ -1,0 +1,179 @@
+"""Merge-strategy sweep: bytes-on-wire and wall-clock per replica sync.
+
+Sweeps replicas × slot-capacity × edit-rate over a SlotDoc bank and measures
+what each sync strategy actually ships:
+
+  allgather — every replica ships full state to every peer (paper-faithful
+              observation):                wire = R·(R-1)·state_bytes
+  pmax      — ring all-reduce join (reduce-scatter + all-gather phases):
+                                           wire = 2·(R-1)·state_bytes
+  delta     — delta-state sync (core/delta.py): fixed-capacity delta buffers
+              circulate the ring:          wire = (R-1)·Σ delta_bytes (exact)
+
+Each cell builds R replicas that each appended ``rate × S`` tokens to their
+own slots since the last sync (slots partitioned round-robin), then times one
+sync (jitted, warm) and reports
+
+    merge/<strategy>/R<r>_S<s>_rate<rate>,<us_per_sync>,bytes=<wire_bytes>
+
+rows per the harness CSV contract.  The O(S) → O(Δ) claim is the acceptance
+criterion: at edit rates below ~10% of slot capacity the delta rows must ship
+fewer bytes than pmax (asserted in tests/test_delta_properties.py via
+``sweep_cell``).  A final section times the Pallas scatter-apply kernel
+(kernels/delta_apply.py) against its jnp oracle.
+
+  PYTHONPATH=src python -m benchmarks.bench_merge [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import delta as delta_mod
+from repro.core import doc as doc_mod
+from repro.core import merge as merge_mod
+
+K_SLOTS = 16
+
+
+def _edited_replicas(n_rep: int, n_slots: int, slot_cap: int, rate: float,
+                     seed: int = 0) -> tuple[doc_mod.SlotDoc, list]:
+    """Base doc plus R replicas that each appended rate·S tokens per owned
+    slot since the base state (the per-sync-interval edit pattern)."""
+    rng = np.random.default_rng(seed)
+    base = doc_mod.empty(n_slots, slot_cap)
+    # Pre-existing content: half-full slots (so deltas sit mid-buffer).
+    for s in range(n_slots):
+        n = slot_cap // 2
+        buf = rng.integers(1, 100, size=slot_cap).astype(np.int32)
+        base = doc_mod.append(base, s, jnp.asarray(buf), n)
+    edits = max(1, int(round(rate * slot_cap)))
+    replicas = []
+    for r in range(n_rep):
+        rep = base
+        for s in range(r, n_slots, n_rep):       # round-robin slot ownership
+            buf = np.zeros((edits,), np.int32)
+            buf[:] = rng.integers(1, 100, size=edits)
+            rep = doc_mod.append(rep, s, jnp.asarray(buf), edits)
+        replicas.append(rep)
+    return base, replicas
+
+
+def _time(fn, runs: int) -> float:
+    fn()                                          # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(runs):
+        jax.block_until_ready(jax.tree.leaves(fn())[0])
+    return (time.perf_counter() - t0) / runs * 1e6
+
+
+def sweep_cell(n_rep: int, slot_cap: int, rate: float, *, runs: int = 5,
+               seed: int = 0) -> dict:
+    """One (replicas, slot-capacity, edit-rate) cell: µs + wire bytes per
+    strategy, plus a bit-equality check of delta-sync vs the fold join."""
+    base, replicas = _edited_replicas(n_rep, K_SLOTS, slot_cap, rate, seed)
+    state_bytes = delta_mod.nbytes(base)
+    edits = max(1, int(round(rate * slot_cap)))
+    capacity = max(8, -(-edits // 8) * 8)         # edits rounded up to 8
+
+    fold = jax.jit(merge_mod.fold_join)
+    want = fold(replicas)
+
+    # pmax strategy timed as the real pmax join over a replica axis (vmap is
+    # the single-process stand-in for the mesh axis; collectives lower to
+    # local reductions with identical semantics).
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *replicas)
+    pmax_fn = jax.jit(jax.vmap(
+        lambda s: merge_mod.pmax_merge(s, "r"), axis_name="r"))
+
+    # One DeltaSync reused across timed iterations (extract/apply jits are
+    # module-level and warm); the frontier resets each call so every
+    # iteration re-ships the same deltas.
+    ds = delta_mod.DeltaSync(base, capacity=capacity)
+    fr0 = ds.frontier
+
+    def delta_round():
+        ds.frontier = fr0
+        return ds.sync(replicas)
+
+    outs = delta_round()
+    delta_bytes_per_sync = ds.bytes_shipped // ds.syncs
+    exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for out in outs
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)))
+
+    return {
+        "replicas": n_rep, "slot_cap": slot_cap, "rate": rate,
+        "capacity": capacity, "state_bytes": state_bytes,
+        "bytes": {
+            "allgather": delta_mod.full_state_wire_bytes(
+                "allgather", n_rep, state_bytes),
+            "pmax": delta_mod.full_state_wire_bytes(
+                "pmax", n_rep, state_bytes),
+            "delta": delta_bytes_per_sync,
+        },
+        "us": {
+            "allgather": _time(lambda: fold(replicas), runs),
+            "pmax": _time(lambda: pmax_fn(stacked), runs),
+            "delta": _time(lambda: delta_round()[0], runs),
+        },
+        "delta_exact": exact,
+    }
+
+
+def sweep(replicas=(2, 4, 8), slot_caps=(256, 1024),
+          rates=(0.01, 0.05, 0.10, 0.50), runs: int = 5):
+    for r in replicas:
+        for s in slot_caps:
+            for rate in rates:
+                cell = sweep_cell(r, s, rate, runs=runs)
+                for strat in ("allgather", "pmax", "delta"):
+                    name = f"merge/{strat}/R{r}_S{s}_rate{rate:g}"
+                    derived = (f"bytes={cell['bytes'][strat]}"
+                               f";exact={int(cell['delta_exact'])}")
+                    yield csv_row(name, cell["us"][strat], derived)
+
+
+def kernel_rows(runs: int = 20):
+    """Pallas delta_apply vs jnp oracle on a flat register bank."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    k, d, dc = 4096, 128, 256
+    key = jnp.asarray(rng.integers(0, 10_000, k), jnp.int32)
+    pay = jnp.asarray(rng.integers(-99, 99, (k, d)), jnp.int32)
+    idx = jnp.asarray(rng.permutation(k)[:dc], jnp.int32)
+    dkey = jnp.asarray(rng.integers(0, 20_000, dc), jnp.int32)
+    dpay = jnp.asarray(rng.integers(-99, 99, (dc, d)), jnp.int32)
+    for use_pallas, tag in ((True, "pallas"), (False, "ref")):
+        fn = jax.jit(lambda: ops.delta_apply(key, pay, idx, dkey, dpay,
+                                             use_pallas=use_pallas))
+        us = _time(fn, runs)
+        yield csv_row(f"kernel/delta_apply/{tag}/K{k}_D{d}_Dc{dc}", us,
+                      f"bytes={delta_mod.nbytes((idx, dkey, dpay))}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep, fewer timing runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.quick:
+        rows = sweep(replicas=(2, 4), slot_caps=(256,),
+                     rates=(0.05, 0.5), runs=2)
+    else:
+        rows = sweep()
+    for row in rows:
+        print(row, flush=True)
+    for row in kernel_rows(runs=5 if args.quick else 20):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

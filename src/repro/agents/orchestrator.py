@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.agents.tasks import TaskSpec
+from repro.core import delta as delta_mod
 from repro.core import doc as doc_mod
 from repro.core import merge as merge_mod
 from repro.core import observe, protocol, todo
@@ -71,6 +72,9 @@ class RunResult:
     declared_symbols: int
     converged: bool
     digest: int
+    merge_strategy: str = "allgather"
+    sync_rounds: int = 0
+    sync_bytes: int = 0     # wire bytes (see delta.full_state_wire_bytes)
 
     @property
     def tokens_per_s(self) -> float:
@@ -145,8 +149,10 @@ def count_conflicts(merged: doc_mod.SlotDoc) -> tuple[int, int]:
 
 def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
              n_agents: int = 4, seed: int = 0, max_len: int = 1024,
+             merge: str = "allgather", delta_capacity: int = 64,
              time_fn=time.perf_counter) -> RunResult:
     assert mode in ("sequential", "parallel")
+    assert merge in ("allgather", "pmax", "delta")
     if mode == "sequential":
         n_agents = 1
     rng = np.random.default_rng(seed)
@@ -164,6 +170,9 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     docs = [doc_mod.empty(k_todos, SLOT_CAP) for _ in range(n_agents)]
     agents = [AgentState(row=i, client=i + 1, lamport=Lamport.create(i + 1))
               for i in range(n_agents)]
+    state_bytes = delta_mod.nbytes(docs[0])
+    delta_sync = (delta_mod.DeltaSync(docs[0], capacity=delta_capacity)
+                  if merge == "delta" else None)
 
     # Jit every hot helper once: eager lax.fori_loop (claims) re-traces and
     # re-compiles per call — at one claim round per step that dominated wall
@@ -196,6 +205,8 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     warm = append_run_fn(docs[0], jnp.int32(0),
                          jnp.zeros((128,), jnp.int32), jnp.int32(0))
     jax.block_until_ready(warm.length)
+    if delta_sync is not None:   # compile extract/apply outside timed region
+        delta_mod.DeltaSync(docs[0], capacity=delta_capacity).sync(docs)
 
     t0 = time_fn()
 
@@ -212,7 +223,8 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     gen_budget = int(round(task.base_tokens
                            * (task.par_inflation if mode == "parallel"
                               else 1.0)))
-    stats = dict(gen=0, replay=0, steps=0, inval=0, collide=0, observe=0)
+    stats = dict(gen=0, replay=0, steps=0, inval=0, collide=0, observe=0,
+                 syncs=0, sync_bytes=0)
     merge_perm_seed = 0
 
     # Host-side mirrors: CRDT appends are buffered per agent and flushed at
@@ -244,10 +256,17 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         nonlocal docs, merge_perm_seed
         for i in range(n_agents):
             flush_agent(i)
+        stats["syncs"] += 1
+        if delta_sync is not None:
+            docs = delta_sync.sync(docs)
+            stats["sync_bytes"] = delta_sync.bytes_shipped
+            return
         perm = np.random.default_rng(merge_perm_seed).permutation(n_agents)
         merge_perm_seed += 1
         m = fold_fn([docs[i] for i in perm])
         docs = [m for _ in range(n_agents)]
+        stats["sync_bytes"] += delta_mod.full_state_wire_bytes(
+            merge, n_agents, state_bytes)
 
     snap_len = {a.client: host_len.copy() for a in agents}
 
@@ -353,6 +372,18 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
             break
 
     sync_replicas()
+    if delta_sync is not None:
+        # Drain capacity-overflow backlog (delta contract: convergence is
+        # delayed, never lost): sync until the frontier reaches its fixed
+        # point, so replicas are measurably converged before scoring.
+        for _ in range(10_000):
+            before = [np.asarray(x)
+                      for x in jax.tree.leaves(delta_sync.frontier)]
+            sync_replicas()
+            after = [np.asarray(x)
+                     for x in jax.tree.leaves(delta_sync.frontier)]
+            if all(np.array_equal(b, a) for b, a in zip(before, after)):
+                break
     wall = time_fn() - t0
 
     final = fold_fn(docs)
@@ -367,6 +398,8 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         semantic_conflicts=conflicts, declared_symbols=total_decl,
         converged=all(d == digests[0] for d in digests),
         digest=digests[0],
+        merge_strategy=merge, sync_rounds=stats["syncs"],
+        sync_bytes=int(stats["sync_bytes"]),
     )
 
 
@@ -377,3 +410,35 @@ def make_sim_llm(seed: int = 0):
                           vocab=512).replace(num_layers=2)
     params = lm.init(jax.random.PRNGKey(seed), cfg)
     return cfg, params
+
+
+def main() -> None:
+    """Run one task end-to-end with a chosen replica-merge strategy.
+
+    PYTHONPATH=src python -m repro.agents.orchestrator \
+        --task coupled --mode parallel --agents 4 --merge delta
+    """
+    import argparse
+    from repro.agents.tasks import TASKS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default=next(iter(TASKS)), choices=list(TASKS))
+    ap.add_argument("--mode", default="parallel",
+                    choices=["sequential", "parallel"])
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--merge", default="allgather",
+                    choices=["allgather", "pmax", "delta"])
+    ap.add_argument("--delta-capacity", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, params = make_sim_llm(args.seed)
+    r = run_task(cfg, params, TASKS[args.task], mode=args.mode,
+                 n_agents=args.agents, seed=args.seed, merge=args.merge,
+                 delta_capacity=args.delta_capacity)
+    for k, v in sorted(vars(r).items()):
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

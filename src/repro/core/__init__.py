@@ -10,9 +10,11 @@ Observation-driven coordination over join-semilattice (CRDT) state:
   todo      TodoBoard + status/dependency semantics
   protocol  optimistic write-verify claim protocol (at-most-one-winner)
   observe   version-vector subscriptions, invalidation signals
-  merge     replica joins: local fold, all-gather, and O(S) pmax collectives
+  delta     delta-state sync: frontiers, O(Δ) extraction, join-apply
+  merge     replica joins: local fold, all-gather, O(S) pmax, O(Δ) delta ring
 """
-from repro.core import clock, doc, gset, lww, merge, observe, protocol, rga, todo
+from repro.core import (clock, delta, doc, gset, lww, merge, observe,
+                        protocol, rga, todo)
 
-__all__ = ["clock", "doc", "gset", "lww", "merge", "observe", "protocol",
-           "rga", "todo"]
+__all__ = ["clock", "delta", "doc", "gset", "lww", "merge", "observe",
+           "protocol", "rga", "todo"]

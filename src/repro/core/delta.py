@@ -1,0 +1,505 @@
+"""Delta-state CRDT sync: ship O(Δ) deltas instead of O(S) full state.
+
+Every CRDT in repro.core is a join-semilattice, so any *delta* — a small
+state fragment — merges into a replica through the same join that full
+states use (Almeida et al. 2018, "Delta state replicated data types").
+This module adds, for each registered CRDT, three operations:
+
+  ``frontier(state)``            a compact watermark of what has been
+                                 observed/shipped so far:
+                                   * log-structured types (GLog, RGA):
+                                     per-client op-count watermark i32[C],
+                                   * SlotDoc: per-slot length watermark i32[K],
+                                   * LWWBank / TodoBoard: per-register packed
+                                     (clock, client) key watermark i32[K],
+                                   * GCounter / GSet: the (tiny) state itself.
+
+  ``extract(state, frontier, capacity)``
+                                 the ops beyond ``frontier``, compacted into a
+                                 FIXED-CAPACITY buffer (shapes are static, so
+                                 extraction jits and ships over collectives).
+                                 Returns ``(delta, shipped_frontier)`` where
+                                 ``shipped_frontier`` advances only over ops
+                                 that actually fit — overflow is not lost, it
+                                 ships on the next sync round.
+
+  ``apply(state, delta)``        joins the delta into a replica.  Deltas are
+                                 (sub-)states, so apply inherits the join's
+                                 idempotence/commutativity: re-applying a
+                                 delta, or applying it to a replica that has
+                                 already seen some of its ops, is a no-op for
+                                 the overlap.
+
+The frontier/delta model
+------------------------
+
+A sync round between replicas that share a frontier F (the previous sync
+point) ships ``extract(state_i, F)`` from every replica i and applies every
+delta everywhere.  Because rows (GLog/RGA) and slots (SlotDoc) are
+single-writer between syncs, deltas touch disjoint regions and contiguity
+holds: each delta's ``start`` is at or below every receiver's watermark, so
+watermark advancement never skips unobserved ops (the *causal-delta-merging*
+guard — `apply` rejects watermark advancement across a gap, keeping the
+result a valid CRDT state under arbitrary delivery).
+
+The next shared frontier is the max-join of every replica's
+``shipped_frontier`` — all frontier leaves are monotone (counts, lengths,
+packed LWW keys, member bits), so ``join_frontiers`` is an elementwise
+max/OR and, on a mesh, a bare ``lax.pmax``.
+
+Wire-cost model: a full SlotDoc is O(K·S) bytes per sync; a delta is
+O(K·Δcap) with Δcap sized to the edit rate between syncs — the O(N×U)
+observation overhead of the paper becomes O(N×Δ).  RGA tombstones are not
+log-structured (any replica may tombstone any op), so they ship as a full
+bit-packed bitmap: L/8 bytes per client row versus 12+ bytes per op for the
+log fields — still o(state).  GCounter/GSet states are already watermarks;
+their "deltas" are the (bit-packed) state and cost the same O(C) / O(N/8).
+
+See ``core/merge.py::delta_merge`` for the ring-exchange collective built on
+these primitives and ``benchmarks/bench_merge.py`` for the measured bytes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import doc as doc_mod
+from repro.core import gset, lww, rga, todo
+from repro.core.clock import pack_key
+
+# ---------------------------------------------------------------------------
+# Frontier / delta containers (all fixed-shape pytrees)
+# ---------------------------------------------------------------------------
+
+
+class LogFrontier(NamedTuple):
+    count: jax.Array          # i32[C] — ops observed per client row
+
+
+class KeyFrontier(NamedTuple):
+    key: jax.Array            # i32[K] — packed (clock, client) per register
+
+
+class SlotFrontier(NamedTuple):
+    length: jax.Array         # i32[K] — tokens observed per slot
+
+
+class LogDelta(NamedTuple):
+    """New ops of a GLog beyond a LogFrontier, one run per client row."""
+
+    start: jax.Array          # i32[C]
+    num: jax.Array            # i32[C] — ops shipped (<= capacity)
+    fields: dict[str, Any]    # field -> [C, capacity, ...]
+
+
+class RGADelta(NamedTuple):
+    """New ops of an RGA plus the full (bit-packed) tombstone set."""
+
+    start: jax.Array          # i32[C]
+    num: jax.Array            # i32[C]
+    op_clock: jax.Array       # i32[C, capacity]
+    origin: jax.Array         # i32[C, capacity]
+    token: jax.Array          # i32[C, capacity]
+    deleted_bits: jax.Array   # u8[C, ceil(L/8)] — tombstones OR on apply
+
+
+class LWWDelta(NamedTuple):
+    """Changed registers of an LWWBank, left-packed into ``capacity`` lanes.
+
+    ``idx`` holds the register index per lane, -1 for empty lanes.  Lanes are
+    unique by construction (each register appears at most once per extract).
+    """
+
+    idx: jax.Array            # i32[capacity]
+    clock: jax.Array          # i32[capacity]
+    client: jax.Array         # i32[capacity]
+    payload: dict[str, Any]   # field -> [capacity, ...]
+
+
+class SlotDelta(NamedTuple):
+    """New tokens of a SlotDoc beyond a SlotFrontier, one run per slot."""
+
+    start: jax.Array          # i32[K]
+    num: jax.Array            # i32[K]
+    tokens: jax.Array         # i32[K, capacity]
+    owner: jax.Array          # i32[K] — joins by max (tiny, shipped whole)
+
+
+class CounterDelta(NamedTuple):
+    counts: jax.Array         # i32[C] — the state IS the watermark
+
+
+class SetDelta(NamedTuple):
+    bits: jax.Array           # u8[ceil(N/8)] — bit-packed membership
+
+
+# ---------------------------------------------------------------------------
+# Row-run helpers (shared by GLog / RGA / SlotDoc)
+# ---------------------------------------------------------------------------
+
+
+def _gather_runs(arr: jax.Array, start: jax.Array, num: jax.Array,
+                 capacity: int) -> jax.Array:
+    """arr [C, L, ...] -> [C, capacity, ...]: per-row slice from ``start``."""
+    c, l = arr.shape[:2]
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    src = jnp.clip(start[:, None] + j[None, :], 0, l - 1)
+    vals = arr[jnp.arange(c)[:, None], src]
+    mask = j[None, :] < num[:, None]
+    m = mask.reshape(mask.shape + (1,) * (arr.ndim - 2))
+    return jnp.where(m, vals, jnp.zeros((), arr.dtype))
+
+
+def _scatter_runs(arr: jax.Array, start: jax.Array, num: jax.Array,
+                  vals: jax.Array) -> jax.Array:
+    """Write [C, capacity, ...] runs back at ``start``; masked lanes are
+    routed out of bounds and dropped (never clipped onto live slots)."""
+    c, l = arr.shape[:2]
+    capacity = vals.shape[1]
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    write = j[None, :] < num[:, None]
+    pos = jnp.where(write, start[:, None] + j[None, :], l)
+    return arr.at[jnp.arange(c)[:, None], pos].set(
+        vals.astype(arr.dtype), mode="drop")
+
+
+def _advance_watermark(current: jax.Array, start: jax.Array,
+                       num: jax.Array) -> jax.Array:
+    """Causal-delta-merging guard: only advance over contiguous runs.
+
+    A delta starting beyond the local watermark would mark unobserved ops as
+    valid; its payload is still written (harmless — rows are append-only and
+    deterministic per writer) but the watermark waits for the gap-filler.
+    """
+    return jnp.where(start <= current,
+                     jnp.maximum(current, start + num), current)
+
+
+# ---------------------------------------------------------------------------
+# Per-type frontier / extract / apply
+# ---------------------------------------------------------------------------
+
+# -- GLog -------------------------------------------------------------------
+
+def _glog_frontier(state: gset.GLog) -> LogFrontier:
+    return LogFrontier(count=state.count)
+
+
+def _glog_extract(state: gset.GLog, fr: LogFrontier, capacity: int
+                  ) -> tuple[LogDelta, LogFrontier]:
+    start = jnp.minimum(fr.count, state.count)
+    num = jnp.clip(state.count - start, 0, capacity)
+    fields = {name: _gather_runs(arr, start, num, capacity)
+              for name, arr in state.fields.items()}
+    return (LogDelta(start=start, num=num, fields=fields),
+            LogFrontier(count=start + num))
+
+
+def _glog_apply(state: gset.GLog, d: LogDelta) -> gset.GLog:
+    fields = {name: _scatter_runs(arr, d.start, d.num, d.fields[name])
+              for name, arr in state.fields.items()}
+    return gset.GLog(count=_advance_watermark(state.count, d.start, d.num),
+                     fields=fields)
+
+
+# -- RGA --------------------------------------------------------------------
+
+def _rga_frontier(state: rga.RGA) -> LogFrontier:
+    return LogFrontier(count=state.count)
+
+
+def _rga_extract(state: rga.RGA, fr: LogFrontier, capacity: int
+                 ) -> tuple[RGADelta, LogFrontier]:
+    start = jnp.minimum(fr.count, state.count)
+    num = jnp.clip(state.count - start, 0, capacity)
+    delta = RGADelta(
+        start=start, num=num,
+        op_clock=_gather_runs(state.op_clock, start, num, capacity),
+        origin=_gather_runs(state.origin, start, num, capacity),
+        token=_gather_runs(state.token, start, num, capacity),
+        deleted_bits=jnp.packbits(state.deleted, axis=1),
+    )
+    return delta, LogFrontier(count=start + num)
+
+
+def _rga_apply(state: rga.RGA, d: RGADelta) -> rga.RGA:
+    l = state.capacity
+    deleted = state.deleted | jnp.unpackbits(
+        d.deleted_bits, axis=1, count=l).astype(jnp.bool_)
+    return rga.RGA(
+        count=_advance_watermark(state.count, d.start, d.num),
+        op_clock=_scatter_runs(state.op_clock, d.start, d.num, d.op_clock),
+        origin=_scatter_runs(state.origin, d.start, d.num, d.origin),
+        token=_scatter_runs(state.token, d.start, d.num, d.token),
+        deleted=deleted,
+    )
+
+
+# -- LWWBank ----------------------------------------------------------------
+
+def _lww_frontier(bank: lww.LWWBank) -> KeyFrontier:
+    return KeyFrontier(key=bank.key)
+
+
+def _lww_extract(bank: lww.LWWBank, fr: KeyFrontier, capacity: int
+                 ) -> tuple[LWWDelta, KeyFrontier]:
+    k = bank.clock.shape[0]
+    cap = min(capacity, k)
+    changed = bank.key > fr.key
+    # Oldest (smallest-key) changed registers ship first: a starved write's
+    # key is fixed while churning writers' keys keep growing, so every
+    # pending register is eventually among the ``cap`` smallest — overflow
+    # delays shipping but can never starve a register indefinitely.
+    priority = jnp.where(changed, bank.key, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(priority).astype(jnp.int32)[:cap]
+    take = changed[order]
+    idx = jnp.where(take, order, -1)
+    safe = jnp.clip(order, 0, k - 1)
+    zero = lambda arr, v: jnp.where(
+        take.reshape(take.shape + (1,) * (v.ndim - 1)), v,
+        jnp.zeros((), arr.dtype))
+    payload = {name: zero(arr, arr[safe]) for name, arr in bank.payload.items()}
+    delta = LWWDelta(idx=idx,
+                     clock=jnp.where(take, bank.clock[safe], 0),
+                     client=jnp.where(take, bank.client[safe], 0),
+                     payload=payload)
+    shipped = jnp.zeros((k,), jnp.bool_).at[
+        jnp.where(take, order, k)].set(True, mode="drop")
+    return delta, KeyFrontier(key=jnp.where(shipped, bank.key, fr.key))
+
+
+def _lww_apply(bank: lww.LWWBank, d: LWWDelta) -> lww.LWWBank:
+    k = bank.clock.shape[0]
+    dkey = pack_key(d.clock, d.client)
+    safe = jnp.clip(d.idx, 0, k - 1)
+    wins = (d.idx >= 0) & (dkey > bank.key[safe])
+    tgt = jnp.where(wins, d.idx, k)       # losers routed out of bounds
+    payload = {
+        name: arr.at[tgt].set(d.payload[name].astype(arr.dtype), mode="drop")
+        for name, arr in bank.payload.items()
+    }
+    return lww.LWWBank(
+        clock=bank.clock.at[tgt].set(d.clock, mode="drop"),
+        client=bank.client.at[tgt].set(d.client, mode="drop"),
+        payload=payload,
+    )
+
+
+# -- SlotDoc ----------------------------------------------------------------
+
+def _slot_frontier(doc: doc_mod.SlotDoc) -> SlotFrontier:
+    return SlotFrontier(length=doc.length)
+
+
+def _slot_extract(doc: doc_mod.SlotDoc, fr: SlotFrontier, capacity: int
+                  ) -> tuple[SlotDelta, SlotFrontier]:
+    start = jnp.minimum(fr.length, doc.length)
+    num = jnp.clip(doc.length - start, 0, capacity)
+    delta = SlotDelta(start=start, num=num,
+                      tokens=_gather_runs(doc.tokens, start, num, capacity),
+                      owner=doc.owner)
+    return delta, SlotFrontier(length=start + num)
+
+
+def _slot_apply(doc: doc_mod.SlotDoc, d: SlotDelta) -> doc_mod.SlotDoc:
+    return doc_mod.SlotDoc(
+        tokens=_scatter_runs(doc.tokens, d.start, d.num, d.tokens),
+        length=_advance_watermark(doc.length, d.start, d.num),
+        owner=jnp.maximum(doc.owner, d.owner),
+    )
+
+
+# -- GCounter / GSet --------------------------------------------------------
+
+def _gcounter_frontier(state: gset.GCounter) -> jax.Array:
+    return state.counts
+
+
+def _gcounter_extract(state: gset.GCounter, fr: jax.Array, capacity: int
+                      ) -> tuple[CounterDelta, jax.Array]:
+    return CounterDelta(counts=state.counts), state.counts
+
+
+def _gcounter_apply(state: gset.GCounter, d: CounterDelta) -> gset.GCounter:
+    return gset.GCounter(jnp.maximum(state.counts, d.counts))
+
+
+def _gset_frontier(state: gset.GSet) -> jax.Array:
+    return state.member
+
+
+def _gset_extract(state: gset.GSet, fr: jax.Array, capacity: int
+                  ) -> tuple[SetDelta, jax.Array]:
+    return SetDelta(bits=jnp.packbits(state.member)), state.member
+
+
+def _gset_apply(state: gset.GSet, d: SetDelta) -> gset.GSet:
+    n = state.member.shape[0]
+    return gset.GSet(state.member
+                     | jnp.unpackbits(d.bits, count=n).astype(jnp.bool_))
+
+
+# -- TodoBoard --------------------------------------------------------------
+
+def _board_frontier(board: todo.TodoBoard) -> KeyFrontier:
+    return _lww_frontier(board.bank)
+
+
+def _board_extract(board: todo.TodoBoard, fr: KeyFrontier, capacity: int
+                   ) -> tuple[LWWDelta, KeyFrontier]:
+    return _lww_extract(board.bank, fr, capacity)
+
+
+def _board_apply(board: todo.TodoBoard, d: LWWDelta) -> todo.TodoBoard:
+    return todo.TodoBoard(_lww_apply(board.bank, d))
+
+
+# ---------------------------------------------------------------------------
+# Registry + public dispatch (mirrors merge._JOINS)
+# ---------------------------------------------------------------------------
+
+_FRONTIER = {
+    gset.GLog: _glog_frontier,
+    rga.RGA: _rga_frontier,
+    lww.LWWBank: _lww_frontier,
+    doc_mod.SlotDoc: _slot_frontier,
+    gset.GCounter: _gcounter_frontier,
+    gset.GSet: _gset_frontier,
+    todo.TodoBoard: _board_frontier,
+}
+
+_EXTRACT = {
+    gset.GLog: _glog_extract,
+    rga.RGA: _rga_extract,
+    lww.LWWBank: _lww_extract,
+    doc_mod.SlotDoc: _slot_extract,
+    gset.GCounter: _gcounter_extract,
+    gset.GSet: _gset_extract,
+    todo.TodoBoard: _board_extract,
+}
+
+_APPLY = {
+    gset.GLog: _glog_apply,
+    rga.RGA: _rga_apply,
+    lww.LWWBank: _lww_apply,
+    doc_mod.SlotDoc: _slot_apply,
+    gset.GCounter: _gcounter_apply,
+    gset.GSet: _gset_apply,
+    todo.TodoBoard: _board_apply,
+}
+
+
+def is_delta_crdt(x: Any) -> bool:
+    return type(x) in _FRONTIER
+
+
+def frontier(state: Any) -> Any:
+    """Watermark of everything ``state`` has observed.  Dict containers of
+    CRDTs (e.g. the fused serving step's coord dict) recurse per key."""
+    fn = _FRONTIER.get(type(state))
+    if fn is not None:
+        return fn(state)
+    if isinstance(state, dict):
+        return {k: frontier(v) for k, v in state.items()}
+    raise TypeError(f"no delta support for {type(state).__name__}")
+
+
+def extract(state: Any, fr: Any, capacity: int) -> tuple[Any, Any]:
+    """Delta of ``state`` beyond ``fr`` plus the frontier actually shipped."""
+    fn = _EXTRACT.get(type(state))
+    if fn is not None:
+        return fn(state, fr, capacity)
+    if isinstance(state, dict):
+        pairs = {k: extract(v, fr[k], capacity) for k, v in state.items()}
+        return ({k: p[0] for k, p in pairs.items()},
+                {k: p[1] for k, p in pairs.items()})
+    raise TypeError(f"no delta support for {type(state).__name__}")
+
+
+def apply(state: Any, delta: Any) -> Any:
+    """Join a delta into a replica (idempotent, order-insensitive)."""
+    fn = _APPLY.get(type(state))
+    if fn is not None:
+        return fn(state, delta)
+    if isinstance(state, dict):
+        return {k: apply(v, delta[k]) for k, v in state.items()}
+    raise TypeError(f"no delta support for {type(state).__name__}")
+
+
+def join_frontiers(a: Any, b: Any) -> Any:
+    """Frontiers are monotone watermarks: the join is elementwise max/OR."""
+    return jax.tree.map(
+        lambda x, y: x | y if x.dtype == jnp.bool_ else jnp.maximum(x, y),
+        a, b)
+
+
+frontier_jit = jax.jit(frontier)
+extract_jit = jax.jit(extract, static_argnums=2)
+apply_jit = jax.jit(apply)
+
+
+# ---------------------------------------------------------------------------
+# Host-side accounting + gossip driver
+# ---------------------------------------------------------------------------
+
+
+def nbytes(tree: Any) -> int:
+    """Wire size of a pytree: the fixed-capacity buffers ARE the payload."""
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def full_state_wire_bytes(strategy: str, n: int, state_bytes: int) -> int:
+    """Wire bytes for one full-state sync of N replicas (cost model shared
+    by the orchestrator's accounting and benchmarks/bench_merge.py).
+
+    allgather: every replica ships its full state to N-1 peers (the paper-
+    faithful everyone-observes-everyone relay).  pmax: ring all-reduce —
+    reduce-scatter + all-gather phases each move ~state_bytes across the
+    ring.  The delta strategy is accounted exactly (``nbytes`` of the
+    buffers actually shipped) rather than modeled.
+    """
+    if strategy == "allgather":
+        return n * (n - 1) * state_bytes
+    if strategy == "pmax":
+        return 2 * (n - 1) * state_bytes
+    raise ValueError(f"no full-state wire model for strategy: {strategy}")
+
+
+class DeltaSync:
+    """Host-side delta gossip among N replicas sharing a frontier.
+
+    The orchestrator's replica sync: every replica extracts its delta against
+    the shared frontier (the previous sync point), every delta is applied to
+    every other replica, and the frontier advances to the join of what was
+    shipped.  Overflowing ops (beyond ``capacity``) stay local and ship on a
+    later round — convergence is delayed, never lost.
+
+    ``bytes_shipped`` accumulates the ring-model wire cost: each delta
+    traverses N-1 links.
+    """
+
+    def __init__(self, template: Any, capacity: int = 64):
+        self.capacity = capacity
+        self.frontier = frontier_jit(template)
+        self.bytes_shipped = 0
+        self.syncs = 0
+
+    def sync(self, replicas: list[Any]) -> list[Any]:
+        n = len(replicas)
+        pairs = [extract_jit(r, self.frontier, self.capacity)
+                 for r in replicas]
+        deltas = [d for d, _ in pairs]
+        self.bytes_shipped += sum(nbytes(d) for d in deltas) * (n - 1)
+        self.syncs += 1
+        outs = []
+        for i, r in enumerate(replicas):
+            for j, d in enumerate(deltas):
+                if j != i:
+                    r = apply_jit(r, d)
+            outs.append(r)
+        self.frontier = functools.reduce(join_frontiers,
+                                         [f for _, f in pairs])
+        return outs

@@ -19,9 +19,19 @@ elementwise (masked) max, two strategies are available:
     O(S) bytes independent of N — the beyond-paper optimization of the
     coordination layer.
 
-Both are exact joins: they commute, associate, and are idempotent, so the
-merged state is identical on every replica — strong eventual consistency
-with *bounded* (one-collective) staleness.
+  * ``delta_merge`` — delta-state sync (core/delta.py): each replica extracts
+    the ops beyond a shared frontier into a fixed-capacity buffer, the
+    buffers circulate the replica ring via ``lax.ppermute`` (N-1 hops), and
+    every hop joins the received delta locally.  O(Δ) bytes per link per
+    sync — the winning strategy when edits per sync interval are small
+    relative to state size (measured in benchmarks/bench_merge.py).
+
+All three are exact joins: they commute, associate, and are idempotent, so
+the merged state is identical on every replica — strong eventual consistency
+with *bounded* (one-collective) staleness.  ``delta_merge`` additionally
+threads a frontier: overflowing deltas (edits beyond the buffer capacity)
+stay local and ship on a later sync, delaying convergence without ever
+losing it.
 """
 from __future__ import annotations
 
@@ -31,6 +41,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import delta as delta_mod
 from repro.core import doc as doc_mod
 from repro.core import gset, lww, rga, todo
 from repro.core.clock import unpack_key
@@ -84,6 +95,16 @@ def tree_join_stacked(stacked: Any) -> Any:
 # ---------------------------------------------------------------------------
 # Collective merges (use inside shard_map over ``axis_name``).
 # ---------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions (older jax ships it under
+    jax.experimental with ``check_rep`` instead of ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
 
 def allgather_merge(state: Any, axis_name: str) -> Any:
     """Paper-faithful: every replica observes every replica, folds locally."""
@@ -161,9 +182,56 @@ def pmax_merge(state: Any, axis_name: str) -> Any:
     return jax.tree.map(lambda s: pmax_merge(s, axis_name), state, is_leaf=is_crdt)
 
 
+def _pmin(x: jax.Array, axis_name) -> jax.Array:
+    if x.dtype == jnp.bool_:
+        # AND across replicas: only bits everyone has set survive.
+        return ~_pmax(~x, axis_name)
+    return jax.lax.pmin(x, axis_name)
+
+
+def delta_merge(state: Any, frontier: Any, axis_names, axis_sizes,
+                *, capacity: int = 64) -> tuple[Any, Any]:
+    """Delta-state ring sync across the replica axis (use inside shard_map).
+
+    ``frontier`` must be the SHARED frontier of the previous sync round
+    (identical on every replica; initially ``delta.frontier(initial_state)``
+    replicated).  Each replica extracts its delta beyond the frontier, the
+    deltas circulate the ring in N-1 ``ppermute`` hops, and each hop joins
+    the received delta.  Multi-axis replica grids (e.g. ("pod", "data"))
+    sync as sequential per-axis rings — after the first axis' ring all
+    members of that axis agree, so the next axis' ring forwards the already-
+    combined deltas.
+
+    Returns ``(merged_state, new_frontier)``.  The new frontier is the pmin
+    of every replica's post-merge observation watermark — exactly the ops
+    that reached EVERY replica — so it is identical everywhere and anything
+    that overflowed ``capacity`` on any hop (and therefore missed some
+    replicas) stays ahead of the frontier and re-ships next round.
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if isinstance(axis_sizes, int):
+        axis_sizes = (axis_sizes,)
+
+    for axis_name, n in zip(axis_names, axis_sizes):
+        d, _ = delta_mod.extract(state, frontier, capacity)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        for _ in range(n - 1):
+            d = jax.tree.map(
+                lambda x: jax.lax.ppermute(x, axis_name, perm), d)
+            state = delta_mod.apply(state, d)
+    new_frontier = jax.tree.map(
+        lambda x: _pmin(x, axis_names), delta_mod.frontier(state))
+    return state, new_frontier
+
+
 def collective_merge(state: Any, axis_name: str, strategy: str = "pmax") -> Any:
     if strategy == "pmax":
         return pmax_merge(state, axis_name)
     if strategy == "allgather":
         return allgather_merge(state, axis_name)
+    if strategy == "delta":
+        raise ValueError(
+            "delta merge threads a frontier — call merge.delta_merge (or "
+            "engine.make_coord_merge(strategy='delta')) instead")
     raise ValueError(f"unknown merge strategy: {strategy}")

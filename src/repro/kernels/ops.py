@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import decode_attention as _dec
+from repro.kernels import delta_apply as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lww_merge as _lww
 from repro.kernels import ref
@@ -54,6 +55,30 @@ def lww_merge(key_a, pay_a, key_b, pay_b, *, block_k: int = 1024,
     ok, op = _lww.lww_merge(ka, pa, kb, pb, block_k=blk,
                             interpret=not _on_tpu())
     return ok[:k], op[:k, :pay_a.shape[1]]
+
+
+def delta_apply(key, pay, d_idx, d_key, d_pay, *, block_k: int = 1024,
+                use_pallas: bool = True):
+    """Scatter-apply an LWW delta buffer — see kernels/delta_apply.py.
+
+    key: i32[K]; pay: [K, D]; d_idx/d_key: i32[Dc]; d_pay: [Dc, D].
+    Empty delta lanes hold d_idx = -1.
+    """
+    if not use_pallas:
+        return ref.delta_apply(key, pay, d_idx, d_key, d_pay)
+    k = key.shape[0]
+    # Clamp to >= 128 (TPU lane width): the kernel's blocks must stay
+    # 128-aligned even for caller-supplied smaller block_k.
+    blk = max(128, min(block_k, 1 << (k - 1).bit_length()))
+    kk = _pad_to(key, 0, blk, value=np.iinfo(np.int32).min)
+    pp = _pad_to(_pad_to(pay, 0, blk), 1, 128)
+    # Padded delta lanes target row -1: they can never match a register.
+    di = _pad_to(d_idx, 0, 8, value=-1)
+    dk = _pad_to(d_key, 0, 8, value=0)
+    dp = _pad_to(_pad_to(d_pay, 0, 8), 1, 128)
+    ok, op = _da.delta_apply(kk, pp, di, dk, dp, block_k=blk,
+                             interpret=not _on_tpu())
+    return ok[:k], op[:k, :pay.shape[1]]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,

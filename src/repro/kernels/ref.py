@@ -29,6 +29,30 @@ def lww_merge(key_a: jax.Array, payload_a: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Delta scatter-apply (delta-state sync hot path)
+# ---------------------------------------------------------------------------
+
+def delta_apply(key: jax.Array, payload: jax.Array, d_idx: jax.Array,
+                d_key: jax.Array, d_payload: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Apply an LWW delta buffer: lane j writes register ``d_idx[j]`` iff its
+    key wins.  Empty lanes carry ``d_idx = -1``; target indices must be
+    unique (core/delta.py extraction guarantees it — the kernel additionally
+    resolves duplicates by sequential max, which jnp scatter cannot).
+
+    key: i32[K]; payload: [K, D]; d_idx/d_key: i32[Dc]; d_payload: [Dc, D].
+    """
+    k = key.shape[0]
+    safe = jnp.clip(d_idx, 0, k - 1)
+    wins = (d_idx >= 0) & (d_key > key[safe])
+    tgt = jnp.where(wins, d_idx, k)          # losers routed out of bounds
+    out_key = key.at[tgt].set(d_key, mode="drop")
+    out_payload = payload.at[tgt].set(d_payload.astype(payload.dtype),
+                                      mode="drop")
+    return out_key, out_payload
+
+
+# ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------
 

@@ -148,7 +148,7 @@ def _sharding_tree(mesh, spec_tree):
 def lower_cell(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
                fused_coord=False, microbatches=1, remat=True,
                seq_parallel=True, mla_cache="latent",
-               merge_every=1):
+               merge_every=1, delta_capacity=64):
     """Returns the lowered computation. Never allocates device memory.
 
     Training cells use FSDP (fully-sharded params/grads/optimizer — the
@@ -165,12 +165,13 @@ def lower_cell(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
                                  fused_coord=fused_coord,
                                  microbatches=microbatches, remat=remat,
                                  mla_cache=mla_cache,
-                                 merge_every=merge_every)
+                                 merge_every=merge_every,
+                                 delta_capacity=delta_capacity)
 
 
 def _lower_cell_inner(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
                       fused_coord=False, microbatches=1, remat=True,
-                      mla_cache="latent", merge_every=1):
+                      mla_cache="latent", merge_every=1, delta_capacity=64):
     part = Partitioner(mesh, fsdp=(shape.kind == "train"),
                        mla_cache=mla_cache)
     p_abs = lm.abstract_params(cfg)
@@ -257,15 +258,21 @@ def _lower_cell_inner(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
     if fused_coord:
         n_rep = dp_size
         from repro.core import doc as doc_mod, gset
-        coord_abs = jax.eval_shape(lambda: engine_mod.replicate_coord(
-            {"doc": doc_mod.empty(64, 2048),
-             "heartbeats": gset.GCounter.zeros(n_rep)}, n_rep))
+
+        def coord_template():
+            base = {"doc": doc_mod.empty(64, 2048),
+                    "heartbeats": gset.GCounter.zeros(n_rep)}
+            if merge_strategy == "delta":
+                base = engine_mod.with_delta_frontier(base)
+            return engine_mod.replicate_coord(base, n_rep)
+
+        coord_abs = jax.eval_shape(coord_template)
         coord_shard = jax.tree.map(
             lambda x: NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))),
             coord_abs)
         step_fn = engine_mod.make_fused_serve_step(
             cfg, mesh, dp, merge_strategy=merge_strategy,
-            merge_every=merge_every)
+            merge_every=merge_every, delta_capacity=delta_capacity)
         slots = sd((b,), jnp.int32)
         active = sd((b,), jnp.bool_)
         stepi = sd((), jnp.int32)
@@ -396,7 +403,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              moe_dispatch: str | None = None, remat: bool = True,
              microbatches: int = 1, capacity_factor: float | None = None,
              mla_cache: str = "latent", merge_every: int = 1,
-             ring_cache: bool = False) -> dict:
+             delta_capacity: int = 64, ring_cache: bool = False) -> dict:
     shape = SHAPES[shape_name]
     cfg = configs.get(arch)
     if ring_cache:
@@ -432,7 +439,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
                              fused_coord=fused_coord, remat=remat,
                              microbatches=microbatches,
                              mla_cache=mla_cache,
-                             merge_every=merge_every)
+                             merge_every=merge_every,
+                             delta_capacity=delta_capacity)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -444,7 +452,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             cfg, shape, mesh, merge_strategy=merge_strategy,
             fused_coord=fused_coord, remat=remat, microbatches=1,
             mla_cache=mla_cache,
-            merge_every=merge_every)
+            merge_every=merge_every, delta_capacity=delta_capacity)
         record.update(
             status="ok", n_devices=int(n_dev),
             lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
@@ -503,7 +511,7 @@ def main() -> None:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--variant", default="baseline")
     ap.add_argument("--merge-strategy", default="pmax",
-                    choices=["pmax", "allgather"])
+                    choices=["pmax", "allgather", "delta"])
     ap.add_argument("--fused-coord", action="store_true")
     ap.add_argument("--moe-dispatch", default=None,
                     choices=[None, "gather", "dense"])
@@ -513,6 +521,7 @@ def main() -> None:
     ap.add_argument("--mla-cache", default="latent",
                     choices=["latent", "replicated", "seq"])
     ap.add_argument("--merge-every", type=int, default=1)
+    ap.add_argument("--delta-capacity", type=int, default=64)
     ap.add_argument("--ring-cache", action="store_true")
     args = ap.parse_args()
 
@@ -537,6 +546,7 @@ def main() -> None:
                     capacity_factor=args.capacity_factor,
                     mla_cache=args.mla_cache,
                     merge_every=args.merge_every,
+                    delta_capacity=args.delta_capacity,
                     ring_cache=args.ring_cache)
                 status = rec.get("status")
                 extra = (rec.get("reason") or rec.get("error", "")

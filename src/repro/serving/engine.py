@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import delta as delta_mod
 from repro.core import doc as doc_mod
 from repro.core import gset, merge as merge_mod
 from repro.models import lm
@@ -65,20 +66,44 @@ def replicate_coord(coord: Any, n_replicas: int) -> Any:
         lambda x: jnp.broadcast_to(x, (n_replicas,) + x.shape), coord)
 
 
+def with_delta_frontier(coord: dict) -> dict:
+    """Attach the delta-sync frontier to a coordination dict.
+
+    The delta merge strategy threads a shared frontier (the previous sync
+    point) alongside the CRDT state; it rides in the coord dict under
+    ``"frontier"`` so the fused step's signature and shardings are unchanged.
+    """
+    state = {k: v for k, v in coord.items() if k != "frontier"}
+    return dict(coord, frontier=delta_mod.frontier(state))
+
+
 def make_coord_merge(mesh: Mesh, dp_axes: tuple[str, ...],
-                     strategy: str = "pmax"):
-    """Collective merge of stacked per-replica CRDT state (leaves [R, ...])."""
+                     strategy: str = "pmax", *, delta_capacity: int = 64):
+    """Collective merge of stacked per-replica CRDT state (leaves [R, ...]).
+
+    For ``strategy="delta"`` the coord dict must carry a ``"frontier"`` entry
+    (see ``with_delta_frontier``); deltas beyond it ring-circulate instead of
+    the full state.
+    """
+    axis_sizes = tuple(mesh.shape[a] for a in dp_axes)
 
     def local(stacked):
         state = jax.tree.map(lambda x: jnp.squeeze(x, 0), stacked)
-        merged = merge_mod.collective_merge(state, dp_axes, strategy)
+        if strategy == "delta":
+            fr = state.pop("frontier")
+            merged, fr = merge_mod.delta_merge(
+                state, fr, dp_axes, axis_sizes, capacity=delta_capacity)
+            merged = dict(merged, frontier=fr)
+        else:
+            merged = merge_mod.collective_merge(state, dp_axes, strategy)
         return jax.tree.map(lambda x: x[None], merged)
 
     def merge_fn(coord_stacked):
         specs = jax.tree.map(
             lambda x: P(dp_axes, *([None] * (x.ndim - 1))), coord_stacked)
-        return jax.shard_map(local, mesh=mesh, in_specs=(specs,),
-                             out_specs=specs, check_vma=False)(coord_stacked)
+        return merge_mod.shard_map(local, mesh=mesh, in_specs=(specs,),
+                                   out_specs=specs,
+                                   check_vma=False)(coord_stacked)
 
     return merge_fn
 
@@ -86,7 +111,7 @@ def make_coord_merge(mesh: Mesh, dp_axes: tuple[str, ...],
 def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
                           dp_axes: tuple[str, ...], *, impl: str = "ref",
                           merge_strategy: str = "pmax",
-                          merge_every: int = 1):
+                          merge_every: int = 1, delta_capacity: int = 64):
     """Decode one token per agent stream AND converge coordination state.
 
     Inputs (leading dims):
@@ -103,8 +128,14 @@ def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
     deterministic convergence with one-collective staleness.  ``merge_every``
     trades staleness for collective bytes (a §Perf axis; the paper's 50 ms
     sync delay is the analogous knob).
+
+    With ``merge_strategy="delta"`` the coord dict additionally carries a
+    ``"frontier"`` entry (build it with ``with_delta_frontier``) and each
+    sync ships O(Δ) delta buffers around the replica ring instead of O(S)
+    state — see core/delta.py.
     """
-    merge_fn = make_coord_merge(mesh, dp_axes, merge_strategy)
+    merge_fn = make_coord_merge(mesh, dp_axes, merge_strategy,
+                                delta_capacity=delta_capacity)
     n_rep = 1
     for a in dp_axes:
         n_rep *= mesh.shape[a]
@@ -121,9 +152,9 @@ def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
         specs = jax.tree.map(
             lambda x: P(dp_axes, *([None] * (x.ndim - 1))), coord_stacked)
         bspec = P(dp_axes)
-        return jax.shard_map(local, mesh=mesh,
-                             in_specs=(specs, bspec, bspec, bspec),
-                             out_specs=specs, check_vma=False)(
+        return merge_mod.shard_map(local, mesh=mesh,
+                                   in_specs=(specs, bspec, bspec, bspec),
+                                   out_specs=specs, check_vma=False)(
             coord_stacked, token, slots, active)
 
     def serve_step(params, cache, token, pos, slots, active, coord, step):

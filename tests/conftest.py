@@ -1,6 +1,12 @@
 """Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
 tests and benches must see the single real CPU device; only launch/dryrun.py
-forces 512 placeholder devices (and only when run as its own process)."""
+forces 512 placeholder devices (and only when run as its own process).
+
+``hypothesis`` is optional: property modules that need it call
+``pytest.importorskip("hypothesis")`` at import time and skip cleanly when it
+is absent (tests/test_delta_properties.py runs its property sweeps off
+explicit seed parameters instead, so delta coverage survives either way).
+"""
 import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -9,6 +15,12 @@ import jax
 import numpy as np
 import pytest
 
+try:
+    import hypothesis
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
 
 @pytest.fixture(scope="session")
 def rng():
@@ -16,6 +28,8 @@ def rng():
 
 
 def pytest_configure(config):
+    if not HAVE_HYPOTHESIS:
+        return
     # Keep hypothesis deadlines off: first call pays jit compile time.
     from hypothesis import settings, HealthCheck
     settings.register_profile(

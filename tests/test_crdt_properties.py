@@ -10,6 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis optional; see conftest")
 from hypothesis import given, strategies as st
 
 from repro.core import doc, gset, lww, merge, rga

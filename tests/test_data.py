@@ -2,6 +2,9 @@
 from __future__ import annotations
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis optional; see conftest")
 from hypothesis import given, strategies as st
 
 from repro.data.pipeline import DataConfig, Prefetcher, shard_batches, \

@@ -1,0 +1,359 @@
+"""Property tests for delta-state sync (core/delta.py, merge.delta_merge).
+
+Random op schedules across 2-5 clients check, for every registered CRDT:
+
+  * fold-join permutation invariance (the join argument order never matters),
+  * delta-sync ≡ full-state join, bit-for-bit,
+  * idempotence of re-applied deltas,
+  * overflow liveness: deltas truncated at capacity converge over later
+    rounds instead of losing ops,
+  * the ring-exchange collective (merge.delta_merge, run under vmap with an
+    axis name) equals the host fold join on every replica.
+
+Seeds are explicit pytest parameters so the schedules are random but
+reproducible without the hypothesis package (conftest.py makes hypothesis
+optional); each seed drives a fresh schedule, so the sweep is a bounded
+property search.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delta, doc, gset, lww, merge, rga, todo
+
+SEEDS = range(8)
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Random schedules: every replica applies its own ops; gossip via DeltaSync.
+# ---------------------------------------------------------------------------
+
+
+def _random_slotdoc_session(rng, n_clients: int, n_slots: int = 6,
+                            cap: int = 32, rounds: int = 6):
+    """Single-writer slots partitioned across clients; random appends."""
+    base = doc.empty(n_slots, cap)
+    replicas = [base for _ in range(n_clients)]
+    for _ in range(rounds):
+        who = int(rng.integers(0, n_clients))
+        slot = int(rng.choice(np.arange(who, n_slots, n_clients)))
+        n = int(rng.integers(1, 5))
+        buf = np.zeros((4,), np.int32)
+        buf[:n] = rng.integers(1, 99, size=n)
+        replicas[who] = doc.append(replicas[who], slot, jnp.asarray(buf), n)
+    return base, replicas
+
+
+def _random_board_session(rng, n_clients: int, k: int = 8, rounds: int = 8):
+    """Concurrent LWW writes: post/claim/complete with per-client clocks."""
+    base = todo.empty(k)
+    replicas = [base for _ in range(n_clients)]
+    clocks = [1] * n_clients
+    for _ in range(rounds):
+        who = int(rng.integers(0, n_clients))
+        key = int(rng.integers(0, k))
+        b = replicas[who]
+        op = rng.integers(0, 3)
+        clk, cli = jnp.int32(clocks[who]), jnp.int32(who + 1)
+        if op == 0:
+            b = todo.post(b, key, jnp.zeros((k,), bool), clk, cli)
+        elif op == 1:
+            b = todo.claim(b, key, cli, clk, jnp.int32(0))
+        else:
+            b = todo.complete(b, key, cli, clk)
+        clocks[who] += 1
+        replicas[who] = b
+    return base, replicas
+
+
+def _random_glog_session(rng, n_clients: int, cap: int = 16, rounds: int = 10):
+    base = gset.GLog.empty(n_clients, cap, {"x": ((), jnp.int32)})
+    replicas = [base for _ in range(n_clients)]
+    for _ in range(rounds):
+        who = int(rng.integers(0, n_clients))
+        replicas[who] = replicas[who].append(
+            jnp.int32(who), x=jnp.int32(rng.integers(1, 99)))
+    return base, replicas
+
+
+def _random_rga_session(rng, n_clients: int, cap: int = 16, rounds: int = 8):
+    base = rga.empty(n_clients + 1, cap)
+    replicas = [base for _ in range(n_clients)]
+    clocks = [1] * n_clients
+    for _ in range(rounds):
+        who = int(rng.integers(0, n_clients))
+        state = replicas[who]
+        toks, oids, n = rga.materialize(state)
+        n = int(n)
+        if n == 0 or rng.random() < 0.5:
+            origin = state.head_oid
+        else:
+            origin = int(np.asarray(oids)[int(rng.integers(0, n))])
+        run = int(rng.integers(1, 4))
+        buf = np.zeros((4,), np.int32)
+        buf[:run] = rng.integers(1, 99, size=run)
+        replicas[who] = rga.insert_run(state, who + 1, clocks[who], origin,
+                                       jnp.asarray(buf), run)
+        clocks[who] += run
+        if rng.random() < 0.25:
+            oid = int(rng.integers(0, (n_clients + 1) * cap))
+            replicas[who] = rga.delete(replicas[who], jnp.int32(oid))
+    return base, replicas
+
+
+SESSIONS = {
+    "slotdoc": _random_slotdoc_session,
+    "board": _random_board_session,
+    "glog": _random_glog_session,
+    "rga": _random_rga_session,
+}
+
+
+# ---------------------------------------------------------------------------
+# fold-join permutation invariance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(SESSIONS))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fold_join_permutation_invariant(kind, seed):
+    rng = np.random.default_rng(seed)
+    n_clients = int(rng.integers(2, 6))
+    _, replicas = SESSIONS[kind](rng, n_clients)
+    m1 = merge.fold_join(replicas)
+    perm = rng.permutation(n_clients)
+    m2 = merge.fold_join([replicas[i] for i in perm])
+    assert _trees_equal(m1, m2)
+
+
+# ---------------------------------------------------------------------------
+# delta sync ≡ full-state join, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(SESSIONS))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_delta_sync_equals_fold_join(kind, seed):
+    rng = np.random.default_rng(100 + seed)
+    n_clients = int(rng.integers(2, 6))
+    base, replicas = SESSIONS[kind](rng, n_clients)
+    want = merge.fold_join(replicas)
+    ds = delta.DeltaSync(base, capacity=32)
+    outs = ds.sync(replicas)
+    for out in outs:
+        assert _trees_equal(out, want)
+    assert ds.bytes_shipped >= 0
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_delta_sync_multi_round_with_interleaved_edits(seed):
+    """Frontier threading across rounds: edits between syncs ship as O(Δ)."""
+    rng = np.random.default_rng(200 + seed)
+    n_clients = int(rng.integers(2, 6))
+    base, replicas = _random_slotdoc_session(rng, n_clients)
+    ds = delta.DeltaSync(base, capacity=32)
+    for _ in range(3):
+        replicas = ds.sync(replicas)
+        assert all(_trees_equal(r, merge.fold_join(replicas))
+                   for r in replicas)
+        # Next burst of single-writer edits.
+        for who in range(n_clients):
+            slot = int(rng.choice(np.arange(who, 6, n_clients)))
+            replicas[who] = doc.append(replicas[who], slot,
+                                       jnp.asarray([7, 8, 0, 0]), 2)
+
+
+# ---------------------------------------------------------------------------
+# idempotence of re-applied deltas
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(SESSIONS))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_delta_reapply_idempotent(kind, seed):
+    rng = np.random.default_rng(300 + seed)
+    n_clients = int(rng.integers(2, 6))
+    base, replicas = SESSIONS[kind](rng, n_clients)
+    fr = delta.frontier(base)
+    for r in replicas:
+        d, _ = delta.extract(r, fr, 32)
+        once = delta.apply(base, d)
+        twice = delta.apply(once, d)
+        assert _trees_equal(once, twice)
+        # Applying a replica's own delta back to itself is also a no-op.
+        assert _trees_equal(r, delta.apply(r, d))
+
+
+# ---------------------------------------------------------------------------
+# overflow liveness: truncated deltas converge over later rounds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["slotdoc", "glog", "rga", "board"])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_delta_overflow_converges_eventually(kind, seed):
+    rng = np.random.default_rng(400 + seed)
+    n_clients = int(rng.integers(2, 6))
+    base, replicas = SESSIONS[kind](rng, n_clients, rounds=12)
+    want = merge.fold_join(replicas)
+    ds = delta.DeltaSync(base, capacity=2)     # far below the edit volume
+    for _ in range(12):
+        replicas = ds.sync(replicas)
+        if all(_trees_equal(r, want) for r in replicas):
+            break
+    for r in replicas:
+        assert _trees_equal(r, want)
+
+
+# ---------------------------------------------------------------------------
+# ring-exchange collective (merge.delta_merge under vmap)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(SESSIONS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_delta_merge_ring_equals_fold_join(kind, seed):
+    rng = np.random.default_rng(500 + seed)
+    n_clients = int(rng.integers(2, 6))
+    base, replicas = SESSIONS[kind](rng, n_clients)
+    want = merge.fold_join(replicas)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *replicas)
+    fr = delta.frontier(base)
+    fr_stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape), fr)
+
+    def ring(state, f):
+        return merge.delta_merge(state, f, "r", n_clients, capacity=32)
+
+    merged, fr2 = jax.vmap(ring, axis_name="r")(stacked, fr_stacked)
+    want_fr = delta.frontier(want)
+    for i in range(n_clients):
+        assert _trees_equal(jax.tree.map(lambda x: x[i], merged), want)
+        # New frontier is identical everywhere and matches the merged state.
+        assert _trees_equal(jax.tree.map(lambda x: x[i], fr2), want_fr)
+
+
+def test_delta_merge_multi_axis_overflow_liveness():
+    """Regression: a 2×2 grid where the second axis' forwarded delta
+    overflows capacity must still converge on later rounds — the frontier is
+    the pmin of what every replica observed, never ahead of an undelivered
+    op (a join of per-axis shipped watermarks would lose regs 2,3 forever).
+    """
+    k = 8
+    base = todo.empty(k)
+
+    def writer(regs, client):
+        b = base
+        for r in regs:
+            b = todo.post(b, r, jnp.zeros((k,), bool), jnp.int32(5),
+                          jnp.int32(client))
+        return b
+
+    grid = [[writer([0, 1], 1), base], [writer([2, 3], 2), base]]
+    want = merge.fold_join([grid[0][0], grid[1][0]])
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[jax.tree.map(lambda *ys: jnp.stack(ys), *row) for row in grid])
+    fr = jax.tree.map(lambda x: jnp.broadcast_to(x, (2, 2) + x.shape),
+                      delta.frontier(base))
+
+    ring = jax.vmap(jax.vmap(
+        lambda s, f: merge.delta_merge(s, f, ("a", "b"), (2, 2), capacity=2),
+        axis_name="b"), axis_name="a")
+    state = stacked
+    for _ in range(4):
+        state, fr = ring(state, fr)
+        if all(_trees_equal(jax.tree.map(lambda x: x[i, j], state), want)
+               for i in range(2) for j in range(2)):
+            break
+    for i in range(2):
+        for j in range(2):
+            assert _trees_equal(jax.tree.map(lambda x: x[i, j], state), want)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_delta_merge_dict_container_ring(seed):
+    """The fused serving step's coord dict shape syncs through the ring."""
+    rng = np.random.default_rng(600 + seed)
+    n = 4
+    base = {"doc": doc.empty(4, 16), "heartbeats": gset.GCounter.zeros(n)}
+    replicas = []
+    for i in range(n):
+        d = doc.append(base["doc"], i, jnp.asarray([i + 1, i + 2, 0, 0]), 2)
+        hb = gset.GCounter(jnp.zeros((n,), jnp.int32).at[i].set(
+            int(rng.integers(1, 9))))
+        replicas.append({"doc": d, "heartbeats": hb})
+    want = merge.fold_join(replicas)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *replicas)
+    fr = delta.frontier(base)
+    fr_stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), fr)
+    merged, _ = jax.vmap(
+        lambda s, f: merge.delta_merge(s, f, "r", n, capacity=8),
+        axis_name="r")(stacked, fr_stacked)
+    for i in range(n):
+        assert _trees_equal(jax.tree.map(lambda x: x[i], merged), want)
+
+
+# ---------------------------------------------------------------------------
+# wire-cost acceptance: delta < pmax at low edit rates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rate", [0.01, 0.05])
+def test_delta_bytes_beat_pmax_at_low_edit_rates(rate):
+    from benchmarks.bench_merge import sweep_cell
+    cell = sweep_cell(4, 256, rate, runs=1)
+    assert cell["delta_exact"]
+    assert cell["bytes"]["delta"] < cell["bytes"]["pmax"], cell["bytes"]
+    assert cell["bytes"]["pmax"] < cell["bytes"]["allgather"]
+
+
+def test_lww_delta_no_starvation_under_churn():
+    """Regression: sustained churn of >= capacity registers must not starve
+    another register's pending write — extraction ships oldest keys first,
+    and a starved key is by definition the oldest changed one."""
+    k = 16
+    bank = lww.empty(k, {"v": ((), jnp.int32)})
+    peer = lww.empty(k, {"v": ((), jnp.int32)})
+    fr = delta.frontier(peer)
+    bank = lww.write(bank, jnp.int32(5), jnp.int32(1), jnp.int32(2),
+                     v=jnp.int32(55))
+    clock = 2
+    for _ in range(4):
+        for r in range(4):                   # churn registers 0-3 each round
+            bank = lww.write(bank, jnp.int32(r), jnp.int32(clock),
+                             jnp.int32(1), v=jnp.int32(clock))
+            clock += 1
+        d, fr = delta.extract(bank, fr, 4)
+        peer = delta.apply(peer, d)
+        if int(peer.clock[5]) > 0:
+            break
+    assert int(peer.payload["v"][5]) == 55, "register 5 starved by churn"
+
+
+def test_lww_delta_capacity_smaller_than_bank():
+    """Extraction left-packs changed registers; unshipped ones keep their
+    place in the frontier diff and ship next round."""
+    k = 16
+    bank = lww.empty(k, {"v": ((), jnp.int32)})
+    for i in range(6):
+        bank = lww.write(bank, jnp.int32(i), jnp.int32(i + 1),
+                         jnp.int32(1), v=jnp.int32(10 * i))
+    fr = delta.frontier(lww.empty(k, {"v": ((), jnp.int32)}))
+    d1, fr1 = delta.extract(bank, fr, 4)
+    assert int(np.sum(np.asarray(d1.idx) >= 0)) == 4
+    d2, fr2 = delta.extract(bank, fr1, 4)
+    assert int(np.sum(np.asarray(d2.idx) >= 0)) == 2
+    empty_bank = lww.empty(k, {"v": ((), jnp.int32)})
+    got = delta.apply(delta.apply(empty_bank, d1), d2)
+    assert _trees_equal(got, bank)

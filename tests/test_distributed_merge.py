@@ -49,14 +49,54 @@ SCRIPT = textwrap.dedent("""
             return jax.tree.map(lambda x: x[None], m)
         specs = jax.tree.map(lambda x: P("data", *([None] * (x.ndim - 1))),
                              stacked)
-        out = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(specs,),
-                                    out_specs=specs, check_vma=False))(stacked)
+        out = jax.jit(merge.shard_map(local, mesh=mesh, in_specs=(specs,),
+                                      out_specs=specs,
+                                      check_vma=False))(stacked)
         for i in range(R):
             got = jax.tree.map(lambda x: np.asarray(x[i]), out)
             want = jax.tree.map(np.asarray, expected)
             for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
                 np.testing.assert_array_equal(g, w)
         print(f"{strategy}: exact join on all replicas OK")
+
+    # --- delta-state ring sync: O(Δ) ppermute exchange on the real mesh -----
+    from repro.core import delta as delta_mod
+    R_docs = []
+    base_doc = doc_mod.empty(4, 16)
+    for i in range(R):
+        R_docs.append(doc_mod.append(base_doc, i,
+                                     jnp.asarray([i + 1, i + 2, 0, 0]), 2))
+    expected_delta = merge.fold_join(R_docs)
+    stacked_docs = jax.tree.map(lambda *xs: jnp.stack(xs), *R_docs)
+    fr0 = delta_mod.frontier(base_doc)
+    fr_stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape),
+                              fr0)
+
+    def local_delta(st, fr):
+        s = jax.tree.map(lambda x: jnp.squeeze(x, 0), st)
+        f = jax.tree.map(lambda x: jnp.squeeze(x, 0), fr)
+        m, f2 = merge.delta_merge(s, f, ("data",), (R,), capacity=8)
+        return (jax.tree.map(lambda x: x[None], m),
+                jax.tree.map(lambda x: x[None], f2))
+
+    d_specs = jax.tree.map(lambda x: P("data", *([None] * (x.ndim - 1))),
+                           stacked_docs)
+    f_specs = jax.tree.map(lambda x: P("data", *([None] * (x.ndim - 1))),
+                           fr_stacked)
+    out_docs, out_fr = jax.jit(merge.shard_map(
+        local_delta, mesh=mesh, in_specs=(d_specs, f_specs),
+        out_specs=(d_specs, f_specs), check_vma=False))(stacked_docs,
+                                                        fr_stacked)
+    want_fr = delta_mod.frontier(expected_delta)
+    for i in range(R):
+        got = jax.tree.map(lambda x: np.asarray(x[i]), out_docs)
+        for g, w in zip(jax.tree.leaves(got),
+                        jax.tree.leaves(jax.tree.map(np.asarray,
+                                                     expected_delta))):
+            np.testing.assert_array_equal(g, w)
+        np.testing.assert_array_equal(np.asarray(out_fr.length[i]),
+                                      np.asarray(want_fr.length))
+    print("delta: exact join on all replicas OK")
 
     # --- SlotDoc + heartbeat merge through the fused-serve-step helper
     docs = []
@@ -107,6 +147,34 @@ SCRIPT = textwrap.dedent("""
                for i in range(R)]
     assert len(set(digests)) == 1, digests
     print("fused serve step convergence OK")
+
+    # --- the fused step with DELTA coordination also converges -------------
+    coord2 = {"doc": doc_mod.empty(8, 16),
+              "heartbeats": gset.GCounter.zeros(R)}
+    coord2 = engine_mod.replicate_coord(
+        engine_mod.with_delta_frontier(coord2), R)
+    cache2 = lm_mod.init_cache(cfg, B, 16)
+    step2 = engine_mod.make_fused_serve_step(cfg, mesh, ("data",),
+                                             merge_strategy="delta",
+                                             delta_capacity=8)
+    token2 = jnp.arange(2, 2 + B, dtype=jnp.int32)
+    pos2 = jnp.zeros((B,), jnp.int32)
+    with mesh:
+        for t in range(3):
+            token2, cache2, pos2, coord2 = step2(params, cache2, token2,
+                                                 pos2, slots, active,
+                                                 coord2, jnp.int32(t))
+    lengths2 = np.asarray(coord2["doc"].length)
+    for i in range(R):
+        np.testing.assert_array_equal(lengths2[i], np.full((8,), 3))
+    digests2 = [int(doc_mod.digest(jax.tree.map(lambda x: x[i],
+                                                coord2["doc"])))
+                for i in range(R)]
+    assert len(set(digests2)) == 1, digests2
+    # Frontier tracked every appended token (merge_every=1, no overflow).
+    np.testing.assert_array_equal(
+        np.asarray(coord2["frontier"]["doc"].length[0]), np.full((8,), 3))
+    print("fused delta serve step convergence OK")
     print("ALL_OK")
 """)
 
@@ -121,3 +189,5 @@ def test_collective_merges_on_8_devices():
     assert "ALL_OK" in proc.stdout
     assert "pmax: exact join" in proc.stdout
     assert "allgather: exact join" in proc.stdout
+    assert "delta: exact join" in proc.stdout
+    assert "fused delta serve step convergence OK" in proc.stdout

@@ -57,6 +57,72 @@ def test_lww_merge_is_join():
 
 
 # ---------------------------------------------------------------------------
+# delta_apply (delta-state sync scatter kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,d,dc", [(1, 1, 1), (7, 3, 4), (128, 8, 16),
+                                    (1000, 17, 33), (4096, 4, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_delta_apply_sweep(k, d, dc, dtype):
+    dc = min(dc, k)
+    key = jnp.asarray(RNG.integers(0, 10_000, k), jnp.int32)
+    if dtype == jnp.int32:
+        pay = jnp.asarray(RNG.integers(-99, 99, (k, d)), dtype)
+        dpay = jnp.asarray(RNG.integers(-99, 99, (dc, d)), dtype)
+    else:
+        pay = jnp.asarray(RNG.normal(size=(k, d)), dtype)
+        dpay = jnp.asarray(RNG.normal(size=(dc, d)), dtype)
+    idx = RNG.permutation(k)[:dc].astype(np.int32)   # unique targets
+    empty = RNG.random(dc) < 0.25                    # some empty lanes
+    d_idx = jnp.asarray(np.where(empty, -1, idx), jnp.int32)
+    d_key = jnp.asarray(RNG.integers(0, 20_000, dc), jnp.int32)
+    k1, p1 = ops.delta_apply(key, pay, d_idx, d_key, dpay)
+    k2, p2 = ref.delta_apply(key, pay, d_idx, d_key, dpay)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_delta_apply_matches_semantic_lww_writes():
+    """Kernel result == applying each winning delta lane as an LWW write."""
+    k, d, dc = 64, 3, 16
+    key = np.asarray(RNG.integers(0, 100, k), np.int32)
+    pay = np.asarray(RNG.integers(-9, 9, (k, d)), np.int32)
+    idx = RNG.permutation(k)[:dc].astype(np.int32)
+    dkey = np.asarray(RNG.integers(0, 200, dc), np.int32)
+    dpay = np.asarray(RNG.integers(-9, 9, (dc, d)), np.int32)
+    want_key, want_pay = key.copy(), pay.copy()
+    for j in range(dc):
+        if dkey[j] > want_key[idx[j]]:
+            want_key[idx[j]] = dkey[j]
+            want_pay[idx[j]] = dpay[j]
+    k1, p1 = ops.delta_apply(jnp.asarray(key), jnp.asarray(pay),
+                             jnp.asarray(idx), jnp.asarray(dkey),
+                             jnp.asarray(dpay))
+    np.testing.assert_array_equal(np.asarray(k1), want_key)
+    np.testing.assert_array_equal(np.asarray(p1), want_pay)
+
+
+def test_delta_apply_idempotent_and_empty():
+    k, d, dc = 100, 5, 8
+    key = jnp.asarray(RNG.integers(0, 100, k), jnp.int32)
+    pay = jnp.asarray(RNG.integers(-9, 9, (k, d)), jnp.int32)
+    # All-empty delta: no-op.
+    k0, p0 = ops.delta_apply(key, pay, jnp.full((dc,), -1, jnp.int32),
+                             jnp.zeros((dc,), jnp.int32),
+                             jnp.zeros((dc, d), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(k0), np.asarray(key))
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(pay))
+    # Re-applying a delta is a no-op (keys no longer beat the bank).
+    idx = jnp.asarray(RNG.permutation(k)[:dc], jnp.int32)
+    dkey = jnp.asarray(RNG.integers(100, 200, dc), jnp.int32)
+    dpay = jnp.asarray(RNG.integers(-9, 9, (dc, d)), jnp.int32)
+    k1, p1 = ops.delta_apply(key, pay, idx, dkey, dpay)
+    k2, p2 = ops.delta_apply(k1, p1, idx, dkey, dpay)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,186 @@
+"""Edge cases of merge._masked_pmax and rga.insert_run capacity overflow.
+
+``_masked_pmax`` is the workhorse of the pmax merge strategy; its contract
+has three documented subtleties that were previously untested:
+
+  * invalid lanes contribute the dtype's neutral element (-inf / INT_MIN /
+    False) so they never win,
+  * lanes that NO replica has observed fall back to the (identical) local
+    default, keeping the result bit-equal to the fold join,
+  * payloads at the neutral sentinel itself alias that fallback — the
+    documented precondition is that real payloads never carry the sentinel
+    (tokens/clocks/lengths are >= -1); the test pins the aliasing behaviour
+    so a future payload type that violates the precondition fails loudly.
+
+Collectives run under ``jax.vmap(..., axis_name=...)`` — the single-process
+stand-in for the replica mesh axis (the 8-device shard_map path is covered
+by tests/test_distributed_merge.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import merge, rga
+
+R = 4
+
+
+def _run_masked_pmax(x, valid):
+    """Apply _masked_pmax across a stacked replica axis [R, ...]."""
+    fn = jax.vmap(lambda xi, vi: merge._masked_pmax(xi, vi, "r"),
+                  axis_name="r")
+    return np.asarray(fn(x, valid))
+
+
+# ---------------------------------------------------------------------------
+# _masked_pmax dtype paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32, jnp.bool_])
+def test_masked_pmax_valid_lanes_take_max(dtype):
+    rng = np.random.default_rng(0)
+    if dtype == jnp.bool_:
+        x = jnp.asarray(rng.random((R, 8)) > 0.5)
+    elif dtype == jnp.float32:
+        x = jnp.asarray(rng.normal(size=(R, 8)), dtype)
+    else:
+        x = jnp.asarray(rng.integers(-50, 50, (R, 8)), dtype)
+    valid = jnp.ones((R, 8), jnp.bool_)
+    out = _run_masked_pmax(x, valid)
+    want = np.asarray(jnp.max(x.astype(jnp.int32), axis=0).astype(dtype)
+                      if dtype == jnp.bool_ else jnp.max(x, axis=0))
+    for i in range(R):
+        np.testing.assert_array_equal(out[i], want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_masked_pmax_single_winner_carries_payload(dtype):
+    """Exactly one valid lane per position: the winner's payload is exact,
+    even when it is negative (i.e. below every invalid lane's raw value)."""
+    x = np.zeros((R, 4), np.float64)
+    x[:, :] = 99.0                       # garbage on non-winners
+    winners = [0, 1, 2, 3]
+    for j, w in enumerate(winners):
+        x[w, j] = -7.0 - j               # winner's payload, negative
+    xv = jnp.asarray(x, dtype)
+    valid = jnp.asarray([[w == i for j, w in enumerate(winners)]
+                         for i in range(R)])
+    out = _run_masked_pmax(xv, valid)
+    for i in range(R):
+        np.testing.assert_array_equal(
+            out[i], np.asarray([-7.0, -8.0, -9.0, -10.0],
+                               np.asarray(xv).dtype))
+
+
+def test_masked_pmax_all_invalid_keeps_local_default():
+    """Lanes no replica observed keep the (identical) local default — the
+    bit-equal-to-fold-join guarantee for unobserved state."""
+    default = 3
+    x = jnp.full((R, 6), default, jnp.int32)
+    valid = jnp.zeros((R, 6), jnp.bool_)
+    out = _run_masked_pmax(x, valid)
+    np.testing.assert_array_equal(out, np.full((R, 6), default))
+    # float path
+    xf = jnp.full((R, 6), 0.5, jnp.float32)
+    outf = _run_masked_pmax(xf, valid)
+    np.testing.assert_array_equal(outf, np.full((R, 6), 0.5, np.float32))
+    # bool path: OR of all-False masked lanes stays False
+    xb = jnp.zeros((R, 6), jnp.bool_)
+    outb = _run_masked_pmax(xb, valid)
+    assert not outb.any()
+
+
+def test_masked_pmax_payload_at_neutral_sentinel_aliases_local():
+    """A valid payload AT the sentinel (INT32_MIN / -inf) is indistinguishable
+    from 'nobody observed this lane': every replica keeps its local value.
+    This pins the documented precondition (payloads are >= -1) — if a payload
+    type ever carries the sentinel, replicas may diverge exactly here."""
+    sentinel = np.iinfo(np.int32).min
+    x = np.full((R, 2), 5, np.int32)
+    x[1, 0] = sentinel                   # replica 1's "real" payload
+    valid = np.zeros((R, 2), bool)
+    valid[1, :] = True
+    out = _run_masked_pmax(jnp.asarray(x), jnp.asarray(valid))
+    # Lane 1 (payload 5, observed) propagates; lane 0 (payload == sentinel)
+    # aliases the unobserved fallback: each replica keeps its own local x.
+    np.testing.assert_array_equal(out[:, 1], np.full((R,), 5))
+    np.testing.assert_array_equal(out[:, 0], x[:, 0])
+
+    xf = np.full((R, 2), 1.0, np.float32)
+    xf[2, 0] = -np.inf
+    validf = np.zeros((R, 2), bool)
+    validf[2, :] = True
+    outf = _run_masked_pmax(jnp.asarray(xf), jnp.asarray(validf))
+    np.testing.assert_array_equal(outf[:, 0], xf[:, 0])
+
+
+def test_masked_pmax_trailing_payload_dims_broadcast():
+    """valid is [R, K]; payloads may be [R, K, D] (LWW payload fields)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 50, (R, 3, 5)), jnp.int32)
+    valid = jnp.asarray([[True, False, False]] * R)
+    valid = valid.at[2, 1].set(True)
+    out = _run_masked_pmax(x, valid)
+    want0 = np.max(np.asarray(x)[:, 0], axis=0)
+    for i in range(R):
+        np.testing.assert_array_equal(out[i, 0], want0)       # all valid: max
+        np.testing.assert_array_equal(out[i, 1], np.asarray(x)[2, 1])  # one
+        np.testing.assert_array_equal(out[i, 2], np.asarray(x)[i, 2])  # none
+
+
+# ---------------------------------------------------------------------------
+# rga.insert_run capacity overflow
+# ---------------------------------------------------------------------------
+
+
+def test_insert_run_truncates_at_capacity():
+    cap = 8
+    s = rga.empty(3, cap)
+    s = rga.insert_run(s, 1, 1, s.head_oid,
+                       jnp.asarray(np.arange(1, 7, dtype=np.int32)), 6)
+    assert int(s.count[1]) == 6
+    # Second run of 6 only has room for 2.
+    s = rga.insert_run(s, 1, 7, jnp.int32(1 * cap + 5),
+                       jnp.asarray(np.arange(10, 16, dtype=np.int32)), 6)
+    assert int(s.count[1]) == cap
+    toks, oids, n = rga.materialize(s)
+    assert int(n) == cap
+    np.testing.assert_array_equal(
+        np.asarray(toks[:cap]), [1, 2, 3, 4, 5, 6, 10, 11])
+
+
+def test_insert_run_overflow_merge_no_duplicate_oids():
+    """Truncated runs must still merge and materialize with unique oids."""
+    cap = 8
+    base = rga.empty(3, cap)
+    a = rga.insert_run(base, 1, 1, base.head_oid,
+                       jnp.asarray(np.arange(1, 11, dtype=np.int32)[:8]), 8)
+    a = rga.insert_run(a, 1, 9, jnp.int32(1 * cap + 7),
+                       jnp.asarray([91, 92, 93, 94]), 4)   # fully dropped
+    b = rga.insert_run(base, 2, 1, base.head_oid,
+                       jnp.asarray([51, 52, 53, 54]), 4)
+    m1 = rga.merge(a, b)
+    m2 = rga.merge(b, a)
+    toks1, oids1, n1 = rga.materialize(m1)
+    toks2, oids2, n2 = rga.materialize(m2)
+    assert int(n1) == int(n2) == int(jnp.sum(m1.count)) == 12
+    np.testing.assert_array_equal(np.asarray(toks1), np.asarray(toks2))
+    ids = np.asarray(oids1[: int(n1)])
+    assert len(set(ids.tolist())) == int(n1), "duplicate oids after overflow"
+
+
+def test_insert_run_overflow_zero_room():
+    """A run inserted into a full row is a no-op (no wraparound writes)."""
+    cap = 4
+    s = rga.empty(2, cap)
+    s = rga.insert_run(s, 1, 1, s.head_oid, jnp.asarray([1, 2, 3, 4]), 4)
+    before = jax.tree.map(np.asarray, s)
+    s2 = rga.insert_run(s, 1, 5, jnp.int32(1 * cap + 3),
+                        jnp.asarray([9, 9, 9, 9]), 4)
+    for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(
+            jax.tree.map(np.asarray, s2))):
+        np.testing.assert_array_equal(x, y)

@@ -13,6 +13,9 @@ import collections
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis optional; see conftest")
 from hypothesis import given, strategies as st
 
 from repro.core import merge, protocol, todo
