@@ -1,0 +1,188 @@
+"""Serving benchmark: dense vs paged KV cache under continuous batching.
+
+Sweeps batch × context-length skew × cache layout and reports, per config:
+
+  us_per_token            median decode-step wall time / mean active rows
+  write_bytes_per_step    cache bytes *written* per decode step (analytic)
+  read_bytes_per_step     cache bytes *read* per decode step (analytic)
+  resident_cache_mb       KV bytes pinned at the live-token watermark
+
+The write accounting is the point of the exercise: the dense path's one-hot
+``jnp.where`` rewrites the full [B, Hkv, S, D] cache per layer per step
+(O(B·max_len)), while the paged path writes one page slot per row (O(page)).
+The analytic ratio lands in ``BENCH_serving.json`` as
+``write_bytes_ratio_dense_over_paged`` — the perf-trajectory headline — next
+to measured wall times and an admission trace proving requests enter freed
+rows mid-flight.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--quick] [--out PATH]
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _dtype_bytes(dtype_str: str = "bfloat16") -> int:
+    return 2 if "16" in dtype_str else 4
+
+
+def analytic_step_bytes(cfg, *, batch: int, max_len: int, page_size: int,
+                        live_lens: list[int], paged: bool,
+                        dtype_bytes: int = 2) -> tuple[int, int]:
+    """(write_bytes, read_bytes) of KV-cache traffic for ONE decode step.
+
+    Dense: the one-hot masked select produces a full new cache value per
+    attention layer (write = |cache|) after streaming the old one (read =
+    |cache|).  Paged: one slot write per row; reads walk only live pages.
+    """
+    n_attn = sum(1 for k in (list(cfg.block_pattern) * cfg.pattern_groups)
+                 + list(cfg.tail_blocks) if k in ("attn", "moe"))
+    row_bytes = cfg.num_kv_heads * cfg.head_dim * dtype_bytes * 2   # K + V
+    if not paged:
+        cache = batch * max_len * row_bytes
+        return n_attn * cache, n_attn * cache
+    write = batch * row_bytes
+    read = sum(-(-(l + 1) // page_size) * page_size for l in live_lens) \
+        * row_bytes
+    return n_attn * write, n_attn * read
+
+
+def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
+               skew: str, paged: bool, n_requests: int, prompt_hi: int,
+               max_new: int, seed: int = 0) -> dict:
+    from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+    rng = np.random.default_rng(seed)
+    if skew == "uniform":
+        plens = [prompt_hi] * n_requests
+    else:                                       # ragged: log-uniform spread
+        plens = [int(x) for x in np.exp(rng.uniform(
+            np.log(4), np.log(prompt_hi), n_requests)).astype(int)]
+    requests = [Request(rid=i,
+                        prompt=[int(t) for t in
+                                rng.integers(2, cfg.vocab_size, p)],
+                        max_new_tokens=max_new)
+                for i, p in enumerate(plens)]
+
+    eng = ContinuousBatchingEngine(cfg, params, batch=batch, max_len=max_len,
+                                   paged=paged, page_size=page_size)
+    for r in requests:
+        eng.submit(r)
+    step_times: list[float] = []
+    active_counts: list[int] = []
+    live_len_samples: list[list[int]] = []
+    resident_peak = 0
+    while True:
+        live = [len(r.prompt) + len(r.tokens)
+                for r in eng.rows if r is not None]
+        t0 = time.perf_counter()
+        more = eng.step()
+        step_times.append(time.perf_counter() - t0)
+        if live:
+            active_counts.append(len(live))
+            live_len_samples.append(live)
+        resident_peak = max(resident_peak, eng.resident_cache_bytes())
+        if not more:
+            break
+        if eng.stats["steps"] > 50_000:
+            raise RuntimeError("bench runaway")
+
+    # Median step time strips compile outliers (first call per bucket/shape).
+    med_step = statistics.median(step_times)
+    mean_active = statistics.fmean(active_counts) if active_counts else 0.0
+    mid_lens = live_len_samples[len(live_len_samples) // 2] \
+        if live_len_samples else []
+    wb, rb = analytic_step_bytes(cfg, batch=batch, max_len=max_len,
+                                 page_size=page_size, live_lens=mid_lens,
+                                 paged=paged)
+    admitted_mid_flight = sum(1 for r in requests if r.admitted_step > 0)
+    return {
+        "batch": batch, "skew": skew, "mode": "paged" if paged else "dense",
+        "max_len": max_len, "page_size": page_size,
+        "n_requests": n_requests, "gen_tokens": eng.stats["gen_tokens"],
+        "steps": eng.stats["steps"], "prefills": eng.stats["prefills"],
+        "us_per_token": 1e6 * med_step / max(mean_active, 1e-9),
+        "us_per_step": 1e6 * med_step,
+        "mean_active_rows": mean_active,
+        "write_bytes_per_step": wb,
+        "read_bytes_per_step": rb,
+        "resident_cache_mb": resident_peak / 2**20,
+        "peak_pages": eng.stats["peak_pages"],
+        "admitted_mid_flight": admitted_mid_flight,
+        "completed": eng.stats["completed"],
+    }
+
+
+def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
+              emit_csv=print) -> dict:
+    from repro.agents.orchestrator import make_sim_llm
+
+    cfg, params = make_sim_llm()
+    max_len = 128 if quick else 256
+    page_size = 16
+    max_new = 8 if quick else 16
+    batches = (4,) if quick else (4, 8)
+    prompt_hi = max_len - max_new - 1
+    rows = []
+    for batch in batches:
+        n_requests = 2 * batch + 2              # forces mid-flight admission
+        for skew in ("uniform", "ragged"):
+            for paged in (False, True):
+                rows.append(run_config(
+                    cfg, params, batch=batch, max_len=max_len,
+                    page_size=page_size, skew=skew, paged=paged,
+                    n_requests=n_requests, prompt_hi=prompt_hi,
+                    max_new=max_new))
+
+    ratios = []
+    for d in rows:
+        if d["mode"] != "dense":
+            continue
+        p = next(r for r in rows
+                 if r["mode"] == "paged" and r["batch"] == d["batch"]
+                 and r["skew"] == d["skew"])
+        ratios.append(d["write_bytes_per_step"] / p["write_bytes_per_step"])
+    report = {
+        "config": {"model": cfg.name, "d_model": cfg.d_model,
+                   "num_layers": cfg.num_layers, "max_len": max_len,
+                   "page_size": page_size, "quick": quick},
+        "rows": rows,
+        "write_bytes_ratio_dense_over_paged": min(ratios),
+        "admission": {
+            "mid_flight_admissions": sum(r["admitted_mid_flight"]
+                                         for r in rows if r["mode"] == "paged"),
+            "all_completed": all(r["completed"] == r["n_requests"]
+                                 for r in rows),
+        },
+    }
+    Path(out).write_text(json.dumps(report, indent=2))
+    for r in rows:
+        name = f"serving/{r['mode']}_b{r['batch']}_{r['skew']}"
+        derived = (f"writeB/step={r['write_bytes_per_step']}"
+                   f";readB/step={r['read_bytes_per_step']}"
+                   f";residentMB={r['resident_cache_mb']:.2f}")
+        emit_csv(f"{name},{r['us_per_token']:.1f},{derived}")
+    emit_csv(f"serving/write_ratio,0.0,dense_over_paged="
+             f"{report['write_bytes_ratio_dense_over_paged']:.1f}x")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_bench(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,8 @@ class RunResult:
     merge_strategy: str = "allgather"
     sync_rounds: int = 0
     sync_bytes: int = 0     # wire bytes (see delta.full_state_wire_bytes)
+    kv_mode: str = "dense"          # dense | paged KV cache
+    prefill_mode: str = "replay"    # replay (token-by-token) | ragged
 
     @property
     def tokens_per_s(self) -> float:
@@ -150,9 +152,16 @@ def count_conflicts(merged: doc_mod.SlotDoc) -> tuple[int, int]:
 def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
              n_agents: int = 4, seed: int = 0, max_len: int = 1024,
              merge: str = "allgather", delta_capacity: int = 64,
+             kv: str = "dense", prefill: str = "replay",
+             page_size: int = 64,
              time_fn=time.perf_counter) -> RunResult:
+    """``kv="paged"`` backs the agents with the paged KV cache; ``prefill=
+    "ragged"`` replaces token-by-token prompt replay with one masked
+    per-row-length prefill call per (re-)contextualization — heterogeneous
+    agent prompts stop costing one decode step per token."""
     assert mode in ("sequential", "parallel")
     assert merge in ("allgather", "pmax", "delta")
+    assert kv in ("dense", "paged") and prefill in ("replay", "ragged")
     if mode == "sequential":
         n_agents = 1
     rng = np.random.default_rng(seed)
@@ -186,14 +195,40 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     append_fn = jax.jit(doc_mod.append_token)
     append_run_fn = jax.jit(doc_mod.append)
     digest_fn = jax.jit(doc_mod.digest)
-    cache = lm.init_cache(cfg, n_agents, max_len)
+    if kv == "paged":
+        from repro.models import attention
+        cache = lm.init_cache(cfg, n_agents, max_len, paged=True,
+                              page_size=page_size)
+        cache = lm.set_block_tables(cache, attention.default_block_tables(
+            n_agents, max_len, page_size))
+    else:
+        cache = lm.init_cache(cfg, n_agents, max_len)
     pos = jnp.zeros((n_agents,), jnp.int32)
     token = jnp.ones((n_agents,), jnp.int32)
     key = jax.random.PRNGKey(seed)
 
+    prefill_fn = None
+    if prefill == "ragged":
+        prefill_fn = jax.jit(engine_mod.make_ragged_prefill_fn(cfg))
+
     # Warmup: compile every helper shape outside the timed region (the claim
     # helper has one shape per idle-agent count).
     _ = step_fn(params, cache, token, pos, key)
+    if prefill_fn is not None:
+        # Every prompt bucket a (re-)contextualization can hit: base header
+        # plus 0..max_reads read tails.  All-zero lengths leave cache as-is.
+        max_reads = max((len(r) for r in task.reads.values()), default=0)
+        # Same max_len clamp ragged_prefill_batch applies at runtime, so
+        # the compiled warmup shapes are exactly the shapes used in-loop.
+        warm_buckets = sorted({
+            min(engine_mod.bucket_len(task.prompt_tokens
+                                      + k * task.read_prompt_tokens),
+                max_len)
+            for k in range(max_reads + 1)})
+        for wb in warm_buckets:
+            _, cache = prefill_fn(params, cache,
+                                  jnp.zeros((n_agents, wb), jnp.int32),
+                                  jnp.zeros((n_agents,), jnp.int32))
     warm_board = todo.post(todo.empty(k_todos), 0,
                            jnp.zeros((k_todos,), bool), jnp.int32(1),
                            jnp.int32(100))
@@ -270,6 +305,19 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
 
     snap_len = {a.client: host_len.copy() for a in agents}
 
+    def finish_agent(a: AgentState):
+        nonlocal board, done_count, board_dirty
+        flush_agent(a.row)
+        a.lamport = a.lamport.observe(board.max_clock())
+        board = complete_fn(board, jnp.int32(a.todo_id),
+                            jnp.int32(a.client), a.lamport.time)
+        done_count += 1
+        board_dirty = True
+        a.phase = IDLE
+        buf_slot[a.row] = -1
+        a.todo_id = -1
+        sync_replicas()
+
     while True:
         # -- claims: all idle agents observe the SAME board snapshot --------
         idle = [a for a in agents if a.phase == IDLE]
@@ -314,6 +362,34 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                 break
             continue
 
+        # -- ragged prompt prefill: one masked per-row-length call lands the
+        # whole heterogeneous prompt batch (vs len(queue) decode steps each).
+        if prefill_fn is not None:
+            pre = [a for a in agents if a.phase == PREFILL and a.queue]
+            if pre:
+                row_prompts = {a.row: a.queue for a in pre}
+                logits, lens_h, cache = engine_mod.ragged_prefill_batch(
+                    prefill_fn, params, cache, n_agents, row_prompts,
+                    max_len=max_len)
+                stats["steps"] += 1
+                first = np.asarray(jnp.argmax(logits, axis=-1))
+                tok_h = np.array(token)
+                pos_h = np.array(pos)
+                for a in pre:
+                    stats["replay"] += len(a.queue)
+                    a.queue = []
+                    a.phase = GEN
+                    tok_h[a.row] = int(first[a.row])
+                    pos_h[a.row] = int(lens_h[a.row])
+                    buffers[a.row].append(int(first[a.row]) % vocab)
+                    stats["gen"] += 1
+                    a.tokens_left -= 1
+                token = jnp.asarray(tok_h)
+                pos = jnp.asarray(pos_h)
+                for a in pre:
+                    if a.tokens_left <= 0:
+                        finish_agent(a)
+
         # -- one batched decode step ----------------------------------------
         forced = np.array(token)      # writable host copy
         for a in agents:
@@ -336,16 +412,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
             stats["gen"] += 1
             a.tokens_left -= 1
             if a.tokens_left <= 0:
-                flush_agent(a.row)
-                a.lamport = a.lamport.observe(board.max_clock())
-                board = complete_fn(board, jnp.int32(a.todo_id),
-                                    jnp.int32(a.client), a.lamport.time)
-                done_count += 1
-                board_dirty = True
-                a.phase = IDLE
-                buf_slot[a.row] = -1
-                a.todo_id = -1
-                sync_replicas()
+                finish_agent(a)
 
         # -- observation sweep (paper §4.2) ----------------------------------
         if stats["steps"] % OBSERVE_EVERY == 0:
@@ -400,6 +467,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         digest=digests[0],
         merge_strategy=merge, sync_rounds=stats["syncs"],
         sync_bytes=int(stats["sync_bytes"]),
+        kv_mode=kv, prefill_mode=prefill,
     )
 
 
@@ -429,13 +497,20 @@ def main() -> None:
     ap.add_argument("--merge", default="allgather",
                     choices=["allgather", "pmax", "delta"])
     ap.add_argument("--delta-capacity", type=int, default=64)
+    ap.add_argument("--kv", default="dense", choices=["dense", "paged"],
+                    help="KV cache layout for the agents' decode engine")
+    ap.add_argument("--prefill", default="replay",
+                    choices=["replay", "ragged"],
+                    help="prompt (re-)contextualization: token-by-token "
+                         "replay or one ragged masked prefill per batch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg, params = make_sim_llm(args.seed)
     r = run_task(cfg, params, TASKS[args.task], mode=args.mode,
                  n_agents=args.agents, seed=args.seed, merge=args.merge,
-                 delta_capacity=args.delta_capacity)
+                 delta_capacity=args.delta_capacity, kv=args.kv,
+                 prefill=args.prefill)
     for k, v in sorted(vars(r).items()):
         print(f"{k}: {v}")
 

@@ -71,6 +71,13 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     batch = bhq // num_q_heads
     num_kv_heads = bhkv // batch
     group = num_q_heads // num_kv_heads
+    if s_pad % block_s:
+        # The grid would silently drop the tail s_pad % block_s slots —
+        # tokens in them would never be attended.  Callers must pad S
+        # (ops.decode_attention does) or pick a dividing block_s.
+        raise ValueError(
+            f"decode_attention: KV length {s_pad} is not a multiple of "
+            f"block_s={block_s}; pad the cache or choose a dividing block_s")
     ns = s_pad // block_s
     grid = (bhq, ns)
 

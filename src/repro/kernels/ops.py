@@ -23,6 +23,7 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import delta_apply as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lww_merge as _lww
+from repro.kernels import paged_decode_attention as _pdec
 from repro.kernels import ref
 from repro.kernels import rglru_scan as _rg
 
@@ -121,6 +122,51 @@ def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
         qf, kf, vf, len_f, scale=scale, num_q_heads=hq, block_s=bs,
         interpret=not _on_tpu())
     return out[:, 0, :d].reshape(b, hq, d)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
+                           k_new, v_new, *, scale: float | None = None,
+                           window: int | None = None,
+                           use_pallas: bool = True):
+    """Fused write-attend decode over a paged KV cache.
+
+    q: [B, Hq, D]; k_pages, v_pages: [P, Hkv, ps, D]; block_tables:
+    i32[B, maxp]; pos: i32[B]; k_new, v_new: [B, Hkv, D].
+    Returns (out [B, Hq, D], k_pages, v_pages) — pools carry the new token
+    at slot ``pos`` (in place on TPU via input/output aliasing).
+
+    Unlike the dense wrappers this one never pads the pool: a pad/slice
+    round-trip would copy the whole cache every step, which is exactly the
+    cost the paged path removes.  On TPU the pool must therefore already be
+    tileable; off-TPU the kernel runs in interpret mode at any shape.
+    """
+    ps = k_pages.shape[2]
+    # Clamp pos to table capacity on BOTH paths (one contract): past it the
+    # kernel would read the block table out of bounds and DMA the token
+    # into an arbitrary live page; the oracle would write a different slot.
+    # Clamped, both rewrite the table's last slot.
+    pos = jnp.minimum(pos, block_tables.shape[1] * ps - 1)
+    if not use_pallas:
+        return ref.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                          pos, k_new, v_new, scale=scale,
+                                          window=window)
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        sublane = 16 if k_pages.dtype == jnp.bfloat16 else 8
+        if ps % sublane or d % 128:
+            raise ValueError(
+                f"paged cache layout (page_size={ps}, head_dim={d}, "
+                f"{k_pages.dtype}) is not TPU-tileable: page_size must be a "
+                f"multiple of {sublane} and head_dim a multiple of 128. "
+                "Pick an aligned page_size/head_dim at init_cache time — the "
+                "pool is deliberately never padded per step.")
+    return _pdec.paged_decode_attention(
+        q, k_pages, v_pages, block_tables.astype(jnp.int32),
+        pos.astype(jnp.int32), k_new.astype(k_pages.dtype),
+        v_new.astype(v_pages.dtype), scale=scale, window=window,
+        interpret=not on_tpu)
 
 
 def linear_scan(a, b, h0, *, block_t: int = 128, use_pallas: bool = True):

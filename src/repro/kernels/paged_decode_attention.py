@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: paged flash-decode attention with a fused KV write.
+
+The KV cache lives in a shared page pool ``[P, Hkv, page_size, D]``; each
+batch row owns an ordered list of pages (its block table).  Decode is
+HBM-bandwidth-bound, and the dense-cache step additionally pays an
+O(B·max_len) one-hot *write* per layer just to place one token.  This kernel
+removes both costs:
+
+  * the current token's K/V is DMA'd into exactly one page slot (O(D) bytes)
+    before the attend — the write is fused, so the step touches the cache
+    once and the one-hot full-cache rewrite disappears;
+  * the attend walks only the row's live pages (block-table indirection via
+    scalar prefetch), streaming each page HBM→VMEM once with double-buffered
+    DMA and split-K online softmax in VMEM carries.
+
+Grid is (B, Hkv); each program handles one row's GQA group of query heads
+against one KV head.  The page pools are ANY-space (HBM) refs aliased
+input→output, so XLA updates them in place — the kernel's writes are the
+only pool bytes that move.
+
+Alignment: on real TPU the pool layout must be tileable — ``page_size``
+a multiple of the sublane count and ``head_dim`` a multiple of 128.  The
+ops wrapper enforces this with a clear error; off-TPU (interpret mode) any
+shape runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, kn_ref, vn_ref, kp_in, vp_in,
+            o_ref, kp, vp, kbuf, vbuf, tokk, tokv, ksem, vsem, wsem,
+            *, ps: int, scale: float, window: int | None):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    pos = pos_ref[b]
+    kv_len = pos + 1
+    n_pages = (kv_len + ps - 1) // ps
+
+    # -- fused write: current token's K/V -> one page slot ------------------
+    page_raw = bt_ref[b, pos // ps]
+    page_w = jnp.maximum(page_raw, 0)
+    slot_w = pos % ps
+    tokk[0, 0, 0, :] = kn_ref[0, 0]
+    tokv[0, 0, 0, :] = vn_ref[0, 0]
+
+    # An unallocated (-1) entry drops the write — same semantics as the
+    # oracle's mode="drop" scatter — so an idle row never corrupts page 0.
+    @pl.when(page_raw >= 0)
+    def _write():
+        wk = pltpu.make_async_copy(
+            tokk, kp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+            wsem.at[0])
+        wv = pltpu.make_async_copy(
+            tokv, vp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+            wsem.at[1])
+        wk.start()
+        wv.start()
+        # The write page is also read below (the new token attends to
+        # itself); both copies must land before the walk starts.
+        wk.wait()
+        wv.wait()
+
+    # -- split-K online softmax over the row's live pages -------------------
+    def page_dma(pool, buf, sem, i, slot):
+        pg = jnp.maximum(bt_ref[b, i], 0)
+        return pltpu.make_async_copy(
+            pool.at[pl.ds(pg, 1), pl.ds(h, 1)], buf.at[pl.ds(slot, 1)],
+            sem.at[slot])
+
+    page_dma(kp, kbuf, ksem, 0, 0).start()
+    page_dma(vp, vbuf, vsem, 0, 0).start()
+
+    q = q_ref[0].astype(jnp.float32)                       # [group, D]
+    group, d = q.shape
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < n_pages)
+        def _prefetch():
+            page_dma(kp, kbuf, ksem, i + 1, nxt).start()
+            page_dma(vp, vbuf, vsem, i + 1, nxt).start()
+
+        page_dma(kp, kbuf, ksem, i, slot).wait()
+        page_dma(vp, vbuf, vsem, i, slot).wait()
+        k = kbuf[slot, 0].astype(jnp.float32)              # [ps, D]
+        v = vbuf[slot, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [group, ps]
+        cols = i * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        valid = cols < kv_len
+        if window is not None:
+            valid &= cols > pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((group,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group,), jnp.float32)
+    a0 = jnp.zeros((group, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           pos: jax.Array, k_new: jax.Array,
+                           v_new: jax.Array, *, scale: float,
+                           window: int | None = None,
+                           interpret: bool = False
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """q: [B, Hq, D]; k/v_pages: [P, Hkv, ps, D]; block_tables: i32[B, maxp];
+    pos: i32[B] (tokens already cached); k/v_new: [B, Hkv, D] (pool dtype).
+    Returns (out [B, Hq, D], k_pages, v_pages) with the token written at
+    slot ``pos`` of each row (pools updated in place via aliasing)."""
+    b, hq, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    group = hq // hkv
+    grid = (b, hkv)
+
+    q_spec = pl.BlockSpec((1, group, d), lambda i, j, *_: (i, j, 0))
+    tok_spec = pl.BlockSpec((1, 1, d), lambda i, j, *_: (i, j, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block_tables, pos
+        grid=grid,
+        in_specs=[q_spec, tok_spec, tok_spec, any_spec, any_spec],
+        out_specs=[q_spec, any_spec, any_spec],
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, ps, d), k_pages.dtype),   # k page double-buffer
+            pltpu.VMEM((2, 1, ps, d), v_pages.dtype),
+            pltpu.VMEM((1, 1, 1, d), k_pages.dtype),    # staged token write
+            pltpu.VMEM((1, 1, 1, d), v_pages.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    kernel = functools.partial(_kernel, ps=ps, scale=scale, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        # Input indices count the scalar-prefetch operands (0, 1).
+        input_output_aliases={5: 1, 6: 2},
+        interpret=interpret,
+    )(block_tables, pos, q, k_new, v_new, k_pages, v_pages)

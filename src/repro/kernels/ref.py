@@ -111,6 +111,56 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           pos: jax.Array, k_new: jax.Array,
+                           v_new: jax.Array, scale: float | None = None,
+                           window: int | None = None
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode against a paged KV cache, write included.
+
+    q: [B, Hq, D]; k_pages, v_pages: [P, Hkv, ps, D] shared page pool;
+    block_tables: i32[B, maxp] page ids per row (-1 = unallocated);
+    pos: i32[B] tokens already cached; k_new, v_new: [B, Hkv, D].
+
+    Semantics (the kernel contract): write the new token's K/V into page
+    ``block_tables[b, pos // ps]`` slot ``pos % ps``, then attend over the
+    row's ``pos + 1`` live tokens.  This reference gathers the row's pages
+    into a contiguous view — O(B·maxp·ps) reads, the thing the kernel
+    avoids — but is the bit-level definition of the math.
+    """
+    b, hq, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    pg_w = jnp.take_along_axis(block_tables, (pos // ps)[:, None], axis=1)[:, 0]
+    # -1 must DROP, but negative scatter indices wrap in jnp — route them
+    # out of bounds so mode="drop" actually discards the write.
+    pg_w = jnp.where(pg_w < 0, k_pages.shape[0], pg_w)
+    slot_w = pos % ps
+    k_pages = k_pages.at[pg_w, :, slot_w, :].set(
+        k_new.astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[pg_w, :, slot_w, :].set(
+        v_new.astype(v_pages.dtype), mode="drop")
+
+    safe_bt = jnp.maximum(block_tables, 0)
+    # [B, maxp, Hkv, ps, D] -> [B, Hkv, maxp*ps, D]
+    kg = jnp.moveaxis(k_pages[safe_bt], 2, 1).reshape(b, hkv, -1, d)
+    vg = jnp.moveaxis(v_pages[safe_bt], 2, 1).reshape(b, hkv, -1, d)
+    kb = _broadcast_kv(kg, hq)
+    vb = _broadcast_kv(vg, hq)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+    cols = jnp.arange(kg.shape[2])[None, :]
+    valid = cols < (pos + 1)[:, None]
+    if window is not None:
+        valid &= cols > (pos - window)[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vb.astype(jnp.float32))
+    return out.astype(q.dtype), k_pages, v_pages
+
+
 # ---------------------------------------------------------------------------
 # Diagonal gated linear recurrence (RG-LRU / generic h_t = a_t h_{t-1} + b_t)
 # ---------------------------------------------------------------------------

@@ -128,7 +128,12 @@ def _sdpa_chunked(q, k, v, scale, *, causal=True, window=None, prefix_len=0,
 
 def _sdpa(q, k, v, mask, scale, impl: str, window=None, causal=True,
           chunked=False, prefix_len=0):
-    """q: [B,H,Tq,D]; k,v: [B,Hkv,Tk,D]; mask: bool[Tq,Tk] or None."""
+    """q: [B,H,Tq,D]; k,v: [B,Hkv,Tk,D]; mask: bool[Tq,Tk] / [B,Tq,Tk] / None.
+
+    A 3-D mask carries per-row validity (ragged prefill) — rows with zero
+    valid keys produce NaN outputs; callers discard those rows and masked
+    cache writes drop them.
+    """
     if chunked:
         return _sdpa_chunked(q, k, v, scale, causal=causal, window=window,
                              prefix_len=prefix_len)
@@ -141,7 +146,8 @@ def _sdpa(q, k, v, mask, scale, impl: str, window=None, causal=True,
     logits = jnp.einsum("bhqd,bhkd->bhqk", q, kb,
                         preferred_element_type=jnp.float32) * scale
     if mask is not None:
-        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        mask_b = mask[:, None] if mask.ndim == 3 else mask[None, None]
+        logits = jnp.where(mask_b, logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bhkd->bhqd", probs, vb)
 
@@ -159,30 +165,112 @@ def forward(p: Params, cfg: ModelConfig, x: jax.Array,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> Params:
+               dtype=jnp.bfloat16, *, paged: bool = False,
+               page_size: int = 64, num_pages: int | None = None) -> Params:
+    """Dense cache [B, Hkv, S, D], or a paged pool + per-row block tables.
+
+    Paged mode: K/V live in a shared pool ``[P, Hkv, page_size, D]`` and each
+    row maps logical positions to pages through ``block_tables[B, maxp]``
+    (-1 = unallocated).  Resident memory scales with *allocated pages* (live
+    tokens), not batch × max_len: ``num_pages`` can be far below
+    ``batch * maxp`` when rows are ragged (a page allocator hands out pages
+    on admission — see serving/scheduler.py).  Default is the dense-equal
+    worst case so Engine can run without an allocator via
+    ``default_block_tables``.
+    """
+    if paged:
+        maxp = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = batch * maxp
+        shape = (num_pages, cfg.num_kv_heads, page_size, cfg.head_dim)
+        return {"k_pages": jnp.zeros(shape, dtype),
+                "v_pages": jnp.zeros(shape, dtype),
+                "block_tables": jnp.full((batch, maxp), -1, jnp.int32)}
     shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def default_block_tables(batch: int, max_len: int, page_size: int
+                         ) -> jax.Array:
+    """Identity mapping — row b owns contiguous pages [b*maxp, (b+1)*maxp).
+
+    Needs the worst-case pool (num_pages == batch * maxp); real page reuse
+    comes from the allocator in serving/scheduler.py.
+    """
+    maxp = -(-max_len // page_size)
+    return jnp.arange(batch * maxp, dtype=jnp.int32).reshape(batch, maxp)
+
+
+def _paged_prefill_write(cache: Params, k: jax.Array, v: jax.Array,
+                         lengths: Optional[jax.Array]) -> Params:
+    """Scatter a prompt's K/V ([B, Hkv, T, D]) into the row's pages.
+
+    Positions >= lengths[b] (right-padding of a ragged batch) map to page -1
+    and are dropped, so a prefill touches only the prefilled rows' pages —
+    admission never disturbs in-flight rows.
+    """
+    bt = cache["block_tables"]
+    ps = cache["k_pages"].shape[2]
+    b, _, t, _ = k.shape
+    tpos = jnp.arange(t, dtype=jnp.int32)
+    num_pages = cache["k_pages"].shape[0]
+    pg = bt[:, tpos // ps]                              # [B, T]
+    # Dropped writes are routed OUT OF BOUNDS (= num_pages): a -1 sentinel
+    # would wrap to the last page under jnp scatter semantics.  Dropped:
+    # unallocated (-1) table entries, bucket padding past the table, and
+    # positions beyond each row's ragged length.
+    pg = jnp.where(pg < 0, num_pages, pg)
+    pg = jnp.where(tpos[None, :] < bt.shape[1] * ps, pg, num_pages)
+    if lengths is not None:
+        pg = jnp.where(tpos[None, :] < lengths[:, None], pg, num_pages)
+    slot = jnp.broadcast_to(tpos % ps, (b, t))
+    k_bt = k.transpose(0, 2, 1, 3).astype(cache["k_pages"].dtype)
+    v_bt = v.transpose(0, 2, 1, 3).astype(cache["v_pages"].dtype)
+    return dict(cache,
+                k_pages=cache["k_pages"].at[pg, :, slot, :].set(
+                    k_bt, mode="drop"),
+                v_pages=cache["v_pages"].at[pg, :, slot, :].set(
+                    v_bt, mode="drop"))
 
 
 def prefill(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
             mask: Optional[jax.Array], positions: jax.Array,
             impl: str = "ref", chunked: bool = False,
-            prefix_len: int = 0) -> tuple[jax.Array, Params]:
-    """Full-prompt forward that also fills cache positions [0, T)."""
+            prefix_len: int = 0,
+            lengths: Optional[jax.Array] = None) -> tuple[jax.Array, Params]:
+    """Full-prompt forward that also fills cache positions [0, T).
+
+    ``lengths`` (i32[B]) marks a ragged right-padded batch: attention over
+    padding is masked by the caller's 3-D mask and cache writes beyond each
+    row's length are dropped, so rows with ``lengths[b] == 0`` keep their
+    cache bit-for-bit (the admission path relies on this).
+    """
     q, k, v = _qkv(p, cfg, x, positions)
     scale = cfg.head_dim ** -0.5
     out = _sdpa(q, k, v, mask, scale, impl, window=cfg.window,
                 chunked=chunked, prefix_len=prefix_len)
+    proj = common.dense(p["wo"], _merge_heads(out))
+    if "k_pages" in cache:
+        return proj, _paged_prefill_write(cache, k, v, lengths)
     t = x.shape[1]
     s = cache["k"].shape[2]
     if t <= s:
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
-        }
+        new_k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        if lengths is not None:
+            keep = jnp.arange(s)[None, :] < lengths[:, None]   # [B, S]
+            oh = keep[:, None, :, None]
+            new_k = jnp.where(oh, new_k, cache["k"])
+            new_v = jnp.where(oh, new_v, cache["v"])
+        new_cache = {"k": new_k, "v": new_v}
     else:
+        if lengths is not None:
+            raise NotImplementedError(
+                "ragged prefill into a ring cache shorter than the padded "
+                "prompt is unsupported — size the ring (window) >= the "
+                "prompt bucket, or use a paged/dense cache")
         # Ring cache shorter than the prompt: slot s holds the LAST token
         # with absolute position ≡ s (mod S) — a deterministic gather (a
         # scatter with duplicate indices would have unspecified order).
@@ -192,7 +280,7 @@ def prefill(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
             "k": k[:, :, p_last].astype(cache["k"].dtype),
             "v": v[:, :, p_last].astype(cache["v"].dtype),
         }
-    return common.dense(p["wo"], _merge_heads(out)), new_cache
+    return proj, new_cache
 
 
 def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
@@ -200,6 +288,24 @@ def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     """One-token step.  x: [B, 1, D]; pos: i32[B] tokens already cached."""
     b = x.shape[0]
     q, k, v = _qkv(p, cfg, x, pos[:, None])
+    if "k_pages" in cache:
+        # Paged cache: O(page) write + block-table walk — no one-hot rewrite
+        # of [B, Hkv, S, D].  The write is fused into the Pallas kernel; the
+        # ref path is the gather oracle (kernels/ref.py).  pos is clamped to
+        # the block table's capacity: past it the last slot is rewritten
+        # (defined, still wrong output — callers bound generation, see
+        # Engine.step / scheduler.submit) instead of an out-of-bounds
+        # table read corrupting a live page.
+        scale = cfg.head_dim ** -0.5
+        cap = cache["block_tables"].shape[-1] * cache["k_pages"].shape[-2]
+        out, k_pages, v_pages = kops.paged_decode_attention(
+            q[:, :, 0], cache["k_pages"], cache["v_pages"],
+            cache["block_tables"], jnp.minimum(pos, cap - 1),
+            k[:, :, 0], v[:, :, 0],
+            scale=scale, window=cfg.window, use_pallas=(impl == "pallas"))
+        out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+        return (common.dense(p["wo"], out),
+                dict(cache, k_pages=k_pages, v_pages=v_pages))
     # One-hot masked write instead of a scatter: a scatter at dynamic per-row
     # positions into a sequence-sharded cache forces SPMD "involuntary full
     # rematerialization" (replicates the whole cache).  The masked select is
@@ -224,7 +330,11 @@ def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
                         cache["v"])
     kv_len = jnp.minimum(pos + 1, s)
     scale = cfg.head_dim ** -0.5
-    if impl == "pallas":
+    # The dense flash-decode kernel has no window masking: only route to it
+    # when no window applies or the cache IS the window (ring, sdim ==
+    # window) — an unbounded cache under sliding-window attention must take
+    # the masked einsum path or it would attend beyond the window.
+    if impl == "pallas" and (cfg.window is None or s <= cfg.window):
         out = kops.decode_attention(q[:, :, 0], k_cache, v_cache, kv_len,
                                     scale=scale)
     else:

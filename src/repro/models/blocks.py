@@ -32,6 +32,7 @@ class BlockCtx(NamedTuple):
     impl: str = "ref"
     chunked: bool = False                 # blockwise attention (long T)
     prefix_len: int = 0                   # bidirectional prefix (VLM)
+    lengths: Optional[jax.Array] = None   # i32[B] ragged prefill lengths
 
 
 # ---------------------------------------------------------------------------
@@ -77,10 +78,17 @@ def block_init(kind: str, key, cfg: ModelConfig) -> Params:
 
 
 def cache_init(kind: str, cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> Params:
+               dtype=jnp.bfloat16, *, paged: bool = False,
+               page_size: int = 64, num_pages: int | None = None) -> Params:
+    """``paged=True`` pools full-attention KV; sliding-window layers keep
+    their dense/ring cache (already bounded by the window) and stateful
+    kinds are untouched — a mixed-pattern model pages only what benefits."""
     if kind == "local" and cfg.ring_local_cache and cfg.window:
         return attention.init_cache(cfg, batch, min(max_len, cfg.window),
                                     dtype)
+    if kind in ("attn", "moe") and paged:
+        return attention.init_cache(cfg, batch, max_len, dtype, paged=True,
+                                    page_size=page_size, num_pages=num_pages)
     if kind in ("attn", "local", "moe"):
         return attention.init_cache(cfg, batch, max_len, dtype)
     if kind in ("mla", "mla_moe"):
@@ -141,7 +149,8 @@ def block_apply(kind: str, p: Params, cfg: ModelConfig, x: jax.Array,
             a, cache = attention.prefill(p["attn"], local_cfg, h, cache, mask,
                                          ctx.positions, ctx.impl,
                                          chunked=ctx.chunked,
-                                         prefix_len=ctx.prefix_len)
+                                         prefix_len=ctx.prefix_len,
+                                         lengths=ctx.lengths)
         else:
             a = attention.forward(p["attn"], local_cfg, h, mask,
                                   ctx.positions, ctx.impl,

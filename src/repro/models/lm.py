@@ -132,8 +132,12 @@ CHUNKED_THRESHOLD = 8192
 
 
 def _make_ctx(cfg: ModelConfig, t: int, enc_out, impl: str,
-              prefix_len: int) -> BlockCtx:
+              prefix_len: int,
+              lengths: Optional[jax.Array] = None) -> BlockCtx:
     if t > CHUNKED_THRESHOLD:
+        if lengths is not None:
+            raise NotImplementedError(
+                "ragged prefill above the chunked-attention threshold")
         # Long sequences: lazy masks + blockwise online-softmax attention
         # (materialized T×T masks/scores would be GiB-scale at 32k+).
         return BlockCtx(positions=jnp.arange(t), mask_full=None,
@@ -143,9 +147,15 @@ def _make_ctx(cfg: ModelConfig, t: int, enc_out, impl: str,
     mask_local = (common.make_mask(t, t, causal=True, window=cfg.window,
                                    prefix_len=prefix_len)
                   if "local" in cfg.block_pattern else None)
+    if lengths is not None:
+        # Per-row validity: padding keys are unattendable everywhere.
+        valid = jnp.arange(t)[None, :] < lengths[:, None]       # [B, T]
+        mask_full = mask_full[None] & valid[:, None, :]
+        if mask_local is not None:
+            mask_local = mask_local[None] & valid[:, None, :]
     return BlockCtx(positions=jnp.arange(t), mask_full=mask_full,
                     mask_local=mask_local, enc_out=enc_out, mode="full",
-                    impl=impl, prefix_len=prefix_len)
+                    impl=impl, prefix_len=prefix_len, lengths=lengths)
 
 
 def _run_blocks(p: Params, cfg: ModelConfig, x: jax.Array, ctx: BlockCtx,
@@ -258,27 +268,85 @@ def loss_fn(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> Params:
+               dtype=jnp.bfloat16, *, paged: bool = False,
+               page_size: int = 64, num_pages: int | None = None) -> Params:
+    """``paged=True`` gives every full-attention layer its own page pool +
+    block tables (see attention.init_cache); ``num_pages`` is per layer."""
     groups = {}
     for i, kind in enumerate(cfg.block_pattern):
-        one = blocks.cache_init(kind, cfg, batch, max_len, dtype)
+        one = blocks.cache_init(kind, cfg, batch, max_len, dtype,
+                                paged=paged, page_size=page_size,
+                                num_pages=num_pages)
         groups[str(i)] = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.pattern_groups,) + x.shape)
             .copy() if hasattr(x, "shape") else x, one)
     cache: dict[str, Any] = {"groups": groups}
     tail = {}
     for i, kind in enumerate(cfg.tail_blocks):
-        tail[str(i)] = blocks.cache_init(kind, cfg, batch, max_len, dtype)
+        tail[str(i)] = blocks.cache_init(kind, cfg, batch, max_len, dtype,
+                                         paged=paged, page_size=page_size,
+                                         num_pages=num_pages)
     if tail:
         cache["tail"] = tail
     return cache
 
 
+def _map_paged_dicts(tree, fn):
+    """Apply ``fn(d)`` to every paged-attention cache dict in a cache tree."""
+    if isinstance(tree, dict):
+        if "block_tables" in tree:
+            return fn(tree)
+        return {k: _map_paged_dicts(v, fn) for k, v in tree.items()}
+    return tree
+
+
+def set_block_tables(cache: Params, block_tables: jax.Array) -> Params:
+    """Install one [B, maxp] block table into every paged layer.
+
+    Layers share the mapping (same tokens, same pages-per-row); scanned
+    groups carry it stacked [G, B, maxp], so broadcast to each leaf's shape.
+    """
+    bt = block_tables.astype(jnp.int32)
+    return _map_paged_dicts(
+        cache, lambda d: dict(d, block_tables=jnp.broadcast_to(
+            bt, d["block_tables"].shape)))
+
+
+def get_block_tables(cache: Params) -> jax.Array | None:
+    """The [B, maxp] block table shared by the paged layers (None if dense)."""
+    found: list[jax.Array] = []
+
+    def grab(d):
+        found.append(d["block_tables"])
+        return d
+
+    _map_paged_dicts(cache, grab)
+    if not found:
+        return None
+    bt = found[0]
+    return bt[0] if bt.ndim == 3 else bt
+
+
 def prefill(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
             prefix_embeds: Optional[jax.Array] = None,
             enc_frames: Optional[jax.Array] = None,
-            impl: str = "ref") -> tuple[jax.Array, Params]:
-    """Uniform-length prompt [B, P] -> (last-position logits [B, V], cache)."""
+            impl: str = "ref",
+            lengths: Optional[jax.Array] = None) -> tuple[jax.Array, Params]:
+    """Uniform-length prompt [B, P] -> (last-position logits [B, V], cache).
+
+    ``lengths`` (i32[B]) admits a *ragged* right-padded batch: row b's
+    prompt is tokens[b, :lengths[b]], logits come from its last valid
+    position, and rows with ``lengths[b] == 0`` pass through untouched
+    (cache preserved, output garbage) — which is what lets the scheduler
+    admit new requests into freed rows while the others keep decoding.
+    """
+    if lengths is not None:
+        ragged_ok = {"attn", "local", "moe"}
+        kinds = set(cfg.block_pattern) | set(cfg.tail_blocks)
+        if (kinds - ragged_ok or cfg.num_prefix_tokens or cfg.is_encdec):
+            raise NotImplementedError(
+                f"ragged prefill supports attention-only decoders, got "
+                f"{cfg.block_pattern}")
     x = _embed(p, cfg, tokens)
     prefix_len = 0
     if cfg.num_prefix_tokens and prefix_embeds is not None:
@@ -286,11 +354,17 @@ def prefill(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
         prefix_len = cfg.num_prefix_tokens
     enc_out = (_encode(p, cfg, enc_frames, impl)
                if cfg.is_encdec and enc_frames is not None else None)
-    ctx = _make_ctx(cfg, x.shape[1], enc_out, impl, prefix_len)
+    ctx = _make_ctx(cfg, x.shape[1], enc_out, impl, prefix_len,
+                    lengths=lengths)
     ctx = ctx._replace(mode="prefill")
     x, cache, _ = _run_blocks(p, cfg, x, ctx, cache)
-    x = common.apply_norm(p["final_norm"], x[:, -1:], cfg.norm_type,
-                          cfg.norm_eps)
+    if lengths is not None:
+        last = jnp.clip(lengths - 1, 0)[:, None, None]
+        x = jnp.take_along_axis(x, jnp.broadcast_to(
+            last, (x.shape[0], 1, x.shape[2])), axis=1)
+    else:
+        x = x[:, -1:]
+    x = common.apply_norm(p["final_norm"], x, cfg.norm_type, cfg.norm_eps)
     return _head(p, cfg, x)[:, 0], cache
 
 

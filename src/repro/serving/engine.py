@@ -12,10 +12,11 @@ the collective playing the role of the paper's WebSocket relay.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import delta as delta_mod
@@ -54,6 +55,59 @@ def make_prefill_fn(cfg: ModelConfig, *, impl: str = "ref"):
                           impl=impl)
 
     return prefill_fn
+
+
+def make_ragged_prefill_fn(cfg: ModelConfig, *, impl: str = "ref"):
+    """(params, cache, tokens [B, P], lengths i32[B]) -> (logits, cache).
+
+    Rows with ``lengths[b] == 0`` keep their cache — the continuous-batching
+    scheduler uses this to prefill only freed rows while the rest decode.
+    """
+    def prefill_fn(params, cache, tokens, lengths):
+        return lm.prefill(params, cfg, tokens, cache, impl=impl,
+                          lengths=lengths)
+
+    return prefill_fn
+
+
+PROMPT_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+def bucket_len(n: int, buckets=PROMPT_BUCKETS) -> int:
+    """Smallest bucket >= n — bounds ragged-prefill recompiles."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds largest bucket {buckets[-1]}")
+
+
+def ragged_prefill_batch(prefill_fn, params, cache, batch: int,
+                         prompts: dict[int, Sequence[int]],
+                         max_len: Optional[int] = None):
+    """Assemble + run one ragged prefill for ``{row: prompt_tokens}``.
+
+    Pads every listed prompt into a right-padded [batch, bucket] matrix
+    (bucket clamped to ``max_len`` so a padded batch never outruns the
+    cache), zero length for unlisted rows.  Returns (logits, lengths
+    np.i32[batch], cache); callers pick each row's first token from the
+    logits (argmax or sampled).
+    """
+    longest = max(len(p) for p in prompts.values())
+    bucket = bucket_len(longest)
+    if max_len is not None:
+        bucket = min(bucket, max_len)
+        if longest > bucket:
+            raise ValueError(
+                f"prompt of {longest} tokens cannot prefill into a cache of "
+                f"max_len {max_len}")
+    toks = np.zeros((batch, bucket), np.int32)
+    lens = np.zeros((batch,), np.int32)
+    for row, p in prompts.items():
+        toks[row, :len(p)] = p
+        lens[row] = len(p)
+    logits, cache = prefill_fn(params, cache, jnp.asarray(toks),
+                               jnp.asarray(lens))
+    return logits, lens, cache
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +165,8 @@ def make_coord_merge(mesh: Mesh, dp_axes: tuple[str, ...],
 def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
                           dp_axes: tuple[str, ...], *, impl: str = "ref",
                           merge_strategy: str = "pmax",
-                          merge_every: int = 1, delta_capacity: int = 64):
+                          merge_every: int = 1, delta_capacity: int = 64,
+                          temperature: float = 0.0):
     """Decode one token per agent stream AND converge coordination state.
 
     Inputs (leading dims):
@@ -133,6 +188,9 @@ def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
     ``"frontier"`` entry (build it with ``with_delta_frontier``) and each
     sync ships O(Δ) delta buffers around the replica ring instead of O(S)
     state — see core/delta.py.
+
+    ``temperature > 0`` samples instead of argmax-decoding; pass an rng key
+    as the trailing ``rng`` argument (split per step by the caller).
     """
     merge_fn = make_coord_merge(mesh, dp_axes, merge_strategy,
                                 delta_capacity=delta_capacity)
@@ -157,10 +215,13 @@ def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
                                    out_specs=specs, check_vma=False)(
             coord_stacked, token, slots, active)
 
-    def serve_step(params, cache, token, pos, slots, active, coord, step):
+    def serve_step(params, cache, token, pos, slots, active, coord, step,
+                   rng=None):
         logits, cache = lm.decode_step(params, cfg, token, cache, pos,
                                        impl=impl)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if temperature > 0.0 and rng is None:
+            raise ValueError("temperature > 0 requires an rng key")
+        nxt = sample_token(logits, rng, temperature)
         nxt = jnp.where(active, nxt, token)
         coord = append_local(coord, nxt, slots, active)
         if merge_every == 1:
@@ -187,21 +248,41 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, *, batch: int,
-                 max_len: int, impl: str = "ref", temperature: float = 0.0):
+                 max_len: int, impl: str = "ref", temperature: float = 0.0,
+                 paged: bool = False, page_size: int = 64):
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.max_len = max_len
-        self._prefill = jax.jit(make_prefill_fn(cfg, impl=impl))
+        self.paged = paged
+        self.page_size = page_size
+        # Donate the cache: without donation XLA keeps the input and output
+        # KV cache alive simultaneously — 2x resident HBM on the largest
+        # buffer in the system — and loses the in-place cache update.
+        self._prefill = jax.jit(make_prefill_fn(cfg, impl=impl),
+                                donate_argnums=(1,))
         self._step = jax.jit(make_serve_step(cfg, impl=impl,
-                                             temperature=temperature))
+                                             temperature=temperature),
+                             donate_argnums=(1,))
         self.reset()
 
     def reset(self):
-        self.cache = lm.init_cache(self.cfg, self.batch, self.max_len)
+        self.cache = lm.init_cache(self.cfg, self.batch, self.max_len,
+                                   paged=self.paged,
+                                   page_size=self.page_size)
+        if self.paged:
+            from repro.models import attention
+            self.cache = lm.set_block_tables(
+                self.cache, attention.default_block_tables(
+                    self.batch, self.max_len, self.page_size))
         self.pos = jnp.zeros((self.batch,), jnp.int32)
         self.token = jnp.zeros((self.batch,), jnp.int32)
         self.rng = jax.random.PRNGKey(0)
+        # Host mirror of max(pos): the paged-full guard must not force a
+        # device sync per step.  Callers doing per-row pos surgery reset
+        # rows to 0, which can only lower the true max — the mirror stays
+        # a safe upper bound.
+        self._pos_ceiling = 0
 
     def prefill(self, tokens: jax.Array, **stubs):
         """Uniform prompt for all rows. tokens: [B, P]."""
@@ -210,13 +291,20 @@ class Engine:
         self.pos = jnp.full((self.batch,),
                             tokens.shape[1] + self.cfg.num_prefix_tokens,
                             jnp.int32)
+        self._pos_ceiling = tokens.shape[1] + self.cfg.num_prefix_tokens
         self.token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return self.token
 
     def step(self) -> jax.Array:
+        if self.paged and self._pos_ceiling >= self.max_len:
+            raise ValueError(
+                f"paged cache is full (pos {self._pos_ceiling} >= max_len "
+                f"{self.max_len}); a dense cache ring-wraps, pages do not — "
+                "bound generation or raise max_len")
         self.rng, sub = jax.random.split(self.rng)
         self.token, self.cache, self.pos = self._step(
             self.params, self.cache, self.token, self.pos, sub)
+        self._pos_ceiling += 1
         return self.token
 
     def generate(self, tokens: jax.Array, steps: int, **stubs) -> jax.Array:

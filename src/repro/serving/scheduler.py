@@ -1,0 +1,278 @@
+"""Continuous batching over the paged KV cache: admission, page accounting,
+and completion at token granularity.
+
+The scheduler owns a fixed decode batch of B rows backed by a shared page
+pool.  Requests queue up; whenever a row is free and the allocator can cover
+``ceil((prompt + max_new) / page_size)`` pages, the request is admitted by a
+*ragged prefill* — one jitted call whose ``lengths`` vector is zero for every
+other row, so in-flight rows keep decoding from bit-identical cache while the
+new row's prompt lands in its freshly allocated pages.  On completion the
+row's pages return to the free list immediately (memory scales with live
+tokens, not B × max_len).
+
+Freed rows still ride the batched decode step (there is no dynamic batch
+shape under jit).  Their writes are steered to a dedicated trash page —
+never allocated to real rows — because the fused kernel writes one slot per
+row per step unconditionally; block tables therefore never contain -1 for a
+slot that will be written.
+
+Dense mode (``paged=False``) runs the same admission logic against the
+classic [B, Hkv, S, D] cache — the benchmark's apples-to-apples baseline.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving import engine as engine_mod
+from repro.serving.engine import PROMPT_BUCKETS, bucket_len  # noqa: F401
+
+Params = Any
+
+
+class PageAllocator:
+    """Host-side free list of pool page ids (unit = one page)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n <= 0:
+            return []                 # [:-0] would hand out the whole list
+        if n > len(self._free):
+            return None
+        pages, self._free = self._free[-n:][::-1], self._free[:-n]
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        self._free.extend(reversed(pages))
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    tokens: list[int] = field(default_factory=list)   # generated output
+    admitted_step: int = -1
+    finished_step: int = -1
+    pages: list[int] = field(default_factory=list)
+
+
+class ContinuousBatchingEngine:
+    """Token-granularity continuous batching over a (paged) decode engine."""
+
+    def __init__(self, cfg: ModelConfig, params: Params, *, batch: int,
+                 max_len: int, paged: bool = True, page_size: int = 64,
+                 num_pages: Optional[int] = None, impl: str = "ref",
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.paged = paged
+        self.page_size = page_size
+        self.temperature = temperature
+        self.maxp = -(-max_len // page_size)
+        if paged:
+            if num_pages is None:
+                num_pages = batch * self.maxp
+            self.allocator = PageAllocator(num_pages)
+            self.trash_page = num_pages          # extra physical page
+            self.cache = lm.init_cache(cfg, batch, max_len, paged=True,
+                                       page_size=page_size,
+                                       num_pages=num_pages + 1)
+            self.host_bt = np.full((batch, self.maxp), self.trash_page,
+                                   np.int32)
+            self.cache = lm.set_block_tables(self.cache,
+                                             jnp.asarray(self.host_bt))
+        else:
+            self.allocator = None
+            self.cache = lm.init_cache(cfg, batch, max_len)
+        self._prefill = jax.jit(
+            engine_mod.make_ragged_prefill_fn(cfg, impl=impl),
+            donate_argnums=(1,))
+        self._step = jax.jit(
+            engine_mod.make_serve_step(cfg, impl=impl,
+                                       temperature=temperature),
+            donate_argnums=(1,))
+        self.rng = jax.random.PRNGKey(seed)
+        self.pos = jnp.zeros((batch,), jnp.int32)
+        self.token = jnp.zeros((batch,), jnp.int32)
+        self.rows: list[Optional[Request]] = [None] * batch
+        self.queue: deque[Request] = deque()
+        self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
+                      "completed": 0, "peak_pages": 0, "gen_tokens": 0}
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be "
+                             ">= 1 (prefill always yields one token)")
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(f"request {req.rid} needs "
+                             f"{len(req.prompt) + req.max_new_tokens} slots "
+                             f"> max_len {self.max_len}")
+        # Fail here, not mid-run inside admit(): the prompt must fit a
+        # prefill bucket (buckets are clamped to max_len at admission).
+        bucket_len(len(req.prompt))
+        if self.paged:
+            need = self._pages_needed(req)
+            if need > self.allocator.num_pages:
+                raise ValueError(f"request {req.rid} needs {need} pages "
+                                 f"> pool {self.allocator.num_pages}")
+        self.queue.append(req)
+
+    def _pages_needed(self, req: Request) -> int:
+        return -(-(len(req.prompt) + req.max_new_tokens) // self.page_size)
+
+    def _free_row(self, row: int) -> None:
+        req = self.rows[row]
+        req.finished_step = self.stats["steps"]
+        self.stats["completed"] += 1
+        if self.paged:
+            # req.pages is kept (now historical) — the allocator owns reuse.
+            self.allocator.free(req.pages)
+            self.host_bt[row, :] = self.trash_page
+        self.rows[row] = None
+
+    def admit(self) -> int:
+        """Admit queued requests into free rows (one ragged prefill call).
+
+        Returns the number admitted.  Head-of-line blocking on page budget
+        is deliberate: FIFO completion-time fairness.
+        """
+        pending: list[tuple[int, Request]] = []
+        for row in range(self.batch):
+            if self.rows[row] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            if self.paged:
+                pages = self.allocator.alloc(self._pages_needed(req))
+                if pages is None:
+                    break                      # wait for completions
+                req.pages = pages
+                self.host_bt[row, :] = self.trash_page
+                self.host_bt[row, :len(pages)] = pages
+            self.queue.popleft()
+            self.rows[row] = req
+            req.admitted_step = self.stats["steps"]
+            pending.append((row, req))
+        if not pending:
+            return 0
+
+        if self.paged:
+            self.cache = lm.set_block_tables(self.cache,
+                                             jnp.asarray(self.host_bt))
+            used = self.allocator.num_pages - self.allocator.available
+            self.stats["peak_pages"] = max(self.stats["peak_pages"], used)
+        logits, _, self.cache = engine_mod.ragged_prefill_batch(
+            self._prefill, self.params, self.cache, self.batch,
+            {row: req.prompt for row, req in pending}, max_len=self.max_len)
+        self.rng, sub = jax.random.split(self.rng)
+        first = np.asarray(engine_mod.sample_token(logits, sub,
+                                                   self.temperature))
+        token = np.array(self.token)           # writable host copies
+        pos = np.array(self.pos)
+        for row, req in pending:
+            req.tokens.append(int(first[row]))
+            self.stats["gen_tokens"] += 1
+            token[row] = int(first[row])
+            pos[row] = len(req.prompt)
+        self.token = jnp.asarray(token)
+        self.pos = jnp.asarray(pos)
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += len(pending)
+        # A request can complete at its very first token (max_new == 1).
+        for row, req in pending:
+            if self._done(req):
+                self._free_row(row)
+        return len(pending)
+
+    def _done(self, req: Request) -> bool:
+        return (len(req.tokens) >= req.max_new_tokens
+                or (req.eos_id is not None
+                    and req.tokens
+                    and req.tokens[-1] == req.eos_id))
+
+    # -- decode loop --------------------------------------------------------
+
+    def step(self) -> bool:
+        """One batched decode step.  Returns False when fully drained."""
+        self.admit()
+        if all(r is None for r in self.rows):
+            return bool(self.queue)
+        self.rng, sub = jax.random.split(self.rng)
+        self.token, self.cache, self.pos = self._step(
+            self.params, self.cache, self.token, self.pos, sub)
+        self.stats["steps"] += 1
+        sampled = np.asarray(self.token)
+        pos = np.array(self.pos)
+        freed = False
+        for row, req in enumerate(self.rows):
+            if req is None:
+                # Idle lanes park at pos 0: their (trash-page) writes stay
+                # in slot range and their walk reads a single garbage page.
+                pos[row] = 0
+                continue
+            req.tokens.append(int(sampled[row]))
+            self.stats["gen_tokens"] += 1
+            if self._done(req):
+                self._free_row(row)
+                freed = True
+        self.pos = jnp.asarray(pos)
+        if freed:
+            self.admit()
+        return any(r is not None for r in self.rows) or bool(self.queue)
+
+    def run(self, requests: list[Request], max_steps: int = 100_000
+            ) -> list[Request]:
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        else:
+            raise RuntimeError("scheduler hit max_steps with work remaining")
+        return requests
+
+    @property
+    def live_tokens(self) -> int:
+        return sum(len(r.prompt) + len(r.tokens)
+                   for r in self.rows if r is not None)
+
+    def resident_cache_bytes(self) -> int:
+        """Bytes of KV actually pinned right now.
+
+        Dense: the whole [B, Hkv, S, D] allocation, always.  Paged: pages in
+        use × per-page bytes — what a pool sized to the live-token watermark
+        would hold (the preallocated pool is the *capacity*, this is the
+        footprint the allocator actually needs).
+        """
+        if not self.paged:
+            return sum(int(x.nbytes) for x in jax.tree.leaves(self.cache))
+        used = self.allocator.num_pages - self.allocator.available
+        pools: list = []
+
+        def grab(d):
+            pools.extend((d["k_pages"], d["v_pages"]))
+            return d
+
+        lm._map_paged_dicts(self.cache, grab)
+        return sum(int(p.nbytes) * used // p.shape[-4] for p in pools)

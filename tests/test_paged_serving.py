@@ -1,0 +1,366 @@
+"""Paged KV cache + continuous batching: oracle equivalence, admission,
+page accounting, ring prefill, and the fused-step sampling path.
+
+The paged-vs-dense pipeline tests run in float32 so the two cache layouts
+are comparable at tight tolerance (bf16 cross-path rounding would otherwise
+amplify through layers); greedy token streams must match exactly either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import attention, lm
+from repro.serving.scheduler import (ContinuousBatchingEngine, PageAllocator,
+                                     Request, bucket_len)
+
+B, MAX_LEN, PS = 3, 32, 8
+
+
+def _f32(params):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def llm():
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=32, vocab=128)
+    return cfg, _f32(lm.init(jax.random.PRNGKey(0), cfg))
+
+
+@pytest.fixture(scope="module")
+def ring_llm():
+    """Mixed full-attention + ring-window local pattern."""
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=32, vocab=128)
+    cfg = cfg.replace(block_pattern=("attn", "local"), num_layers=4,
+                      window=16, ring_local_cache=True)
+    return cfg, _f32(lm.init(jax.random.PRNGKey(1), cfg))
+
+
+def _paged_cache(cfg, batch=B, max_len=MAX_LEN, ps=PS):
+    cache = lm.init_cache(cfg, batch, max_len, dtype=jnp.float32,
+                          paged=True, page_size=ps)
+    return lm.set_block_tables(
+        cache, attention.default_block_tables(batch, max_len, ps))
+
+
+def _run_pipeline(cfg, params, cache, prompts, lengths, steps, impl="ref"):
+    logits, cache = lm.prefill(params, cfg, prompts, cache, impl=impl,
+                               lengths=lengths)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = lengths if lengths is not None else jnp.full(
+        (prompts.shape[0],), prompts.shape[1], jnp.int32)
+    out = [np.asarray(tok)]
+    for _ in range(steps):
+        logits, cache = lm.decode_step(params, cfg, tok, cache, pos,
+                                       impl=impl)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = pos + 1
+        out.append(np.asarray(tok))
+    return np.stack(out, 1), logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Paged == dense oracle (prefill -> decode, ragged lengths, ring configs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_paged_matches_dense_ragged_pipeline(llm, impl):
+    cfg, params = llm
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(2, 100, (B, 8)), jnp.int32)
+    lengths = jnp.asarray([8, 3, 5], jnp.int32)
+
+    dense = lm.init_cache(cfg, B, MAX_LEN, dtype=jnp.float32)
+    toks_d, logits_d, _ = _run_pipeline(cfg, params, dense, prompts,
+                                        lengths, steps=10)
+    toks_p, logits_p, _ = _run_pipeline(cfg, params, _paged_cache(cfg),
+                                        prompts, lengths, steps=10,
+                                        impl=impl)
+    np.testing.assert_array_equal(toks_d, toks_p)
+    tol = dict(rtol=1e-4, atol=1e-4) if impl == "ref" else dict(
+        rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(logits_d), np.asarray(logits_p),
+                               **tol)
+
+
+def test_paged_matches_dense_ring_window_config(ring_llm):
+    """Mixed pattern: attn layers paged, local layers keep their ring cache
+    (bounded by the window already) — still bit-compatible with dense."""
+    cfg, params = ring_llm
+    rng = np.random.default_rng(1)
+    prompts = jnp.asarray(rng.integers(2, 100, (B, 6)), jnp.int32)
+    lengths = jnp.asarray([6, 2, 4], jnp.int32)
+
+    dense = lm.init_cache(cfg, B, MAX_LEN, dtype=jnp.float32)
+    toks_d, _, _ = _run_pipeline(cfg, params, dense, prompts, lengths,
+                                 steps=12)
+    paged = _paged_cache(cfg)
+    toks_p, _, cache_p = _run_pipeline(cfg, params, paged, prompts, lengths,
+                                       steps=12)
+    np.testing.assert_array_equal(toks_d, toks_p)
+    # The local layer's cache really is a ring (window-sized), not paged.
+    local = cache_p["groups"]["1"]
+    assert "k" in local and local["k"].shape[-2] == cfg.window
+    assert "k_pages" in cache_p["groups"]["0"]
+
+
+def test_ragged_prefill_preserves_untouched_rows(llm):
+    """lengths[b] == 0 rows keep cache bit-for-bit (admission isolation)."""
+    cfg, params = llm
+    rng = np.random.default_rng(2)
+    prompts = jnp.asarray(rng.integers(2, 100, (B, 8)), jnp.int32)
+
+    # Dense: row 0's [G, Hkv, S, D] slice untouched by row 1's prefill.
+    dense = lm.init_cache(cfg, B, MAX_LEN, dtype=jnp.float32)
+    _, dense = lm.prefill(params, cfg, prompts, dense,
+                          lengths=jnp.asarray([6, 0, 0], jnp.int32))
+    row0 = np.asarray(dense["groups"]["0"]["k"][:, 0]).copy()
+    _, dense = lm.prefill(params, cfg, prompts, dense,
+                          lengths=jnp.asarray([0, 8, 0], jnp.int32))
+    np.testing.assert_array_equal(row0,
+                                  np.asarray(dense["groups"]["0"]["k"][:, 0]))
+
+    # Paged: every page EXCEPT row 1's must be untouched by row 1's prefill
+    # (this includes the pool's last page — a -1 "drop" that wrapped under
+    # jnp scatter semantics would corrupt it).
+    paged = _paged_cache(cfg)
+    _, paged = lm.prefill(params, cfg, prompts, paged,
+                          lengths=jnp.asarray([6, 0, 0], jnp.int32))
+    bt = np.asarray(lm.get_block_tables(paged))
+    pool_before = np.asarray(paged["groups"]["0"]["k_pages"]).copy()
+    _, paged = lm.prefill(params, cfg, prompts, paged,
+                          lengths=jnp.asarray([0, 8, 0], jnp.int32))
+    pool_after = np.asarray(paged["groups"]["0"]["k_pages"])
+    others = [p for p in range(pool_before.shape[1])
+              if p not in set(bt[1].tolist())]
+    np.testing.assert_array_equal(pool_before[:, others],
+                                  pool_after[:, others])
+
+
+# ---------------------------------------------------------------------------
+# Ring-cache prefill gather path (prompt longer than the ring)
+# ---------------------------------------------------------------------------
+
+def test_ring_prefill_gather_matches_decode_fill():
+    """attention.prefill with t > S (ring) must leave the same cache as
+    feeding the tokens through decode_step one at a time."""
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=32,
+                          vocab=128).replace(window=4)
+    key = jax.random.PRNGKey(3)
+    p = jax.tree.map(lambda x: x.astype(jnp.float32),
+                     attention.init(key, cfg))
+    t, s = 10, 4
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(1, t, cfg.d_model)),
+                    jnp.float32)
+
+    ring = attention.init_cache(cfg, 1, s, dtype=jnp.float32)
+    mask = jnp.ones((t, t), bool) & (jnp.arange(t)[None, :]
+                                     <= jnp.arange(t)[:, None])
+    _, ring = attention.prefill(p, cfg, x, ring, mask, jnp.arange(t))
+
+    step = attention.init_cache(cfg, 1, s, dtype=jnp.float32)
+    for i in range(t):
+        _, step = attention.decode_step(p, cfg, x[:, i:i + 1], step,
+                                        jnp.asarray([i], jnp.int32))
+    np.testing.assert_allclose(np.asarray(ring["k"]), np.asarray(step["k"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ring["v"]), np.asarray(step["v"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_into_short_ring_raises():
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=32, vocab=128)
+    p = attention.init(jax.random.PRNGKey(0), cfg)
+    cache = attention.init_cache(cfg, 2, 4)          # ring shorter than t
+    x = jnp.zeros((2, 8, cfg.d_model), jnp.bfloat16)
+    with pytest.raises(NotImplementedError, match="ragged prefill"):
+        attention.prefill(p, cfg, x, cache, None, jnp.arange(8),
+                          lengths=jnp.asarray([8, 2], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: admission, completion, page reuse
+# ---------------------------------------------------------------------------
+
+def _mk_requests(rng, spec):
+    return [Request(rid=i,
+                    prompt=[int(t) for t in rng.integers(2, 100, n)],
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(spec)]
+
+
+def test_scheduler_paged_dense_solo_agree(llm):
+    cfg, params = llm
+    spec = [(5, 6), (9, 4), (3, 8), (7, 5), (4, 3)]
+    outs = {}
+    for mode in ("paged", "dense"):
+        rng = np.random.default_rng(7)
+        eng = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                       paged=(mode == "paged"), page_size=8)
+        outs[mode] = eng.run(_mk_requests(rng, spec))
+        assert eng.stats["completed"] == len(spec)
+    rng = np.random.default_rng(7)
+    solo_reqs = _mk_requests(rng, spec)
+    for r in solo_reqs:
+        solo = ContinuousBatchingEngine(cfg, params, batch=1, max_len=32,
+                                        paged=True, page_size=8)
+        solo.run([r])
+    for mode in ("paged", "dense"):
+        for got, want in zip(outs[mode], solo_reqs):
+            assert got.tokens == want.tokens, (mode, got.rid)
+
+
+def test_mid_flight_admission_reuses_pages_without_disturbing_rows(llm):
+    """A finished row's pages are reallocated to the next request while the
+    other row keeps decoding — its output must be unchanged vs a run with
+    no admission at all."""
+    cfg, params = llm
+    rng = np.random.default_rng(9)
+    long_req = Request(0, [int(t) for t in rng.integers(2, 100, 6)], 12)
+    short_req = Request(1, [int(t) for t in rng.integers(2, 100, 4)], 2)
+    late_req = Request(2, [int(t) for t in rng.integers(2, 100, 5)], 3)
+
+    def clone(r):
+        return Request(r.rid, list(r.prompt), r.max_new_tokens)
+
+    eng3 = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                    paged=True, page_size=8, num_pages=6)
+    r3 = eng3.run([clone(long_req), clone(short_req), clone(late_req)])
+    assert r3[2].admitted_step > 0, "late request must be admitted mid-flight"
+    assert set(r3[2].pages) & set(r3[1].pages), \
+        "freed pages were not reused by the admitted request"
+
+    eng2 = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                    paged=True, page_size=8, num_pages=6)
+    r2 = eng2.run([clone(long_req), clone(short_req)])
+    assert r3[0].tokens == r2[0].tokens, \
+        "mid-flight admission perturbed an in-flight row"
+    assert eng3.allocator.available == 6, "page leak"
+
+
+def test_page_allocator_exhaustion_and_reuse():
+    alloc = PageAllocator(4)
+    assert alloc.alloc(0) == [] and alloc.available == 4   # [:-0] trap
+    a = alloc.alloc(3)
+    assert alloc.alloc(2) is None and alloc.available == 1
+    alloc.free(a)
+    assert sorted(alloc.alloc(4)) == sorted(a + [3])
+
+
+def test_bucket_len():
+    assert bucket_len(1) == 8 and bucket_len(8) == 8 and bucket_len(9) == 16
+    with pytest.raises(ValueError):
+        bucket_len(10_000)
+
+
+def test_scheduler_requires_fitting_requests(llm):
+    cfg, params = llm
+    eng = ContinuousBatchingEngine(cfg, params, batch=1, max_len=16,
+                                   paged=True, page_size=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(0, [3] * 20, 8))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(1, [3, 4], 0))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(2, [], 4))
+
+
+# ---------------------------------------------------------------------------
+# Engine paged mode + orchestrator wiring + fused-step sampling
+# ---------------------------------------------------------------------------
+
+def test_engine_paged_generate_matches_dense(llm):
+    from repro.serving.engine import Engine
+    cfg, params = llm
+    prompts = jnp.asarray([[5, 6, 7, 8], [9, 10, 11, 12]], jnp.int32)
+    dense = Engine(cfg, params, batch=2, max_len=32)
+    paged = Engine(cfg, params, batch=2, max_len=32, paged=True, page_size=8)
+    np.testing.assert_array_equal(
+        np.asarray(dense.generate(prompts, steps=6)),
+        np.asarray(paged.generate(prompts, steps=6)))
+
+
+def test_engine_paged_raises_when_full(llm):
+    """Pages do not ring-wrap: running past max_len must fail loudly."""
+    from repro.serving.engine import Engine
+    cfg, params = llm
+    eng = Engine(cfg, params, batch=1, max_len=8, paged=True, page_size=8)
+    eng.prefill(jnp.asarray([[5, 6, 7, 8]], jnp.int32))
+    with pytest.raises(ValueError, match="paged cache is full"):
+        for _ in range(10):
+            eng.step()
+
+
+def test_orchestrator_paged_ragged_converges():
+    from repro.agents.orchestrator import make_sim_llm, run_task
+    from repro.agents.tasks import TASKS
+    cfg, params = make_sim_llm()
+    r = run_task(cfg, params, TASKS["tic_tac_toe"], mode="parallel",
+                 n_agents=3, seed=1, kv="paged", prefill="ragged")
+    assert r.converged and r.gen_tokens > 0
+    assert r.kv_mode == "paged" and r.prefill_mode == "ragged"
+    # Ragged prefill folds each prompt into one step: far fewer engine steps
+    # than replay mode, which pays one decode step per replayed token.
+    replay = run_task(cfg, params, TASKS["tic_tac_toe"], mode="parallel",
+                      n_agents=3, seed=1)
+    assert r.steps < replay.steps
+
+
+def test_fused_serve_step_temperature_sampling(llm):
+    from jax.sharding import Mesh
+    from repro.core import doc as doc_mod, gset
+    from repro.serving import engine as engine_mod
+    cfg, params = llm
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    coord = engine_mod.replicate_coord(
+        {"doc": doc_mod.empty(4, 16), "heartbeats": gset.GCounter.zeros(1)},
+        1)
+    step = engine_mod.make_fused_serve_step(cfg, mesh, ("data",),
+                                            temperature=1.0)
+    cache = lm.init_cache(cfg, 4, 16)
+    token = jnp.asarray([3, 3, 3, 3], jnp.int32)
+    pos = jnp.zeros((4,), jnp.int32)
+    slots = jnp.arange(4, dtype=jnp.int32)
+    active = jnp.ones((4,), bool)
+    seen = set()
+    key = jax.random.PRNGKey(0)
+    with mesh:
+        for t in range(5):
+            key, sub = jax.random.split(key)
+            token, cache, pos, coord = step(params, cache, token, pos,
+                                            slots, active, coord,
+                                            jnp.int32(t), sub)
+            seen.update(np.asarray(token).tolist())
+    assert len(seen) > 1, "temperature sampling had no effect in fused step"
+
+
+# ---------------------------------------------------------------------------
+# Benchmark accounting: the write really is O(page), not O(max_len)
+# ---------------------------------------------------------------------------
+
+def test_serving_write_bytes_o_page_not_o_max_len(llm):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.bench_serving import analytic_step_bytes
+    cfg, _ = llm
+    live = [40, 10, 100]
+    w_dense_1k, _ = analytic_step_bytes(cfg, batch=3, max_len=1024,
+                                        page_size=16, live_lens=live,
+                                        paged=False)
+    w_dense_4k, _ = analytic_step_bytes(cfg, batch=3, max_len=4096,
+                                        page_size=16, live_lens=live,
+                                        paged=False)
+    w_paged_1k, r_paged_1k = analytic_step_bytes(cfg, batch=3, max_len=1024,
+                                                 page_size=16,
+                                                 live_lens=live, paged=True)
+    w_paged_4k, r_paged_4k = analytic_step_bytes(cfg, batch=3, max_len=4096,
+                                                 page_size=16,
+                                                 live_lens=live, paged=True)
+    assert w_dense_4k == 4 * w_dense_1k          # dense write ~ max_len
+    assert w_paged_4k == w_paged_1k              # paged write ~ O(page)
+    assert r_paged_4k == r_paged_1k              # reads ~ live tokens
+    assert w_dense_1k // w_paged_1k == 1024      # the headline ratio
