@@ -121,6 +121,53 @@ def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
     }
 
 
+def run_prefix_share(cfg, params, *, max_len: int, page_size: int,
+                     fanout: int, prompt_len: int, max_new: int,
+                     share: bool, seed: int = 0) -> dict:
+    """Fan-out of ``fanout`` agents forked from ONE shared prompt.
+
+    With ``share=True`` the scheduler's copy-on-write prefix sharing is on:
+    the clones' prompt pages are refcounted aliases of the first admission's
+    pages, duplicated only when a row is about to write into one.  Reports
+    peak resident KV MB and per-admission µs for the with/without-COW
+    comparison column.
+    """
+    from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+    rng = np.random.default_rng(seed)
+    prompt = [int(t) for t in rng.integers(2, cfg.vocab_size, prompt_len)]
+    requests = [Request(rid=i, prompt=list(prompt), max_new_tokens=max_new)
+                for i in range(fanout)]
+    eng = ContinuousBatchingEngine(cfg, params, batch=fanout,
+                                   max_len=max_len, paged=True,
+                                   page_size=page_size, prefix_sharing=share)
+    # Warm the prefill bucket / decode shapes so admission_us measures the
+    # steady-state admission path, not the jit compile.
+    eng.run([Request(rid=-1, prompt=list(prompt), max_new_tokens=max_new)])
+    eng.stats.update(admit_s=0.0, prefills=0, peak_pages=0,
+                     shared_pages=0, cow_copies=0, completed=0)
+    for r in requests:
+        eng.submit(r)
+    resident_peak = 0
+    while True:
+        more = eng.step()
+        resident_peak = max(resident_peak, eng.resident_cache_bytes())
+        if not more:
+            break
+        if eng.stats["steps"] > 50_000:
+            raise RuntimeError("prefix-share bench runaway")
+    s = eng.stats
+    return {
+        "fanout": fanout, "prompt_len": prompt_len, "max_new": max_new,
+        "page_size": page_size, "cow": share,
+        "resident_cache_mb": resident_peak / 2**20,
+        "peak_pages": s["peak_pages"],
+        "admission_us": 1e6 * s["admit_s"] / max(s["prefills"], 1),
+        "shared_pages": s["shared_pages"], "cow_copies": s["cow_copies"],
+        "completed": s["completed"],
+    }
+
+
 def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
               emit_csv=print) -> dict:
     from repro.agents.orchestrator import make_sim_llm
@@ -142,6 +189,19 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                     n_requests=n_requests, prompt_hi=prompt_hi,
                     max_new=max_new))
 
+    # Prefix-share sweep: shared-prompt fan-out, with/without COW sharing.
+    share_rows = []
+    fanouts = (4,) if quick else (2, 4, 8)
+    for fanout in fanouts:
+        for share in (False, True):
+            # Prompt deliberately NOT page-aligned: the partial boundary
+            # page is shared too and every sharer copy-on-writes it at its
+            # first generated token.
+            share_rows.append(run_prefix_share(
+                cfg, params, max_len=max_len, page_size=page_size,
+                fanout=fanout, prompt_len=3 * page_size + 5,
+                max_new=max_new, share=share))
+
     ratios = []
     for d in rows:
         if d["mode"] != "dense":
@@ -155,6 +215,7 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                    "num_layers": cfg.num_layers, "max_len": max_len,
                    "page_size": page_size, "quick": quick},
         "rows": rows,
+        "prefix_share": share_rows,
         "write_bytes_ratio_dense_over_paged": min(ratios),
         "admission": {
             "mid_flight_admissions": sum(r["admitted_mid_flight"]
@@ -172,6 +233,13 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
         emit_csv(f"{name},{r['us_per_token']:.1f},{derived}")
     emit_csv(f"serving/write_ratio,0.0,dense_over_paged="
              f"{report['write_bytes_ratio_dense_over_paged']:.1f}x")
+    for r in share_rows:
+        name = (f"serving/prefix_f{r['fanout']}_"
+                f"{'cow' if r['cow'] else 'nocow'}")
+        derived = (f"residentMB={r['resident_cache_mb']:.2f}"
+                   f";sharedPages={r['shared_pages']}"
+                   f";cowCopies={r['cow_copies']}")
+        emit_csv(f"{name},{r['admission_us']:.1f},{derived}")
     return report
 
 

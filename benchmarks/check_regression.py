@@ -1,0 +1,113 @@
+"""CI gate: fail when the serving benchmark's paged path regresses more
+than ``--max-regression`` (default 15%) against the checked-in baseline.
+
+Only paged rows are gated, keyed by (batch, skew), on two signal classes:
+
+* **Deterministic counters** — analytic write/read bytes per step, resident
+  cache MB, peak pages.  These are pure functions of the code (bit-identical
+  across reruns of the same commit), so they get the strict
+  ``--max-regression`` threshold: any increase past it is a real paged-path
+  regression (more bytes touched per step, more resident memory), never
+  runner noise.
+* **Wall clock** — µs/token normalized by the *same run's* dense row at the
+  same key (which cancels the runner-speed term; absolute interpret-mode
+  timings are machine-dependent).  Tiny CPU benches still jitter ±20% on
+  the ratio, so timing gets the looser ``--timing-slack`` (default 50%) —
+  wide enough to ignore dispatch jitter, tight enough to catch an
+  accidentally-quadratic paged step.  A report missing its dense row falls
+  back to absolute µs/token for that key.
+
+Both files are BENCH_serving.json outputs of ``benchmarks.bench_serving``
+at matching --quick settings, CPU interpret mode.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline benchmarks/baselines/BENCH_serving_quick.json \
+      --current BENCH_serving.json --max-regression 0.15
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+COUNTERS = ("write_bytes_per_step", "read_bytes_per_step",
+            "resident_cache_mb", "peak_pages")
+
+
+def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
+    return {(r["batch"], r["skew"]): r
+            for r in report["rows"] if r["mode"] == mode}
+
+
+def timing_value(report: dict, key: tuple) -> tuple[float, str]:
+    """Dense-normalized paged µs/token (absolute when dense row missing)."""
+    paged = rows_by_key(report, "paged")[key]
+    dense = rows_by_key(report, "dense").get(key)
+    if dense is not None and dense["us_per_token"] > 0:
+        return paged["us_per_token"] / dense["us_per_token"], "paged/dense"
+    return paged["us_per_token"], "us/tok"
+
+
+def check(baseline: dict, current: dict, max_regression: float,
+          timing_slack: float) -> tuple[bool, list[str]]:
+    base = rows_by_key(baseline, "paged")
+    cur = rows_by_key(current, "paged")
+    ok = True
+    lines = []
+
+    def judge(key, name, bval, cval, limit):
+        nonlocal ok
+        ratio = cval / max(bval, 1e-9) - 1.0
+        bad = ratio > limit and cval - bval > 1e-9
+        if bad:
+            ok = False
+        lines.append(
+            f"paged b{key[0]} {key[1]:>7} {name:>18}: baseline "
+            f"{bval:12.3f}, current {cval:12.3f} ({ratio:+.1%}) "
+            f"{'FAIL' if bad else 'ok'}")
+
+    for key in sorted(base):
+        if key not in cur:
+            ok = False
+            lines.append(f"MISSING paged row {key} in current run")
+            continue
+        for name in COUNTERS:
+            judge(key, name, float(base[key][name]), float(cur[key][name]),
+                  max_regression)
+        bval, bkind = timing_value(baseline, key)
+        cval, ckind = timing_value(current, key)
+        if bkind != ckind:          # one report lacks its dense row
+            bval = base[key]["us_per_token"]
+            cval = cur[key]["us_per_token"]
+            bkind = "us/tok"
+        judge(key, bkind, bval, cval, timing_slack)
+    return ok, lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", default="BENCH_serving.json")
+    ap.add_argument("--max-regression", type=float, default=0.15,
+                    help="threshold for deterministic per-step counters")
+    ap.add_argument("--timing-slack", type=float, default=0.50,
+                    help="threshold for the dense-normalized timing ratio")
+    args = ap.parse_args()
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    current = json.loads(Path(args.current).read_text())
+    ok, lines = check(baseline, current, args.max_regression,
+                      args.timing_slack)
+    for line in lines:
+        print(line)
+    if not ok:
+        print("REGRESSION: paged path exceeded baseline "
+              f"(counters >{args.max_regression:.0%} or timing "
+              f">{args.timing_slack:.0%})")
+        sys.exit(1)
+    print("serving regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -77,6 +77,7 @@ class RunResult:
     sync_bytes: int = 0     # wire bytes (see delta.full_state_wire_bytes)
     kv_mode: str = "dense"          # dense | paged KV cache
     prefill_mode: str = "replay"    # replay (token-by-token) | ragged
+    shared_prefix_pages: int = 0    # prompt pages shared across (re-)prefills
 
     @property
     def tokens_per_s(self) -> float:
@@ -195,14 +196,36 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     append_fn = jax.jit(doc_mod.append_token)
     append_run_fn = jax.jit(doc_mod.append)
     digest_fn = jax.jit(doc_mod.digest)
+    mapper = None
     if kv == "paged":
-        from repro.models import attention
+        from repro.serving.scheduler import PrefixPageMapper
+        # Shared-prefix admission: each (re-)contextualization maps the
+        # row's pages through a refcounted pool with longest-prefix reuse —
+        # the unchanged task/TODO prompt header keeps its pages across
+        # invalidation replays instead of being re-pooled per agent.
+        maxp = -(-max_len // page_size)
+        pool_pages = (n_agents + 1) * maxp     # +maxp: remap transient
+        mapper = PrefixPageMapper(n_agents, maxp, page_size,
+                                  trash_page=pool_pages,
+                                  num_pages=pool_pages)
         cache = lm.init_cache(cfg, n_agents, max_len, paged=True,
-                              page_size=page_size)
-        cache = lm.set_block_tables(cache, attention.default_block_tables(
-            n_agents, max_len, page_size))
+                              page_size=page_size,
+                              num_pages=pool_pages + 1)
+        cache = mapper.install(cache)
     else:
         cache = lm.init_cache(cfg, n_agents, max_len)
+
+    def recontextualize(a: AgentState) -> None:
+        """Map the agent's new prompt into pages (shared-prefix admission)."""
+        if mapper is None:
+            return
+        horizon = min(len(a.queue) + gen_budget, max_len)
+        mapper.map_row(a.row, a.queue, horizon)
+
+    def push_tables() -> None:
+        nonlocal cache
+        if mapper is not None:
+            cache = mapper.install(cache)
     pos = jnp.zeros((n_agents,), jnp.int32)
     token = jnp.ones((n_agents,), jnp.int32)
     key = jax.random.PRNGKey(seed)
@@ -342,6 +365,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                     snap_len[a.client] = host_len.copy()
                     buf_slot[a.row] = a.todo_id
                     pos = pos.at[a.row].set(0)
+                    recontextualize(a)
                 else:
                     stats["collide"] += 1
             if not any_won:
@@ -367,6 +391,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         if prefill_fn is not None:
             pre = [a for a in agents if a.phase == PREFILL and a.queue]
             if pre:
+                push_tables()
                 row_prompts = {a.row: a.queue for a in pre}
                 logits, lens_h, cache = engine_mod.ragged_prefill_batch(
                     prefill_fn, params, cache, n_agents, row_prompts,
@@ -399,6 +424,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
             elif a.phase == PREFILL:
                 a.phase = GEN
         token = jnp.asarray(forced)
+        push_tables()
         key, sub = jax.random.split(key)
         token, cache, pos = step_fn(params, cache, token, pos, sub)
         stats["steps"] += 1
@@ -431,6 +457,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                                                  vocab, rng)
                         a.phase = PREFILL
                         pos = pos.at[a.row].set(0)
+                        recontextualize(a)
                     snap_len[a.client] = host_len.copy()
 
         if stats["steps"] > 20_000:   # safety valve
@@ -468,6 +495,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         merge_strategy=merge, sync_rounds=stats["syncs"],
         sync_bytes=int(stats["sync_bytes"]),
         kv_mode=kv, prefill_mode=prefill,
+        shared_prefix_pages=mapper.shared_pages if mapper else 0,
     )
 
 
@@ -503,6 +531,9 @@ def main() -> None:
                     choices=["replay", "ragged"],
                     help="prompt (re-)contextualization: token-by-token "
                          "replay or one ragged masked prefill per batch")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="paged-KV page size; small pages (8-16) let the "
+                         "task/TODO header share across re-contextualizations")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -510,7 +541,7 @@ def main() -> None:
     r = run_task(cfg, params, TASKS[args.task], mode=args.mode,
                  n_agents=args.agents, seed=args.seed, merge=args.merge,
                  delta_capacity=args.delta_capacity, kv=args.kv,
-                 prefill=args.prefill)
+                 prefill=args.prefill, page_size=args.page_size)
     for k, v in sorted(vars(r).items()):
         print(f"{k}: {v}")
 

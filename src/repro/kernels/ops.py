@@ -24,6 +24,7 @@ from repro.kernels import delta_apply as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lww_merge as _lww
 from repro.kernels import paged_decode_attention as _pdec
+from repro.kernels import paged_mla_decode as _pmla
 from repro.kernels import ref
 from repro.kernels import rglru_scan as _rg
 
@@ -167,6 +168,53 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
         pos.astype(jnp.int32), k_new.astype(k_pages.dtype),
         v_new.astype(v_pages.dtype), scale=scale, window=window,
         interpret=not on_tpu)
+
+
+def paged_mla_decode(q_abs, q_rope, latent_pages, block_tables, pos,
+                     latent_new, *, scale: float, use_pallas: bool = True):
+    """Fused write-attend MLA decode over a paged latent cache.
+
+    q_abs: [B, H, r] (f32 absorbed queries); q_rope: [B, H, rd];
+    latent_pages: [P, ps, Dp] with Dp >= r + rd (lane-padded at init);
+    block_tables: i32[B, maxp]; pos: i32[B]; latent_new: [B, Dp].
+    Returns (ctx [B, H, r] f32, latent_pages updated in place on TPU).
+
+    Like the MHA paged wrapper, the pool is never padded per step: a
+    pad/slice round-trip would copy the whole latent cache each token —
+    exactly the cost the paged path removes.  The pool's feature dim is
+    therefore padded once at init_cache (models/cache.py pad128); here we
+    only validate.
+    """
+    r = q_abs.shape[-1]
+    rd = q_rope.shape[-1]
+    ps = latent_pages.shape[1]
+    dp = latent_pages.shape[2]
+    if dp < r + rd:
+        raise ValueError(f"latent pool width {dp} < kv_lora_rank + rope_dim "
+                         f"= {r + rd}")
+    # Clamp pos to table capacity on BOTH paths (one contract with the MHA
+    # wrapper): past it, both rewrite the table's last slot instead of
+    # reading the block table out of bounds.
+    pos = jnp.minimum(pos, block_tables.shape[1] * ps - 1)
+    if not use_pallas:
+        return ref.paged_mla_decode(q_abs, q_rope, latent_pages,
+                                    block_tables, pos, latent_new,
+                                    r=r, scale=scale)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        sublane = 16 if latent_pages.dtype == jnp.bfloat16 else 8
+        if ps % sublane or dp % 128:
+            raise ValueError(
+                f"paged MLA layout (page_size={ps}, width={dp}, "
+                f"{latent_pages.dtype}) is not TPU-tileable: page_size must "
+                f"be a multiple of {sublane} and the pool width a multiple "
+                f"of 128 (init_cache pads it — was this pool built by hand?)")
+    qc = jnp.concatenate([q_abs.astype(jnp.float32),
+                          q_rope.astype(jnp.float32)], axis=-1)
+    return _pmla.paged_mla_decode(
+        qc, latent_pages, block_tables.astype(jnp.int32),
+        pos.astype(jnp.int32), latent_new.astype(latent_pages.dtype),
+        r=r, scale=scale, interpret=not on_tpu)
 
 
 def linear_scan(a, b, h0, *, block_t: int = 128, use_pallas: bool = True):

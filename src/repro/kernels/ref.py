@@ -161,6 +161,51 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     return out.astype(q.dtype), k_pages, v_pages
 
 
+def paged_mla_decode(q_abs: jax.Array, q_rope: jax.Array,
+                     latent_pages: jax.Array, block_tables: jax.Array,
+                     pos: jax.Array, latent_new: jax.Array, *,
+                     r: int, scale: float
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Single-token MLA decode against a paged latent cache, write included.
+
+    q_abs: [B, H, r] absorbed queries; q_rope: [B, H, rd];
+    latent_pages: [P, ps, Dp] pool storing concat([ckv; krope]) rows in the
+    first ``r + rd`` features (Dp is lane-padded); block_tables: i32[B, maxp];
+    pos: i32[B]; latent_new: [B, Dp].
+
+    Gathers the row's pages into logical-position order and then runs the
+    *identical* contractions as the dense absorbed-weight decode
+    (mla.decode_step): same einsums, same fp32 promotion, same masking —
+    bit-for-bit with the dense oracle whenever maxp·ps == the dense S.
+    """
+    b, h, _ = q_abs.shape
+    _, ps, dp = latent_pages.shape
+    rd = q_rope.shape[-1]
+
+    pg_w = jnp.take_along_axis(block_tables, (pos // ps)[:, None], axis=1)[:, 0]
+    # -1 must DROP, but negative scatter indices wrap in jnp — route them
+    # out of bounds so mode="drop" actually discards the write.
+    pg_w = jnp.where(pg_w < 0, latent_pages.shape[0], pg_w)
+    slot_w = pos % ps
+    latent_pages = latent_pages.at[pg_w, slot_w, :].set(
+        latent_new.astype(latent_pages.dtype), mode="drop")
+
+    safe_bt = jnp.maximum(block_tables, 0)
+    lg = latent_pages[safe_bt].reshape(b, -1, dp)        # [B, maxp*ps, Dp]
+    ckv_g = lg[..., :r]
+    krope_g = lg[..., r:r + rd]
+    logits = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_g,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bsr->bhs", q_rope, krope_g,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(lg.shape[1])[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, ckv_g.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return ctx, latent_pages
+
+
 # ---------------------------------------------------------------------------
 # Diagonal gated linear recurrence (RG-LRU / generic h_t = a_t h_{t-1} + b_t)
 # ---------------------------------------------------------------------------

@@ -148,7 +148,8 @@ def _sharding_tree(mesh, spec_tree):
 def lower_cell(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
                fused_coord=False, microbatches=1, remat=True,
                seq_parallel=True, mla_cache="latent",
-               merge_every=1, delta_capacity=64):
+               merge_every=1, delta_capacity=64, kv_layout="dense",
+               page_size=64):
     """Returns the lowered computation. Never allocates device memory.
 
     Training cells use FSDP (fully-sharded params/grads/optimizer — the
@@ -166,12 +167,14 @@ def lower_cell(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
                                  microbatches=microbatches, remat=remat,
                                  mla_cache=mla_cache,
                                  merge_every=merge_every,
-                                 delta_capacity=delta_capacity)
+                                 delta_capacity=delta_capacity,
+                                 kv_layout=kv_layout, page_size=page_size)
 
 
 def _lower_cell_inner(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
                       fused_coord=False, microbatches=1, remat=True,
-                      mla_cache="latent", merge_every=1, delta_capacity=64):
+                      mla_cache="latent", merge_every=1, delta_capacity=64,
+                      kv_layout="dense", page_size=64):
     part = Partitioner(mesh, fsdp=(shape.kind == "train"),
                        mla_cache=mla_cache)
     p_abs = lm.abstract_params(cfg)
@@ -206,8 +209,13 @@ def _lower_cell_inner(cfg, shape: ShapeSpec, mesh, *, merge_strategy="pmax",
     shard_batch = b % dp_size == 0
     # VLM prefix tokens occupy cache positions too.
     max_len = shape.seq_len + cfg.num_prefix_tokens
+    # kv_layout="paged" lowers the fused paged step: pool leaves shard over
+    # heads (MHA) / the latent-feature axis (MLA), block tables replicate
+    # (see sharding/partition.py) — the multi-host proof for the paged path.
     cache_abs = jax.eval_shape(
-        lambda: lm.init_cache(cfg, b, max_len))
+        lambda: lm.init_cache(cfg, b, max_len,
+                              paged=(kv_layout == "paged"),
+                              page_size=page_size))
     c_shard = part.cache_shardings(cache_abs, shard_batch=shard_batch)
     bspec = NamedSharding(mesh, P(dp if shard_batch else None))
 
@@ -403,7 +411,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              moe_dispatch: str | None = None, remat: bool = True,
              microbatches: int = 1, capacity_factor: float | None = None,
              mla_cache: str = "latent", merge_every: int = 1,
-             delta_capacity: int = 64, ring_cache: bool = False) -> dict:
+             delta_capacity: int = 64, ring_cache: bool = False,
+             kv_layout: str = "dense", page_size: int = 64) -> dict:
     shape = SHAPES[shape_name]
     cfg = configs.get(arch)
     if ring_cache:
@@ -440,7 +449,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
                              microbatches=microbatches,
                              mla_cache=mla_cache,
                              merge_every=merge_every,
-                             delta_capacity=delta_capacity)
+                             delta_capacity=delta_capacity,
+                             kv_layout=kv_layout, page_size=page_size)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -452,7 +462,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             cfg, shape, mesh, merge_strategy=merge_strategy,
             fused_coord=fused_coord, remat=remat, microbatches=1,
             mla_cache=mla_cache,
-            merge_every=merge_every, delta_capacity=delta_capacity)
+            merge_every=merge_every, delta_capacity=delta_capacity,
+            kv_layout=kv_layout, page_size=page_size)
         record.update(
             status="ok", n_devices=int(n_dev),
             lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
@@ -523,6 +534,9 @@ def main() -> None:
     ap.add_argument("--merge-every", type=int, default=1)
     ap.add_argument("--delta-capacity", type=int, default=64)
     ap.add_argument("--ring-cache", action="store_true")
+    ap.add_argument("--kv", default="dense", choices=["dense", "paged"],
+                    help="KV cache layout for serving cells")
+    ap.add_argument("--page-size", type=int, default=64)
     args = ap.parse_args()
 
     archs = sorted(configs.ARCHS) if (args.all or not args.arch) else [args.arch]
@@ -547,7 +561,8 @@ def main() -> None:
                     mla_cache=args.mla_cache,
                     merge_every=args.merge_every,
                     delta_capacity=args.delta_capacity,
-                    ring_cache=args.ring_cache)
+                    ring_cache=args.ring_cache,
+                    kv_layout=args.kv, page_size=args.page_size)
                 status = rec.get("status")
                 extra = (rec.get("reason") or rec.get("error", "")
                          )[:80] if status != "ok" else (

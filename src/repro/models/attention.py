@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.models import cache as cache_mod
 from repro.models import common
 from repro.models.config import ModelConfig
 
@@ -177,17 +178,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     on admission — see serving/scheduler.py).  Default is the dense-equal
     worst case so Engine can run without an allocator via
     ``default_block_tables``.
+
+    Shapes are owned by the CacheSpec registry (models/cache.py); this is
+    the thin per-module entry the block wiring calls.
     """
-    if paged:
-        maxp = -(-max_len // page_size)
-        if num_pages is None:
-            num_pages = batch * maxp
-        shape = (num_pages, cfg.num_kv_heads, page_size, cfg.head_dim)
-        return {"k_pages": jnp.zeros(shape, dtype),
-                "v_pages": jnp.zeros(shape, dtype),
-                "block_tables": jnp.full((batch, maxp), -1, jnp.int32)}
-    shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return cache_mod.spec_for("attn", cfg, batch, max_len, dtype,
+                              paged=paged, page_size=page_size,
+                              num_pages=num_pages).init()
 
 
 def default_block_tables(batch: int, max_len: int, page_size: int
@@ -250,7 +247,7 @@ def prefill(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     out = _sdpa(q, k, v, mask, scale, impl, window=cfg.window,
                 chunked=chunked, prefix_len=prefix_len)
     proj = common.dense(p["wo"], _merge_heads(out))
-    if "k_pages" in cache:
+    if cache_mod.layout_of(cache) == "paged_mha":
         return proj, _paged_prefill_write(cache, k, v, lengths)
     t = x.shape[1]
     s = cache["k"].shape[2]
@@ -288,7 +285,7 @@ def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     """One-token step.  x: [B, 1, D]; pos: i32[B] tokens already cached."""
     b = x.shape[0]
     q, k, v = _qkv(p, cfg, x, pos[:, None])
-    if "k_pages" in cache:
+    if cache_mod.layout_of(cache) == "paged_mha":
         # Paged cache: O(page) write + block-table walk — no one-hot rewrite
         # of [B, Hkv, S, D].  The write is fused into the Pallas kernel; the
         # ref path is the gather oracle (kernels/ref.py).  pos is clamped to

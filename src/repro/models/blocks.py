@@ -80,34 +80,14 @@ def block_init(kind: str, key, cfg: ModelConfig) -> Params:
 def cache_init(kind: str, cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
                page_size: int = 64, num_pages: int | None = None) -> Params:
-    """``paged=True`` pools full-attention KV; sliding-window layers keep
-    their dense/ring cache (already bounded by the window) and stateful
-    kinds are untouched — a mixed-pattern model pages only what benefits."""
-    if kind == "local" and cfg.ring_local_cache and cfg.window:
-        return attention.init_cache(cfg, batch, min(max_len, cfg.window),
-                                    dtype)
-    if kind in ("attn", "moe") and paged:
-        return attention.init_cache(cfg, batch, max_len, dtype, paged=True,
-                                    page_size=page_size, num_pages=num_pages)
-    if kind in ("attn", "local", "moe"):
-        return attention.init_cache(cfg, batch, max_len, dtype)
-    if kind in ("mla", "mla_moe"):
-        return mla.init_cache(cfg, batch, max_len, dtype)
-    if kind == "rglru":
-        return rglru.init_cache(cfg, batch, dtype)
-    if kind == "slstm":
-        return xlstm.slstm_state(cfg, batch)
-    if kind == "mlstm":
-        return xlstm.mlstm_state(cfg, batch)
-    if kind == "xattn":
-        c = attention.init_cache(cfg, batch, max_len, dtype)
-        # Cross K/V filled once at prefill from encoder output.
-        enc_len = cfg.encoder.seq_len
-        c["xk"] = jnp.zeros((batch, cfg.num_kv_heads, enc_len, cfg.head_dim),
-                            dtype)
-        c["xv"] = jnp.zeros_like(c["xk"])
-        return c
-    raise ValueError(kind)
+    """``paged=True`` pools full-attention KV (MHA and MLA latent alike);
+    sliding-window layers keep their dense/ring cache (already bounded by
+    the window) and stateful kinds are untouched — a mixed-pattern model
+    pages only what benefits.  All layouts come from the CacheSpec registry
+    (models/cache.py), which is the single source of truth for shapes."""
+    from repro.models import cache as cache_mod
+    return cache_mod.spec_for(kind, cfg, batch, max_len, dtype, paged=paged,
+                              page_size=page_size, num_pages=num_pages).init()
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +156,8 @@ def block_apply(kind: str, p: Params, cfg: ModelConfig, x: jax.Array,
             a, cache = mla.prefill(p["attn"], cfg, h, cache, ctx.mask_full,
                                    ctx.positions, ctx.impl,
                                    chunked=ctx.chunked,
-                                   prefix_len=ctx.prefix_len)
+                                   prefix_len=ctx.prefix_len,
+                                   lengths=ctx.lengths)
         else:
             a = mla.forward(p["attn"], cfg, h, ctx.mask_full, ctx.positions,
                             ctx.impl, chunked=ctx.chunked,

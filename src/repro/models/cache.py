@@ -1,0 +1,377 @@
+"""CacheSpec: the typed registry of per-layer KV/state cache layouts.
+
+Every block kind's cache is described by a :class:`CacheSpec` — its layout
+name plus typed leaves (name, shape, dtype, role) — built by a registered
+layout builder.  The spec is host-side metadata derived from the config; the
+cache itself stays a plain pytree of arrays (jit/donation-friendly), but all
+structural decisions (init shapes, which layers are paged, where the block
+tables and pools live, how a pool leaf shards) are answered HERE instead of
+by duck-typing dict keys at trace time.
+
+Layouts:
+  dense       [B, Hkv, S, D] K/V (ring when S == window < max_len)
+  paged_mha   shared K/V pools [P, Hkv, ps, D] + block_tables [B, maxp]
+  dense_mla   compressed latent stream [B, S, r] + shared RoPE key [B, S, rd]
+  paged_mla   latent pool [P, ps, pad128(r + rd)] + block_tables [B, maxp]
+  state       recurrent carries (rglru/xLSTM) — opaque, never paged
+  xattn       dense self-KV + once-filled cross-KV
+
+Leaf roles drive the generic machinery:
+  kv      per-row cache body (dense layouts)
+  pool    shared page pool — resident memory unit, shards over heads or the
+          latent-feature axis, COW page copies operate on dim 0
+  table   per-row block table — replicated, host-managed, validated shape
+  state   recurrent carry
+
+The MLA latent pool feature dim is padded to a multiple of 128 (TPU lane
+width) at init so the fused kernel never pads per step; ``latent_width``
+records the live width (kv_lora_rank + rope_head_dim).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+ROLE_KV = "kv"
+ROLE_POOL = "pool"
+ROLE_TABLE = "table"
+ROLE_STATE = "state"
+
+
+def pad128(n: int) -> int:
+    return -(-n // 128) * 128
+
+
+@dataclass(frozen=True)
+class Leaf:
+    """One typed cache array: its name, full shape, dtype, and role."""
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any
+    role: str
+    fill: float = 0.0            # block tables init to -1, arrays to 0
+
+    def init(self) -> jax.Array:
+        if self.fill == 0.0:
+            return jnp.zeros(self.shape, self.dtype)
+        return jnp.full(self.shape, self.fill, self.dtype)
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """Layout descriptor for one layer's cache."""
+    kind: str                    # block kind ("attn", "mla", ...)
+    layout: str                  # dense | paged_mha | dense_mla | paged_mla
+    leaves: tuple[Leaf, ...]     #        | state | xattn
+    page_size: int = 0
+    num_pages: int = 0
+    latent_width: int = 0        # live features of a padded latent pool
+    # Recurrent carries keep their module-owned init (non-zero fills,
+    # nested trees); Leaf-driven init covers every attention layout.
+    init_fn: Callable[[], Params] | None = None
+
+    @property
+    def paged(self) -> bool:
+        return self.layout.startswith("paged")
+
+    def leaf(self, name: str) -> Leaf:
+        for l in self.leaves:
+            if l.name == name:
+                return l
+        raise KeyError(f"{self.layout} spec has no leaf {name!r}")
+
+    def init(self) -> Params:
+        if self.init_fn is not None:
+            return self.init_fn()
+        return {l.name: l.init() for l in self.leaves}
+
+    def abstract(self) -> Params:
+        if self.init_fn is not None:
+            return jax.eval_shape(self.init_fn)
+        return {l.name: jax.ShapeDtypeStruct(l.shape, l.dtype)
+                for l in self.leaves}
+
+
+# ---------------------------------------------------------------------------
+# Layout builders (the registry)
+# ---------------------------------------------------------------------------
+
+_LAYOUTS: dict[str, Callable[..., CacheSpec]] = {}
+
+
+def register_layout(name: str):
+    def deco(fn):
+        _LAYOUTS[name] = fn
+        return fn
+    return deco
+
+
+@register_layout("dense")
+def _dense(kind, cfg, batch, max_len, dtype, **_) -> CacheSpec:
+    shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return CacheSpec(kind, "dense", (
+        Leaf("k", shape, dtype, ROLE_KV),
+        Leaf("v", shape, dtype, ROLE_KV),
+    ))
+
+
+@register_layout("paged_mha")
+def _paged_mha(kind, cfg, batch, max_len, dtype, *, page_size=64,
+               num_pages=None, **_) -> CacheSpec:
+    maxp = -(-max_len // page_size)
+    if num_pages is None:
+        num_pages = batch * maxp
+    pool = (num_pages, cfg.num_kv_heads, page_size, cfg.head_dim)
+    return CacheSpec(kind, "paged_mha", (
+        Leaf("k_pages", pool, dtype, ROLE_POOL),
+        Leaf("v_pages", pool, dtype, ROLE_POOL),
+        Leaf("block_tables", (batch, maxp), jnp.int32, ROLE_TABLE, fill=-1),
+    ), page_size=page_size, num_pages=num_pages)
+
+
+@register_layout("dense_mla")
+def _dense_mla(kind, cfg, batch, max_len, dtype, **_) -> CacheSpec:
+    m = cfg.mla
+    return CacheSpec(kind, "dense_mla", (
+        Leaf("ckv", (batch, max_len, m.kv_lora_rank), dtype, ROLE_KV),
+        Leaf("krope", (batch, max_len, m.rope_head_dim), dtype, ROLE_KV),
+    ))
+
+
+@register_layout("paged_mla")
+def _paged_mla(kind, cfg, batch, max_len, dtype, *, page_size=64,
+               num_pages=None, **_) -> CacheSpec:
+    m = cfg.mla
+    width = m.kv_lora_rank + m.rope_head_dim
+    maxp = -(-max_len // page_size)
+    if num_pages is None:
+        num_pages = batch * maxp
+    return CacheSpec(kind, "paged_mla", (
+        Leaf("latent_pages", (num_pages, page_size, pad128(width)), dtype,
+             ROLE_POOL),
+        Leaf("block_tables", (batch, maxp), jnp.int32, ROLE_TABLE, fill=-1),
+    ), page_size=page_size, num_pages=num_pages, latent_width=width)
+
+
+@register_layout("xattn")
+def _xattn(kind, cfg, batch, max_len, dtype, **_) -> CacheSpec:
+    shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    xshape = (batch, cfg.num_kv_heads, cfg.encoder.seq_len, cfg.head_dim)
+    return CacheSpec(kind, "xattn", (
+        Leaf("k", shape, dtype, ROLE_KV),
+        Leaf("v", shape, dtype, ROLE_KV),
+        Leaf("xk", xshape, dtype, ROLE_KV),
+        Leaf("xv", xshape, dtype, ROLE_KV),
+    ))
+
+
+@register_layout("state")
+def _state(kind, cfg, batch, max_len, dtype, **_) -> CacheSpec:
+    # Recurrent carries keep their module-owned init (non-zero fills); the
+    # spec records abstract leaves so generic traversals stay total.
+    from repro.models import rglru, xlstm
+    init = {"rglru": lambda: rglru.init_cache(cfg, batch, dtype),
+            "slstm": lambda: xlstm.slstm_state(cfg, batch),
+            "mlstm": lambda: xlstm.mlstm_state(cfg, batch)}[kind]
+    tree = jax.eval_shape(init)
+    leaves = tuple(Leaf(str(_key_str(path[-1])), tuple(x.shape), x.dtype,
+                        ROLE_STATE)
+                   for path, x in jax.tree_util.tree_flatten_with_path(tree)[0])
+    return CacheSpec(kind, "state", leaves, init_fn=init)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    return str(getattr(k, "name", getattr(k, "idx", k)))
+
+
+# ---------------------------------------------------------------------------
+# Kind -> layout routing
+# ---------------------------------------------------------------------------
+
+def layout_for(kind: str, cfg, *, paged: bool) -> str:
+    """Which layout a block kind uses under the requested paging mode."""
+    if kind in ("attn", "moe"):
+        return "paged_mha" if paged else "dense"
+    if kind == "local":
+        # Ring/windowed layers stay dense: already bounded by the window.
+        return "dense"
+    if kind in ("mla", "mla_moe"):
+        return "paged_mla" if paged else "dense_mla"
+    if kind in ("rglru", "slstm", "mlstm"):
+        return "state"
+    if kind == "xattn":
+        return "xattn"
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def spec_for(kind: str, cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+             *, paged: bool = False, page_size: int = 64,
+             num_pages: int | None = None) -> CacheSpec:
+    layout = layout_for(kind, cfg, paged=paged)
+    if kind == "local" and cfg.ring_local_cache and cfg.window:
+        max_len = min(max_len, cfg.window)
+    return _LAYOUTS[layout](kind, cfg, batch, max_len, dtype,
+                            page_size=page_size, num_pages=num_pages)
+
+
+def model_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                      *, paged: bool = False, page_size: int = 64,
+                      num_pages: int | None = None) -> dict[str, Any]:
+    """The full registry for one model: {"groups": {i: spec}, "tail": ...}.
+
+    Group specs describe ONE group's leaves; the stacked cache carries a
+    leading [G] axis on every array (see lm.init_cache).
+    """
+    specs: dict[str, Any] = {"groups": {
+        str(i): spec_for(kind, cfg, batch, max_len, dtype, paged=paged,
+                         page_size=page_size, num_pages=num_pages)
+        for i, kind in enumerate(cfg.block_pattern)}}
+    tail = {str(i): spec_for(kind, cfg, batch, max_len, dtype, paged=paged,
+                             page_size=page_size, num_pages=num_pages)
+            for i, kind in enumerate(cfg.tail_blocks)}
+    if tail:
+        specs["tail"] = tail
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layout detection + typed traversal (replaces _map_paged_dicts duck-typing)
+# ---------------------------------------------------------------------------
+
+# A layer cache dict is identified by its leaf-name set: one entry per
+# registered layout.  Detection is structural (the cache is a plain pytree
+# under jit) but the *vocabulary* is owned by the registry — a new layout
+# registers its leaf set here or traversals refuse it.
+_LEAFSETS: dict[frozenset, str] = {
+    frozenset({"k", "v"}): "dense",
+    frozenset({"k_pages", "v_pages", "block_tables"}): "paged_mha",
+    frozenset({"ckv", "krope"}): "dense_mla",
+    frozenset({"latent_pages", "block_tables"}): "paged_mla",
+    frozenset({"k", "v", "xk", "xv"}): "xattn",
+}
+
+
+def layout_of(layer_cache: dict) -> str | None:
+    """Layout name of one layer's cache dict (None if not a layer dict)."""
+    if not isinstance(layer_cache, dict):
+        return None
+    return _LEAFSETS.get(frozenset(layer_cache.keys()))
+
+
+def iter_layers(cache: Params, path: tuple[str, ...] = ()
+                ) -> Iterator[tuple[tuple[str, ...], str, dict]]:
+    """Yield (path, layout, layer_dict) for every recognized layer cache."""
+    if not isinstance(cache, dict):
+        return
+    layout = layout_of(cache)
+    if layout is not None:
+        yield path, layout, cache
+        return
+    for k, v in cache.items():
+        yield from iter_layers(v, path + (str(k),))
+
+
+def map_layers(cache: Params, fn, *, layouts: tuple[str, ...] | None = None
+               ) -> Params:
+    """Rebuild the cache tree with ``fn(path, layout, layer)`` applied to
+    every layer dict (matching ``layouts`` when given, all otherwise)."""
+    def rec(tree, path):
+        if not isinstance(tree, dict):
+            return tree
+        layout = layout_of(tree)
+        if layout is not None:
+            if layouts is None or layout in layouts:
+                return fn(path, layout, tree)
+            return tree
+        return {k: rec(v, path + (str(k),)) for k, v in tree.items()}
+
+    return rec(cache, ())
+
+
+PAGED_LAYOUTS = ("paged_mha", "paged_mla")
+
+
+def pool_leaves(layer: dict, layout: str) -> list[str]:
+    return (["k_pages", "v_pages"] if layout == "paged_mha"
+            else ["latent_pages"] if layout == "paged_mla" else [])
+
+
+# ---------------------------------------------------------------------------
+# Block tables: install / read / validate
+# ---------------------------------------------------------------------------
+
+def set_block_tables(cache: Params, block_tables: jax.Array) -> Params:
+    """Install one [B, maxp] block table into every paged layer.
+
+    Layers share the mapping (same tokens, same pages-per-row); scanned
+    groups carry it stacked [G, B, maxp].  The table shape is validated
+    against every paged layer's own table — a mismatched table would
+    silently broadcast into the wrong pages otherwise.
+    """
+    bt = jnp.asarray(block_tables).astype(jnp.int32)
+    for path, layout, layer in iter_layers(cache):
+        if layout not in PAGED_LAYOUTS:
+            continue
+        want = layer["block_tables"].shape[-2:]
+        if bt.shape != want:
+            raise ValueError(
+                f"block table shape {tuple(bt.shape)} does not match layer "
+                f"{'/'.join(path)} ({layout}): expected [B, maxp] = "
+                f"{tuple(want)}")
+
+    def install(path, layout, layer):
+        return dict(layer, block_tables=jnp.broadcast_to(
+            bt, layer["block_tables"].shape))
+
+    return map_layers(cache, install, layouts=PAGED_LAYOUTS)
+
+
+def get_block_tables(cache: Params) -> jax.Array | None:
+    """The [B, maxp] block table shared by the paged layers (None if dense)."""
+    for _, layout, layer in iter_layers(cache):
+        if layout in PAGED_LAYOUTS:
+            bt = layer["block_tables"]
+            return bt[0] if bt.ndim == 3 else bt
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Page copy (COW) — device-side page duplication across every paged layer
+# ---------------------------------------------------------------------------
+
+def copy_pages(cache: Params, src: jax.Array, dst: jax.Array) -> Params:
+    """Copy pool pages ``src[i] -> dst[i]`` in every paged layer.
+
+    src/dst: i32[N] page ids (pad unused lanes with -1: those copies drop).
+    The copy-on-write path: a row about to write a shared page gets a
+    private duplicate, then its block table is remapped (host side).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    core_ndim = {"paged_mha": 4, "paged_mla": 3}
+
+    def cp(path, layout, layer):
+        out = dict(layer)
+        for name in pool_leaves(layer, layout):
+            pool = layer[name]
+            stacked = pool.ndim == core_ndim[layout] + 1
+            p = pool.shape[1] if stacked else pool.shape[0]
+            safe_src = jnp.clip(src, 0, p - 1)
+            tgt = jnp.where((src >= 0) & (dst >= 0), dst, p)
+            if stacked:                                   # leading [G]
+                rows = pool[:, safe_src]
+                out[name] = pool.at[:, tgt].set(rows, mode="drop")
+            else:
+                rows = pool[safe_src]
+                out[name] = pool.at[tgt].set(rows, mode="drop")
+        return out
+
+    return map_layers(cache, cp, layouts=PAGED_LAYOUTS)

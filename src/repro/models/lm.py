@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import blocks, common
+from repro.models import cache as cache_mod
 from repro.models.blocks import BlockCtx
 from repro.models.config import ModelConfig
 from repro.sharding import activation
@@ -267,64 +268,41 @@ def loss_fn(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
 # Serving: prefill + single-token decode
 # ---------------------------------------------------------------------------
 
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, *, paged: bool = False,
+                page_size: int = 64, num_pages: int | None = None):
+    """The CacheSpec registry for this model — one spec per layer slot."""
+    return cache_mod.model_cache_specs(cfg, batch, max_len, dtype,
+                                      paged=paged, page_size=page_size,
+                                      num_pages=num_pages)
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
                page_size: int = 64, num_pages: int | None = None) -> Params:
-    """``paged=True`` gives every full-attention layer its own page pool +
-    block tables (see attention.init_cache); ``num_pages`` is per layer."""
+    """``paged=True`` gives every full-attention layer (MHA pools, MLA
+    latent pools) its own page pool + block tables; ``num_pages`` is per
+    layer.  Layouts come from the CacheSpec registry (models/cache.py)."""
+    specs = cache_specs(cfg, batch, max_len, dtype, paged=paged,
+                        page_size=page_size, num_pages=num_pages)
     groups = {}
-    for i, kind in enumerate(cfg.block_pattern):
-        one = blocks.cache_init(kind, cfg, batch, max_len, dtype,
-                                paged=paged, page_size=page_size,
-                                num_pages=num_pages)
-        groups[str(i)] = jax.tree.map(
+    for i, spec in specs["groups"].items():
+        one = spec.init()
+        groups[i] = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.pattern_groups,) + x.shape)
             .copy() if hasattr(x, "shape") else x, one)
     cache: dict[str, Any] = {"groups": groups}
-    tail = {}
-    for i, kind in enumerate(cfg.tail_blocks):
-        tail[str(i)] = blocks.cache_init(kind, cfg, batch, max_len, dtype,
-                                         paged=paged, page_size=page_size,
-                                         num_pages=num_pages)
-    if tail:
-        cache["tail"] = tail
+    if "tail" in specs:
+        cache["tail"] = {i: spec.init()
+                         for i, spec in specs["tail"].items()}
     return cache
 
 
-def _map_paged_dicts(tree, fn):
-    """Apply ``fn(d)`` to every paged-attention cache dict in a cache tree."""
-    if isinstance(tree, dict):
-        if "block_tables" in tree:
-            return fn(tree)
-        return {k: _map_paged_dicts(v, fn) for k, v in tree.items()}
-    return tree
-
-
-def set_block_tables(cache: Params, block_tables: jax.Array) -> Params:
-    """Install one [B, maxp] block table into every paged layer.
-
-    Layers share the mapping (same tokens, same pages-per-row); scanned
-    groups carry it stacked [G, B, maxp], so broadcast to each leaf's shape.
-    """
-    bt = block_tables.astype(jnp.int32)
-    return _map_paged_dicts(
-        cache, lambda d: dict(d, block_tables=jnp.broadcast_to(
-            bt, d["block_tables"].shape)))
-
-
-def get_block_tables(cache: Params) -> jax.Array | None:
-    """The [B, maxp] block table shared by the paged layers (None if dense)."""
-    found: list[jax.Array] = []
-
-    def grab(d):
-        found.append(d["block_tables"])
-        return d
-
-    _map_paged_dicts(cache, grab)
-    if not found:
-        return None
-    bt = found[0]
-    return bt[0] if bt.ndim == 3 else bt
+# Typed traversal / block-table plumbing live in models/cache.py; these
+# re-exports keep the historical lm.* entry points working.
+set_block_tables = cache_mod.set_block_tables
+get_block_tables = cache_mod.get_block_tables
+copy_pages = cache_mod.copy_pages
 
 
 def prefill(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
@@ -341,7 +319,7 @@ def prefill(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
     admit new requests into freed rows while the others keep decoding.
     """
     if lengths is not None:
-        ragged_ok = {"attn", "local", "moe"}
+        ragged_ok = {"attn", "local", "moe", "mla", "mla_moe"}
         kinds = set(cfg.block_pattern) | set(cfg.tail_blocks)
         if (kinds - ragged_ok or cfg.num_prefix_tokens or cfg.is_encdec):
             raise NotImplementedError(

@@ -11,11 +11,13 @@ reason MLA decode is memory-roofline-friendly.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+from repro.models import cache as cache_mod
 from repro.models import common
 from repro.models.config import ModelConfig
 
@@ -87,26 +89,66 @@ def forward(p: Params, cfg: ModelConfig, x: jax.Array,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> Params:
-    m = cfg.mla
-    return {
-        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
-        "krope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
-    }
+               dtype=jnp.bfloat16, *, paged: bool = False,
+               page_size: int = 64, num_pages: int | None = None) -> Params:
+    """Dense latent cache [B, S, r] + [B, S, rd], or a paged latent pool.
+
+    Paged mode stores concat([ckv; krope]) rows in a shared pool
+    ``[P, page_size, pad128(r + rd)]`` mapped by per-row block tables —
+    resident memory scales with allocated pages, and the fused decode kernel
+    walks only live pages (see kernels/paged_mla_decode.py).
+    """
+    kind = "mla"
+    return cache_mod.spec_for(kind, cfg, batch, max_len, dtype, paged=paged,
+                              page_size=page_size, num_pages=num_pages).init()
+
+
+def _paged_latent_write(cache: Params, ckv: jax.Array, krope: jax.Array,
+                        lengths: Optional[jax.Array]) -> Params:
+    """Scatter a prompt's latent rows ([B, T, r]/[B, T, rd]) into pages.
+
+    Same drop semantics as the MHA paged prefill: unallocated (-1) table
+    entries, bucket padding past the table, and positions beyond a ragged
+    row's length are all routed out of bounds and dropped.
+    """
+    bt = cache["block_tables"]
+    pool = cache["latent_pages"]
+    num_pages, ps, dp = pool.shape
+    b, t, _ = ckv.shape
+    tpos = jnp.arange(t, dtype=jnp.int32)
+    pg = bt[:, tpos // ps]                              # [B, T]
+    pg = jnp.where(pg < 0, num_pages, pg)
+    pg = jnp.where(tpos[None, :] < bt.shape[1] * ps, pg, num_pages)
+    if lengths is not None:
+        pg = jnp.where(tpos[None, :] < lengths[:, None], pg, num_pages)
+    slot = jnp.broadcast_to(tpos % ps, (b, t))
+    lat = jnp.concatenate([ckv, krope], axis=-1)
+    lat = jnp.pad(lat, ((0, 0), (0, 0), (0, dp - lat.shape[-1])))
+    return dict(cache, latent_pages=pool.at[pg, slot, :].set(
+        lat.astype(pool.dtype), mode="drop"))
 
 
 def prefill(p, cfg, x, cache, mask, positions, impl="ref", chunked=False,
-            prefix_len=0):
+            prefix_len=0, lengths: Optional[jax.Array] = None):
+    """``lengths`` (i32[B]) admits a ragged right-padded batch — attention
+    over padding is masked by the caller's 3-D mask, cache writes beyond
+    each row's length are dropped, and rows with ``lengths[b] == 0`` keep
+    their cache bit-for-bit (the admission path relies on this)."""
     y = forward(p, cfg, x, mask, positions, impl, chunked=chunked,
                 prefix_len=prefix_len)
     ckv, krope = _latents(p, cfg, x, positions)
-    cache = {
-        "ckv": jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
-        "krope": jax.lax.dynamic_update_slice(
-            cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0)),
-    }
-    return y, cache
+    if cache_mod.layout_of(cache) == "paged_mla":
+        return y, _paged_latent_write(cache, ckv, krope, lengths)
+    new_ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+    new_krope = jax.lax.dynamic_update_slice(
+        cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0))
+    if lengths is not None:
+        s = cache["ckv"].shape[1]
+        keep = (jnp.arange(s)[None, :] < lengths[:, None])[..., None]
+        new_ckv = jnp.where(keep, new_ckv, cache["ckv"])
+        new_krope = jnp.where(keep, new_krope, cache["krope"])
+    return y, {"ckv": new_ckv, "krope": new_krope}
 
 
 def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
@@ -117,6 +159,30 @@ def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     h = cfg.num_heads
     q_nope, q_rope = _queries(p, cfg, x, pos[:, None])            # [B,H,1,*]
     ckv_t, krope_t = _latents(p, cfg, x, pos[:, None])            # [B,1,*]
+    if cache_mod.layout_of(cache) == "paged_mla":
+        # Paged latent cache: O(page) fused write + block-table walk — the
+        # one-hot rewrite of the full [B, S, r] latent stream disappears.
+        # Absorbed q_abs/scale/contractions are IDENTICAL to the dense path
+        # below, so the ref oracle is bit-compatible with dense decode.
+        w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+        q_abs = jnp.einsum("bhn,rhn->bhr",
+                           q_nope[:, :, 0].astype(jnp.float32),
+                           w_uk.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+        scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+        pool = cache["latent_pages"]
+        dp = pool.shape[-1]
+        lat_new = jnp.concatenate([ckv_t[:, 0], krope_t[:, 0]], axis=-1)
+        lat_new = jnp.pad(lat_new, ((0, 0), (0, dp - lat_new.shape[-1])))
+        ctx, pool = kops.paged_mla_decode(
+            q_abs, q_rope[:, :, 0], pool, cache["block_tables"], pos,
+            lat_new, scale=scale, use_pallas=(impl == "pallas"))
+        w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+        return (common.dense(p["w_o"], out),
+                dict(cache, latent_pages=pool))
     # One-hot masked write (not a scatter): partitions cleanly when the
     # cache is sequence-sharded (see sharding/partition.py mla_cache="seq").
     s_len = cache["ckv"].shape[1]

@@ -1,14 +1,28 @@
 """Continuous batching over the paged KV cache: admission, page accounting,
-and completion at token granularity.
+copy-on-write prefix sharing, and completion at token granularity.
 
 The scheduler owns a fixed decode batch of B rows backed by a shared page
-pool.  Requests queue up; whenever a row is free and the allocator can cover
-``ceil((prompt + max_new) / page_size)`` pages, the request is admitted by a
-*ragged prefill* — one jitted call whose ``lengths`` vector is zero for every
-other row, so in-flight rows keep decoding from bit-identical cache while the
-new row's prompt lands in its freshly allocated pages.  On completion the
-row's pages return to the free list immediately (memory scales with live
+pool.  Requests queue up; whenever a row is free and the allocator can
+reserve the pages the *prompt* needs (generation pages are allocated
+incrementally as decode crosses page boundaries — not up front), the request
+is admitted by a *ragged prefill* — one jitted call whose ``lengths`` vector
+is zero for every other row, so in-flight rows keep decoding from
+bit-identical cache while the new row's prompt lands in its pages.  On
+completion the row's pages are released immediately (memory scales with live
 tokens, not B × max_len).
+
+Prefix sharing (``prefix_sharing=True``): rows admitted with an identical
+prompt share the prompt's pages (refcounted, copy-on-write).  Full prefix
+pages are shared through a longest-prefix chain; the partial boundary page
+is shared on an exact-prompt match and duplicated (copy-then-remap) the
+moment a sharer is about to write into it — agents forked from the same
+CodeCRDT prompt pay for one copy of the prompt KV, not fan-out copies.
+
+When incremental growth finds the pool empty, the least-recently-allocating
+row is preempted: its pages are released and the request re-queued at the
+front with its generated tokens folded into the prompt (preemption by
+recomputation — the re-admission prefill replays prompt + generated and
+decoding continues where it stopped).
 
 Freed rows still ride the batched decode step (there is no dynamic batch
 shape under jit).  Their writes are steered to a dedicated trash page —
@@ -21,7 +35,8 @@ classic [B, Hkv, S, D] cache — the benchmark's apples-to-apples baseline.
 """
 from __future__ import annotations
 
-from collections import deque
+import time
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -29,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import cache as cache_mod
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.serving import engine as engine_mod
@@ -37,12 +53,47 @@ from repro.serving.engine import PROMPT_BUCKETS, bucket_len  # noqa: F401
 Params = Any
 
 
+class Reservation:
+    """Pages earmarked for one admission candidate (already out of the free
+    list, so a later candidate's ``available`` check cannot double-count
+    them).  ``take`` hands them out; ``release`` returns the rest."""
+
+    def __init__(self, allocator: "PageAllocator", pages: list[int]):
+        self._allocator = allocator
+        self._pages = pages
+
+    @property
+    def count(self) -> int:
+        return len(self._pages)
+
+    def take(self, n: int | None = None) -> list[int]:
+        n = len(self._pages) if n is None else n
+        out, self._pages = self._pages[:n], self._pages[n:]
+        return out
+
+    def release(self) -> None:
+        if self._pages:
+            self._allocator.free(self._pages)
+            self._pages = []
+
+
 class PageAllocator:
-    """Host-side free list of pool page ids (unit = one page)."""
+    """Host-side refcounted page pool (unit = one page).
+
+    Pages are handed out at refcount 1; ``share`` adds a reference (prefix
+    sharing), ``free`` drops one and returns the page to the free list at
+    zero.  ``generation`` bumps on every fresh hand-out so stale prefix
+    entries can detect reuse.  ``reserve`` is the admission-safe path: it
+    removes pages from the free list immediately, so a two-phase admit
+    cannot admit two requests against the same availability snapshot (the
+    double-admission race).
+    """
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, -1, -1))
+        self._ref = np.zeros(num_pages, np.int32)
+        self._gen = np.zeros(num_pages, np.int64)
 
     @property
     def available(self) -> int:
@@ -54,10 +105,119 @@ class PageAllocator:
         if n > len(self._free):
             return None
         pages, self._free = self._free[-n:][::-1], self._free[:-n]
+        for p in pages:
+            self._ref[p] = 1
+            self._gen[p] += 1
         return pages
 
+    def reserve(self, n: int) -> Optional[Reservation]:
+        pages = self.alloc(n)
+        if pages is None:
+            return None
+        return Reservation(self, pages)
+
+    def share(self, pages: list[int]) -> None:
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise ValueError(f"cannot share unallocated page {p}")
+            self._ref[p] += 1
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def generation(self, page: int) -> int:
+        return int(self._gen[page])
+
     def free(self, pages: list[int]) -> None:
-        self._free.extend(reversed(pages))
+        for p in reversed(pages):
+            if self._ref[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+
+
+class PrefixCache:
+    """Longest-prefix index from prompt tokens to resident pages.
+
+    Full pages chain through keys ``tuple(tokens[:k*ps])`` (page k-1 holds
+    positions [(k-1)·ps, k·ps) and its KV depends on the whole prefix, so
+    the key must be the whole prefix); the partial boundary page is indexed
+    by the exact full prompt.  Entries carry (page, generation) and are
+    pruned lazily when the page was freed or re-allocated.
+
+    Stale entries for *distinct* prompts never collide with a later key, so
+    lazy pruning alone would grow the index without bound (each registered
+    prompt holds O(len²) ints of key material).  Both maps are therefore
+    LRU-bounded at ``max_entries``: hits refresh recency, inserts past the
+    cap evict the coldest key.  Eviction only forgets a sharing opportunity
+    — resident pages stay owned by their rows/refcounts.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 max_entries: int = 4096):
+        self._allocator = allocator
+        self.page_size = page_size
+        self.max_entries = max_entries
+        self._chain: OrderedDict[tuple, tuple[int, int]] = OrderedDict()
+        self._boundary: OrderedDict[tuple, tuple[int, int]] = OrderedDict()
+
+    def _valid(self, entry: tuple[int, int] | None) -> Optional[int]:
+        if entry is None:
+            return None
+        page, gen = entry
+        if (self._allocator.refcount(page) > 0
+                and self._allocator.generation(page) == gen):
+            return page
+        return None
+
+    def _get(self, table: "OrderedDict[tuple, tuple[int, int]]", key: tuple
+             ) -> Optional[int]:
+        """Validated lookup: refreshes recency on hit, prunes on miss."""
+        page = self._valid(table.get(key))
+        if page is None:
+            table.pop(key, None)
+            return None
+        table.move_to_end(key)
+        return page
+
+    def _put(self, table: "OrderedDict[tuple, tuple[int, int]]", key: tuple,
+             page: int) -> None:
+        table[key] = (page, self._allocator.generation(page))
+        table.move_to_end(key)
+        while len(table) > self.max_entries:
+            table.popitem(last=False)
+
+    def lookup(self, tokens: list[int], *, boundary: bool = True
+               ) -> list[int]:
+        """Longest shareable run of pages for ``tokens`` (prefix order)."""
+        ps = self.page_size
+        n_full = len(tokens) // ps
+        pages: list[int] = []
+        for k in range(1, n_full + 1):
+            page = self._get(self._chain, tuple(tokens[:k * ps]))
+            if page is None:
+                break
+            pages.append(page)
+        if (boundary and len(pages) == n_full and len(tokens) % ps):
+            page = self._get(self._boundary, tuple(tokens))
+            if page is not None:
+                pages.append(page)
+        return pages
+
+    def register(self, tokens: list[int], pages: list[int]) -> None:
+        """Index a row's freshly prefilled prompt pages."""
+        ps = self.page_size
+        n_full = len(tokens) // ps
+        for k in range(1, min(n_full, len(pages)) + 1):
+            key = tuple(tokens[:k * ps])
+            if self._get(self._chain, key) is None:
+                self._put(self._chain, key, pages[k - 1])
+        npages = -(-len(tokens) // ps)
+        if len(tokens) % ps and len(pages) >= npages:
+            key = tuple(tokens)
+            if self._get(self._boundary, key) is None:
+                self._put(self._boundary, key, pages[npages - 1])
 
 
 @dataclass
@@ -71,6 +231,12 @@ class Request:
     finished_step: int = -1
     pages: list[int] = field(default_factory=list)
 
+    @property
+    def context(self) -> list[int]:
+        """Tokens the next prefill must cover (prompt + generated so far —
+        nonempty generated means the request was preempted and resumed)."""
+        return self.prompt + self.tokens
+
 
 class ContinuousBatchingEngine:
     """Token-granularity continuous batching over a (paged) decode engine."""
@@ -78,7 +244,8 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params: Params, *, batch: int,
                  max_len: int, paged: bool = True, page_size: int = 64,
                  num_pages: Optional[int] = None, impl: str = "ref",
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 prefix_sharing: bool = False):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -86,11 +253,13 @@ class ContinuousBatchingEngine:
         self.paged = paged
         self.page_size = page_size
         self.temperature = temperature
+        self.prefix_sharing = prefix_sharing and paged
         self.maxp = -(-max_len // page_size)
         if paged:
             if num_pages is None:
                 num_pages = batch * self.maxp
             self.allocator = PageAllocator(num_pages)
+            self.prefix_cache = PrefixCache(self.allocator, page_size)
             self.trash_page = num_pages          # extra physical page
             self.cache = lm.init_cache(cfg, batch, max_len, paged=True,
                                        page_size=page_size,
@@ -99,8 +268,10 @@ class ContinuousBatchingEngine:
                                    np.int32)
             self.cache = lm.set_block_tables(self.cache,
                                              jnp.asarray(self.host_bt))
+            self._copy_pages = jax.jit(lm.copy_pages, donate_argnums=(0,))
         else:
             self.allocator = None
+            self.prefix_cache = None
             self.cache = lm.init_cache(cfg, batch, max_len)
         self._prefill = jax.jit(
             engine_mod.make_ragged_prefill_fn(cfg, impl=impl),
@@ -111,11 +282,20 @@ class ContinuousBatchingEngine:
             donate_argnums=(1,))
         self.rng = jax.random.PRNGKey(seed)
         self.pos = jnp.zeros((batch,), jnp.int32)
+        # Host mirror of pos, refreshed at the one mandatory post-step sync;
+        # the pre-step growth/COW walk must not force its own device sync.
+        self._host_pos = np.zeros((batch,), np.int32)
         self.token = jnp.zeros((batch,), jnp.int32)
         self.rows: list[Optional[Request]] = [None] * batch
         self.queue: deque[Request] = deque()
+        self._bt_dirty = False
+        self._last_alloc = [0] * batch        # LRU clock for preemption
+        self._cow_src: list[int] = []         # COW pairs pending this step
+        self._cow_dst: list[int] = []
         self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
-                      "completed": 0, "peak_pages": 0, "gen_tokens": 0}
+                      "completed": 0, "peak_pages": 0, "gen_tokens": 0,
+                      "shared_pages": 0, "cow_copies": 0, "preemptions": 0,
+                      "grown_pages": 0, "admit_s": 0.0}
 
     # -- request lifecycle --------------------------------------------------
 
@@ -133,68 +313,106 @@ class ContinuousBatchingEngine:
         # prefill bucket (buckets are clamped to max_len at admission).
         bucket_len(len(req.prompt))
         if self.paged:
-            need = self._pages_needed(req)
-            if need > self.allocator.num_pages:
-                raise ValueError(f"request {req.rid} needs {need} pages "
+            worst = -(-(len(req.prompt) + req.max_new_tokens)
+                      // self.page_size)
+            if worst > self.allocator.num_pages:
+                raise ValueError(f"request {req.rid} needs {worst} pages "
                                  f"> pool {self.allocator.num_pages}")
         self.queue.append(req)
 
-    def _pages_needed(self, req: Request) -> int:
-        return -(-(len(req.prompt) + req.max_new_tokens) // self.page_size)
+    def _note_peak(self) -> None:
+        used = self.allocator.num_pages - self.allocator.available
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], used)
 
     def _free_row(self, row: int) -> None:
         req = self.rows[row]
         req.finished_step = self.stats["steps"]
         self.stats["completed"] += 1
+        self._release_row(row)
+        self.rows[row] = None
+
+    def _release_row(self, row: int) -> None:
+        req = self.rows[row]
         if self.paged:
-            # req.pages is kept (now historical) — the allocator owns reuse.
+            # req.pages is kept (now historical) — the allocator owns reuse,
+            # and a preempted request's re-admission overwrites the list.
             self.allocator.free(req.pages)
             self.host_bt[row, :] = self.trash_page
-        self.rows[row] = None
+            self._bt_dirty = True
+
+    def _push_tables(self) -> None:
+        if self._bt_dirty:
+            self.cache = lm.set_block_tables(self.cache,
+                                             jnp.asarray(self.host_bt))
+            self._bt_dirty = False
 
     def admit(self) -> int:
         """Admit queued requests into free rows (one ragged prefill call).
 
-        Returns the number admitted.  Head-of-line blocking on page budget
-        is deliberate: FIFO completion-time fairness.
+        Two-phase: pages are *reserved* per candidate first (reservation
+        removes them from the free list, so candidates later in the loop
+        see the true availability — no double admission), then the batch
+        prefill lands every accepted prompt at once.  Head-of-line blocking
+        on page budget is deliberate: FIFO completion-time fairness.
         """
+        t0 = time.perf_counter()
         pending: list[tuple[int, Request]] = []
         for row in range(self.batch):
             if self.rows[row] is not None or not self.queue:
                 continue
             req = self.queue[0]
             if self.paged:
-                pages = self.allocator.alloc(self._pages_needed(req))
-                if pages is None:
+                ctx = req.context
+                npages = -(-len(ctx) // self.page_size)
+                shared: list[int] = []
+                if self.prefix_sharing:
+                    shared = self.prefix_cache.lookup(ctx)[:npages]
+                res = self.allocator.reserve(npages - len(shared))
+                if res is None:
                     break                      # wait for completions
-                req.pages = pages
+                if shared:
+                    self.allocator.share(shared)
+                    self.stats["shared_pages"] += len(shared)
+                req.pages = shared + res.take()
                 self.host_bt[row, :] = self.trash_page
-                self.host_bt[row, :len(pages)] = pages
+                self.host_bt[row, :len(req.pages)] = req.pages
+                self._bt_dirty = True
+                self._last_alloc[row] = self.stats["steps"]
+                if self.prefix_sharing and not req.tokens:
+                    # Register at reservation time, not after the prefill:
+                    # fan-out clones admitted in the SAME batch then share
+                    # these pages, and the one ragged prefill writes the
+                    # identical prompt KV into them once per slot.
+                    self.prefix_cache.register(req.prompt, req.pages)
             self.queue.popleft()
             self.rows[row] = req
             req.admitted_step = self.stats["steps"]
             pending.append((row, req))
         if not pending:
+            self.stats["admit_s"] += time.perf_counter() - t0
             return 0
 
         if self.paged:
-            self.cache = lm.set_block_tables(self.cache,
-                                             jnp.asarray(self.host_bt))
-            used = self.allocator.num_pages - self.allocator.available
-            self.stats["peak_pages"] = max(self.stats["peak_pages"], used)
+            self._push_tables()
+            self._note_peak()
+        # Context lengths BEFORE the first sampled token is appended: pos is
+        # the number of tokens already cached, and the sampled token is only
+        # written by the next decode step.
+        ctx_len = {row: len(req.context) for row, req in pending}
         logits, _, self.cache = engine_mod.ragged_prefill_batch(
             self._prefill, self.params, self.cache, self.batch,
-            {row: req.prompt for row, req in pending}, max_len=self.max_len)
+            {row: req.context for row, req in pending},
+            max_len=self.max_len)
         self.rng, sub = jax.random.split(self.rng)
         first = np.asarray(engine_mod.sample_token(logits, sub,
                                                    self.temperature))
         token = np.array(self.token)           # writable host copies
-        pos = np.array(self.pos)
+        pos = self._host_pos
         for row, req in pending:
             req.tokens.append(int(first[row]))
             self.stats["gen_tokens"] += 1
             token[row] = int(first[row])
-            pos[row] = len(req.prompt)
+            pos[row] = ctx_len[row]
         self.token = jnp.asarray(token)
         self.pos = jnp.asarray(pos)
         self.stats["prefills"] += 1
@@ -203,6 +421,7 @@ class ContinuousBatchingEngine:
         for row, req in pending:
             if self._done(req):
                 self._free_row(row)
+        self.stats["admit_s"] += time.perf_counter() - t0
         return len(pending)
 
     def _done(self, req: Request) -> bool:
@@ -211,6 +430,91 @@ class ContinuousBatchingEngine:
                     and req.tokens
                     and req.tokens[-1] == req.eos_id))
 
+    # -- incremental growth / COW / preemption ------------------------------
+
+    def _preempt_for_pages(self, needy_row: int) -> bool:
+        """Evict the least-recently-allocating other row (recomputation)."""
+        victims = [r for r in range(self.batch)
+                   if r != needy_row and self.rows[r] is not None]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda r: (self._last_alloc[r], r))
+        req = self.rows[victim]
+        # A COW copy queued this step whose destination dies with the victim
+        # must be dropped: the freed page can be re-handed out in this same
+        # pass, and a duplicate destination in one batched scatter would
+        # write undefined contents into a live row's page.
+        dead = set(req.pages)
+        keep = [(s, d) for s, d in zip(self._cow_src, self._cow_dst)
+                if d not in dead]
+        self._cow_src = [s for s, _ in keep]
+        self._cow_dst = [d for _, d in keep]
+        self._release_row(victim)
+        self.rows[victim] = None
+        self.queue.appendleft(req)             # resumes with context intact
+        self._host_pos[victim] = 0
+        self.pos = jnp.asarray(self._host_pos)
+        self.stats["preemptions"] += 1
+        return True
+
+    def _alloc_one(self, row: int) -> int:
+        while True:
+            pages = self.allocator.alloc(1)
+            if pages is not None:
+                self._last_alloc[row] = self.stats["steps"]
+                return pages[0]
+            if not self._preempt_for_pages(row):
+                raise RuntimeError(
+                    f"page pool exhausted ({self.allocator.num_pages} pages)"
+                    " with no preemptable row — pool too small for one "
+                    "request")
+
+    def _grow_and_cow(self) -> None:
+        """Before a decode step: every active row must own, privately, the
+        page its next token lands in.  Crossing into an unallocated page
+        allocates one (incremental growth); a page shared with other rows
+        or the prefix cache is duplicated and remapped (copy-on-write)."""
+        pos = self._host_pos
+        self._cow_src = []
+        self._cow_dst = []
+        for row in range(self.batch):
+            req = self.rows[row]
+            if req is None:
+                continue
+            widx = int(pos[row]) // self.page_size
+            if widx >= self.maxp:
+                continue                       # clamped write; cannot grow
+            page = int(self.host_bt[row, widx])
+            if page == self.trash_page:
+                new = self._alloc_one(row)
+                self.host_bt[row, widx] = new
+                req.pages.append(new)
+                self._bt_dirty = True
+                self.stats["grown_pages"] += 1
+            elif self.allocator.refcount(page) > 1:
+                new = self._alloc_one(row)
+                self._cow_src.append(page)
+                self._cow_dst.append(new)
+                self.host_bt[row, widx] = new
+                req.pages[req.pages.index(page)] = new
+                self.allocator.free([page])    # drop our shared reference
+                self._bt_dirty = True
+                self.stats["cow_copies"] += 1
+        if self._cow_src:
+            # Pad to the fixed batch width (-1 lanes drop in copy_pages):
+            # at most one COW per row per step, and a constant shape keeps
+            # the whole-cache scatter compiled once instead of per count.
+            pad = self.batch - len(self._cow_src)
+            src = np.asarray(self._cow_src + [-1] * pad, np.int32)
+            dst = np.asarray(self._cow_dst + [-1] * pad, np.int32)
+            self.cache = self._copy_pages(self.cache, jnp.asarray(src),
+                                          jnp.asarray(dst))
+        self._cow_src = []
+        self._cow_dst = []
+        if self.paged:
+            self._note_peak()
+            self._push_tables()
+
     # -- decode loop --------------------------------------------------------
 
     def step(self) -> bool:
@@ -218,12 +522,15 @@ class ContinuousBatchingEngine:
         self.admit()
         if all(r is None for r in self.rows):
             return bool(self.queue)
+        if self.paged:
+            self._grow_and_cow()
         self.rng, sub = jax.random.split(self.rng)
         self.token, self.cache, self.pos = self._step(
             self.params, self.cache, self.token, self.pos, sub)
         self.stats["steps"] += 1
         sampled = np.asarray(self.token)
-        pos = np.array(self.pos)
+        pos = np.array(self.pos)               # the one post-step sync
+        self._host_pos = pos
         freed = False
         for row, req in enumerate(self.rows):
             if req is None:
@@ -262,17 +569,86 @@ class ContinuousBatchingEngine:
 
         Dense: the whole [B, Hkv, S, D] allocation, always.  Paged: pages in
         use × per-page bytes — what a pool sized to the live-token watermark
-        would hold (the preallocated pool is the *capacity*, this is the
-        footprint the allocator actually needs).
+        would hold.  Shared (prefix) pages count once: that is the point.
         """
         if not self.paged:
             return sum(int(x.nbytes) for x in jax.tree.leaves(self.cache))
         used = self.allocator.num_pages - self.allocator.available
-        pools: list = []
+        total = 0
+        for _, layout, layer in cache_mod.iter_layers(self.cache):
+            for name in cache_mod.pool_leaves(layer, layout):
+                pool = layer[name]
+                core = 4 if layout == "paged_mha" else 3
+                p = pool.shape[1] if pool.ndim == core + 1 else pool.shape[0]
+                total += int(pool.nbytes) * used // p
+        return total
 
-        def grab(d):
-            pools.extend((d["k_pages"], d["v_pages"]))
-            return d
 
-        lm._map_paged_dicts(self.cache, grab)
-        return sum(int(p.nbytes) * used // p.shape[-4] for p in pools)
+class PrefixPageMapper:
+    """Shared-prefix page mapping for a fixed-row agent engine (no COW).
+
+    The orchestrator's agents re-contextualize in place: each (re-)prefill
+    remaps the row's pages, sharing the full pages of any previously
+    registered identical prefix — the CodeCRDT task/TODO prompt header —
+    and allocating private pages for the rest of the row's horizon.  Only
+    pages strictly below the row's first decode write are shared, so no
+    copy-on-write machinery is needed here.
+    """
+
+    def __init__(self, num_rows: int, maxp: int, page_size: int,
+                 trash_page: int, num_pages: Optional[int] = None):
+        # A row transiently holds old + new mappings during remap.
+        self.allocator = PageAllocator(num_pages if num_pages is not None
+                                       else (num_rows + 1) * maxp)
+        if trash_page < self.allocator.num_pages:
+            raise ValueError(
+                f"trash_page {trash_page} lies inside the allocatable pool "
+                f"[0, {self.allocator.num_pages}): decode writes of unmapped "
+                "rows would corrupt live pages")
+        self.prefix_cache = PrefixCache(self.allocator, page_size)
+        self.page_size = page_size
+        self.maxp = maxp
+        self.trash_page = trash_page
+        self.host_bt = np.full((num_rows, maxp), trash_page, np.int32)
+        self._row_pages: list[list[int]] = [[] for _ in range(num_rows)]
+        self.shared_pages = 0
+        self._dirty = True                # initial table needs installing
+
+    def map_row(self, row: int, tokens: list[int], horizon: int) -> int:
+        """Remap ``row`` for a prompt of ``tokens`` and a total horizon of
+        ``horizon`` positions (prompt + generation budget).  Returns the
+        number of pages shared with previously mapped prompts."""
+        ps = self.page_size
+        npages = min(-(-horizon // ps), self.maxp)
+        n_write = len(tokens) // ps       # decode writes from page n_write
+        shared = self.prefix_cache.lookup(tokens, boundary=False)[:n_write]
+        fresh = self.allocator.alloc(npages - len(shared))
+        if fresh is None:
+            raise RuntimeError("agent page pool exhausted")
+        self.allocator.share(shared)
+        pages = shared + fresh
+        old = self._row_pages[row]
+        self._row_pages[row] = pages
+        self.host_bt[row, :] = self.trash_page
+        self.host_bt[row, :len(pages)] = pages
+        if old:
+            self.allocator.free(old)      # after remap: self-prefix shares
+        self.prefix_cache.register(tokens[:n_write * ps], pages[:n_write])
+        self.shared_pages += len(shared)
+        self._dirty = True
+        return len(shared)
+
+    def free_row(self, row: int) -> None:
+        if self._row_pages[row]:
+            self.allocator.free(self._row_pages[row])
+            self._row_pages[row] = []
+        self.host_bt[row, :] = self.trash_page
+        self._dirty = True
+
+    def install(self, cache: Params) -> Params:
+        """Install the host block table into ``cache`` iff it changed since
+        the last install (one jnp transfer per batch of remaps)."""
+        if self._dirty:
+            cache = lm.set_block_tables(cache, jnp.asarray(self.host_bt))
+            self._dirty = False
+        return cache

@@ -140,6 +140,20 @@ class Partitioner:
         name = path[-1]
         core = shape[1:] if stacked else shape
         b_ax = self.batch_axes if shard_batch else None
+        # Paged pools are shared across rows: dim 0 is pages, NOT batch —
+        # never sharded over the data axes.  MHA pools shard over heads,
+        # MLA latent pools over the latent-feature axis; block tables (and
+        # the tiny coordination frontiers they travel with) replicate so
+        # every device can walk any row's pages.
+        if name in ("k_pages", "v_pages"):                # [P, Hkv, ps, D]
+            spec = P(None, self._m(core[1]), None, None)
+            return P(None, *spec) if stacked else spec
+        if name == "latent_pages":                        # [P, ps, Dp]
+            spec = P(None, None, self._m(core[2]))
+            return P(None, *spec) if stacked else spec
+        if name == "block_tables":                        # [B, maxp]
+            spec = P(None, None)
+            return P(None, *spec) if stacked else spec
         if name in ("k", "v", "xk", "xv"):                # [B, Hkv, S, D]
             h_ax = self._m(core[1])
             s_ax = self._m(core[2]) if h_ax is None else None

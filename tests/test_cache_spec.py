@@ -1,0 +1,124 @@
+"""CacheSpec registry: layout routing, typed traversal, block-table
+validation (the offending layer must be NAMED), and COW page copies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import attention, lm
+from repro.models import cache as cache_mod
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    return configs.reduced(configs.get("olmo-1b"), d_model=32, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def dsv2():
+    return configs.reduced(configs.get("deepseek-v2-lite-16b"), d_model=32,
+                           vocab=128)
+
+
+def test_layout_routing(olmo, dsv2):
+    assert cache_mod.layout_for("attn", olmo, paged=False) == "dense"
+    assert cache_mod.layout_for("attn", olmo, paged=True) == "paged_mha"
+    assert cache_mod.layout_for("local", olmo, paged=True) == "dense"
+    assert cache_mod.layout_for("mla_moe", dsv2, paged=True) == "paged_mla"
+    assert cache_mod.layout_for("rglru", olmo, paged=True) == "state"
+    with pytest.raises(ValueError):
+        cache_mod.layout_for("nope", olmo, paged=False)
+
+
+def test_spec_init_matches_model_cache(olmo):
+    """lm.init_cache is exactly the spec registry's init, group-stacked."""
+    specs = lm.cache_specs(olmo, 2, 16, paged=True, page_size=8)
+    cache = lm.init_cache(olmo, 2, 16, paged=True, page_size=8)
+    spec = specs["groups"]["0"]
+    assert spec.layout == "paged_mha" and spec.paged
+    for leaf in spec.leaves:
+        arr = cache["groups"]["0"][leaf.name]
+        assert arr.shape == (olmo.pattern_groups,) + leaf.shape
+        assert arr.dtype == leaf.dtype
+    roles = {l.name: l.role for l in spec.leaves}
+    assert roles == {"k_pages": "pool", "v_pages": "pool",
+                     "block_tables": "table"}
+
+
+def test_paged_mla_spec_pads_latent_width(dsv2):
+    spec = cache_mod.spec_for("mla", dsv2, 2, 32, paged=True, page_size=8)
+    m = dsv2.mla
+    width = m.kv_lora_rank + m.rope_head_dim
+    assert spec.latent_width == width
+    pool = spec.leaf("latent_pages")
+    assert pool.shape[-1] == cache_mod.pad128(width)
+    assert pool.shape[-1] % 128 == 0
+
+
+def test_layout_of_and_iter_layers(olmo):
+    cache = lm.init_cache(olmo, 2, 16, paged=True, page_size=8)
+    layers = list(cache_mod.iter_layers(cache))
+    assert layers and all(layout == "paged_mha" for _, layout, _ in layers)
+    assert cache_mod.layout_of({"k": 1, "v": 2}) == "dense"
+    assert cache_mod.layout_of({"unknown": 1}) is None
+
+
+def test_state_layout_preserves_module_init(olmo):
+    """xLSTM's m-state inits to -10, not zero — spec must honor it."""
+    cfg = olmo.replace(block_pattern=("mlstm",), num_layers=2)
+    spec = cache_mod.spec_for("mlstm", cfg, 2, 16)
+    state = spec.init()
+    assert float(np.asarray(state["m"]).max()) == -10.0
+
+
+# ---------------------------------------------------------------------------
+# set_block_tables validation (satellite: name the offending layer)
+# ---------------------------------------------------------------------------
+
+def test_set_block_tables_validates_shape_and_names_layer(olmo):
+    cache = lm.init_cache(olmo, 2, 16, paged=True, page_size=8)   # maxp = 2
+    ok = attention.default_block_tables(2, 16, 8)
+    cache = lm.set_block_tables(cache, ok)                        # fits
+
+    with pytest.raises(ValueError, match=r"groups/0"):
+        lm.set_block_tables(cache, jnp.zeros((2, 5), jnp.int32))  # bad maxp
+    with pytest.raises(ValueError, match=r"expected \[B, maxp\]"):
+        lm.set_block_tables(cache, jnp.zeros((4, 2), jnp.int32))  # bad batch
+
+
+def test_set_block_tables_dense_noop(olmo):
+    cache = lm.init_cache(olmo, 2, 16)
+    out = lm.set_block_tables(cache, jnp.zeros((2, 99), jnp.int32))
+    assert lm.get_block_tables(out) is None
+    np.testing.assert_array_equal(np.asarray(out["groups"]["0"]["k"]),
+                                  np.asarray(cache["groups"]["0"]["k"]))
+
+
+# ---------------------------------------------------------------------------
+# COW page copy
+# ---------------------------------------------------------------------------
+
+def test_copy_pages_duplicates_and_drops(olmo, dsv2):
+    for cfg in (olmo, dsv2):
+        cache = lm.init_cache(cfg, 2, 16, dtype=jnp.float32, paged=True,
+                              page_size=8)
+        # Fill pools with recognizable content.
+        cache = jax.tree.map(
+            lambda x: (jnp.arange(x.size, dtype=x.dtype).reshape(x.shape)
+                       if x.dtype == jnp.float32 else x), cache)
+        out = lm.copy_pages(cache, jnp.asarray([0, -1], jnp.int32),
+                            jnp.asarray([3, 1], jnp.int32))
+        for (_, layout, a), (_, _, b) in zip(cache_mod.iter_layers(cache),
+                                             cache_mod.iter_layers(out)):
+            for name in cache_mod.pool_leaves(a, layout):
+                pa, pb = np.asarray(a[name]), np.asarray(b[name])
+                stacked = pa.ndim == (5 if layout == "paged_mha" else 4)
+                if stacked:
+                    np.testing.assert_array_equal(pb[:, 3], pa[:, 0])
+                    np.testing.assert_array_equal(pb[:, 1], pa[:, 1])  # drop
+                else:
+                    np.testing.assert_array_equal(pb[3], pa[0])
+                    np.testing.assert_array_equal(pb[1], pa[1])

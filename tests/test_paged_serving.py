@@ -364,3 +364,266 @@ def test_serving_write_bytes_o_page_not_o_max_len(llm):
     assert w_paged_4k == w_paged_1k              # paged write ~ O(page)
     assert r_paged_4k == r_paged_1k              # reads ~ live tokens
     assert w_dense_1k // w_paged_1k == 1024      # the headline ratio
+
+
+# ---------------------------------------------------------------------------
+# Reservation path, incremental growth, preemption, COW prefix sharing
+# ---------------------------------------------------------------------------
+
+def test_allocator_reservation_prevents_double_admission():
+    """Two candidates checked against one availability snapshot must not
+    both pass: reserve() removes pages from the free list immediately."""
+    alloc = PageAllocator(4)
+    assert alloc.available == 4
+    res_a = alloc.reserve(3)
+    assert res_a is not None and alloc.available == 1
+    # Candidate B sees the truth: its 3-page ask fails even though A has
+    # not been committed/prefilled yet (the double-admission race).
+    assert alloc.reserve(3) is None
+    pages_a = res_a.take()
+    assert len(pages_a) == 3
+    res_c = alloc.reserve(1)
+    assert res_c is not None and alloc.available == 0
+    res_c.release()
+    assert alloc.available == 1
+    alloc.free(pages_a)
+    assert alloc.available == 4
+
+
+def test_allocator_refcounts_share_and_free():
+    alloc = PageAllocator(2)
+    (p,) = alloc.alloc(1)
+    gen0 = alloc.generation(p)
+    alloc.share([p])
+    assert alloc.refcount(p) == 2
+    alloc.free([p])
+    assert alloc.refcount(p) == 1 and alloc.available == 1
+    alloc.free([p])
+    assert alloc.available == 2
+    with pytest.raises(ValueError):
+        alloc.free([p])
+    (p2,) = alloc.alloc(1)
+    if p2 == p:
+        assert alloc.generation(p) == gen0 + 1   # reuse is detectable
+
+
+def test_admission_is_two_phase_under_page_pressure(llm):
+    """With pages for only one of two head-of-queue requests, exactly one
+    is admitted per round — never both against the same snapshot."""
+    cfg, params = llm
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=[int(t) for t in rng.integers(2, 100, 14)],
+                    max_new_tokens=2) for i in range(2)]
+    eng = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                   paged=True, page_size=8, num_pages=3)
+    for r in reqs:
+        eng.submit(r)
+    eng.admit()
+    assert sum(r is not None for r in eng.rows) == 1
+    assert eng.allocator.available == 1        # 2 pages reserved+taken
+
+
+def test_incremental_growth_allocates_on_boundary_crossing(llm):
+    """Admission allocates only the prompt's pages; generation pages appear
+    as decode crosses page boundaries (no whole-request up-front alloc)."""
+    cfg, params = llm
+    req = Request(0, [3] * 6, 18)              # 6 + 18 = 24 slots = 3 pages
+    eng = ContinuousBatchingEngine(cfg, params, batch=1, max_len=32,
+                                   paged=True, page_size=8)
+    eng.submit(req)
+    eng.admit()
+    assert len(req.pages) == 1                 # ceil(6/8): prompt only
+    while eng.step():
+        pass
+    assert eng.stats["grown_pages"] == 2       # pages 2 and 3 on crossing
+    assert len(req.tokens) == 18
+    assert eng.allocator.available == eng.allocator.num_pages
+
+
+def test_lru_preemption_recomputes_and_completes(llm):
+    """Pool too small for both rows' full horizons: the least-recently
+    allocating row is preempted (pages freed, request re-queued with its
+    generated tokens) and everything still completes without leaks."""
+    cfg, params = llm
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=[int(t) for t in rng.integers(2, 100, 6)],
+                    max_new_tokens=12) for i in range(2)]
+    # Each needs ceil((6+12)/8) = 3 pages at peak; pool of 4 forces a
+    # preemption when both try to grow.
+    eng = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                   paged=True, page_size=8, num_pages=4)
+    eng.run(list(reqs))
+    assert eng.stats["completed"] == 2
+    assert eng.stats["preemptions"] >= 1
+    assert all(len(r.tokens) == 12 for r in reqs)
+    assert eng.allocator.available == 4, "page leak after preemption"
+
+
+def test_prefix_sharing_cow_matches_unshared_tokens(llm):
+    """Fan-out from one prompt: shared admission + COW must produce exactly
+    the tokens of the non-shared run, with strictly fewer resident pages."""
+    cfg, params = llm
+    rng = np.random.default_rng(11)
+    prompt = [int(t) for t in rng.integers(2, 100, 13)]   # 1 full + partial
+    fanout = 4
+
+    def run(share):
+        reqs = [Request(rid=i, prompt=list(prompt), max_new_tokens=6)
+                for i in range(fanout)]
+        eng = ContinuousBatchingEngine(cfg, params, batch=fanout,
+                                       max_len=32, paged=True, page_size=8,
+                                       prefix_sharing=share)
+        eng.run(reqs)
+        assert eng.stats["completed"] == fanout
+        assert eng.allocator.available == eng.allocator.num_pages
+        return reqs, eng
+
+    plain, eng_plain = run(False)
+    shared, eng_shared = run(True)
+    for a, b in zip(plain, shared):
+        assert a.tokens == b.tokens, a.rid
+    assert eng_shared.stats["shared_pages"] > 0
+    assert eng_shared.stats["cow_copies"] > 0
+    assert (eng_shared.stats["peak_pages"]
+            < eng_plain.stats["peak_pages"]), "sharing saved no pages"
+
+
+def test_prefix_share_resident_mb_below_unshared_at_fanout_4(llm):
+    """Acceptance: bench prefix-share column shows shared < non-shared."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.bench_serving import run_prefix_share
+    cfg, params = llm
+    rows = {share: run_prefix_share(cfg, params, max_len=64, page_size=8,
+                                    fanout=4, prompt_len=21, max_new=4,
+                                    share=share)
+            for share in (False, True)}
+    assert rows[True]["resident_cache_mb"] < rows[False]["resident_cache_mb"]
+    assert rows[True]["shared_pages"] > 0
+    assert rows[True]["completed"] == rows[False]["completed"] == 4
+
+
+def test_zero_page_admission_fully_covered_by_shared_prefix(llm):
+    """A clone whose prompt pages are all shared needs ZERO fresh pages at
+    admission (reserve(0)) and still decodes correctly."""
+    cfg, params = llm
+    rng = np.random.default_rng(13)
+    prompt = [int(t) for t in rng.integers(2, 100, 16)]   # exactly 2 pages
+    reqs = [Request(rid=i, prompt=list(prompt), max_new_tokens=4)
+            for i in range(2)]
+    eng = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                   paged=True, page_size=8,
+                                   prefix_sharing=True)
+    for r in reqs:
+        eng.submit(r)
+    eng.admit()
+    # Clone shares both prompt pages: identical page lists, refcount 2.
+    assert reqs[1].pages == reqs[0].pages
+    assert all(eng.allocator.refcount(p) == 2 for p in reqs[1].pages)
+    while eng.step():
+        pass
+    assert reqs[0].tokens == reqs[1].tokens
+    assert eng.allocator.available == eng.allocator.num_pages
+
+
+def test_zero_length_ragged_row_does_not_cow_shared_pages(llm):
+    """Satellite: an admission prefill whose OTHER rows have length 0 must
+    not touch pages still shared between live rows — no copy-on-write, no
+    pool bytes moved outside the admitted row's pages."""
+    cfg, params = llm
+    rng = np.random.default_rng(17)
+    prompt = [int(t) for t in rng.integers(2, 100, 13)]
+    eng = ContinuousBatchingEngine(cfg, params, batch=3, max_len=32,
+                                   paged=True, page_size=8,
+                                   prefix_sharing=True)
+    a = Request(0, list(prompt), 8)
+    b = Request(1, list(prompt), 8)
+    eng.submit(a)
+    eng.submit(b)
+    eng.admit()                                # rows 0,1 share prompt pages
+    shared_pages = [p for p in a.pages if eng.allocator.refcount(p) > 1]
+    assert shared_pages, "setup: prompt pages must be shared"
+    cow_before = eng.stats["cow_copies"]
+    pool_before = np.asarray(eng.cache["groups"]["0"]["k_pages"]).copy()
+
+    # Admit a THIRD request with a different prompt into the free row: the
+    # ragged prefill's other rows are zero-length, and rows 0/1's shared
+    # pages must survive bit-for-bit with no COW triggered by admission.
+    c = Request(2, [int(t) for t in rng.integers(2, 100, 5)], 2)
+    eng.submit(c)
+    eng.admit()
+    assert eng.stats["cow_copies"] == cow_before
+    pool_after = np.asarray(eng.cache["groups"]["0"]["k_pages"])
+    np.testing.assert_array_equal(pool_before[:, shared_pages],
+                                  pool_after[:, shared_pages])
+    while eng.step():
+        pass
+    assert eng.stats["completed"] == 3
+    assert eng.allocator.available == eng.allocator.num_pages
+
+
+def test_freed_row_refill_under_prefix_sharing(llm):
+    """A finished sharer's slot is refilled by a NEW clone while the other
+    sharer still holds the prefix pages: the refill re-shares the live
+    pages instead of copying them."""
+    cfg, params = llm
+    rng = np.random.default_rng(19)
+    prompt = [int(t) for t in rng.integers(2, 100, 16)]   # 2 full pages
+    long_r = Request(0, list(prompt), 12)
+    short_r = Request(1, list(prompt), 2)
+    late_r = Request(2, list(prompt), 3)
+    eng = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                   paged=True, page_size=8,
+                                   prefix_sharing=True)
+    eng.run([long_r, short_r, late_r])
+    assert eng.stats["completed"] == 3
+    assert late_r.admitted_step > 0
+    # The late clone re-shared the prefix pages still pinned by long_r.
+    assert late_r.pages[:2] == long_r.pages[:2]
+    assert eng.allocator.available == eng.allocator.num_pages
+
+
+def test_prefix_page_mapper_shares_header_across_recontextualization():
+    """The orchestrator's mapper: identical full-page prefixes share pages
+    across rows AND across one row's own re-contextualizations."""
+    from repro.serving.scheduler import PrefixPageMapper
+    ps, maxp = 8, 4
+    mapper = PrefixPageMapper(2, maxp, ps, trash_page=99)
+    header = list(range(100, 120))              # 20 tokens: 2 full pages
+
+    shared0 = mapper.map_row(0, header, horizon=24)
+    assert shared0 == 0
+    row0 = list(mapper.host_bt[0, :3])
+
+    # A second row with the same prompt shares the 2 full header pages.
+    shared1 = mapper.map_row(1, list(header), horizon=24)
+    assert shared1 == 2
+    assert list(mapper.host_bt[1, :2]) == row0[:2]
+    assert all(mapper.allocator.refcount(p) == 2 for p in row0[:2])
+
+    # Row 0 re-contextualizes: same header, different tail — the header
+    # pages survive the remap (self-share), the tail page is fresh.
+    shared0b = mapper.map_row(0, header[:16] + [7, 8, 9], horizon=24)
+    assert shared0b == 2
+    assert list(mapper.host_bt[0, :2]) == row0[:2]
+
+    # A different header shares nothing.
+    assert mapper.map_row(1, list(range(200, 220)), horizon=24) == 0
+    mapper.free_row(0)
+    mapper.free_row(1)
+
+
+def test_orchestrator_paged_sharing_stat():
+    """Paged orchestrator with small pages reports shared prefix pages when
+    invalidations force re-contextualization (dashboard has read edges)."""
+    from repro.agents.orchestrator import make_sim_llm, run_task
+    from repro.agents.tasks import TASKS
+    cfg, params = make_sim_llm()
+    r = run_task(cfg, params, TASKS["dashboard"], mode="parallel",
+                 n_agents=3, seed=0, kv="paged", prefill="ragged",
+                 page_size=8)
+    assert r.converged and r.kv_mode == "paged"
+    if r.invalidations > 0:
+        assert r.shared_prefix_pages > 0, \
+            "re-contextualization shared no header pages"

@@ -94,3 +94,106 @@ def test_every_arch_param_tree_gets_specs():
         for leaf, spec in zip(jax.tree.leaves(abs_p), jax.tree.leaves(
                 specs, is_leaf=lambda x: isinstance(x, P))):
             assert len(spec) <= len(leaf.shape)
+
+
+def test_paged_pool_leaf_rules():
+    """Pools shard over heads (MHA) / latent features (MLA); the page dim is
+    shared across rows (never batch-sharded); block tables replicate."""
+    part = Partitioner(FakeMesh(model=16), fsdp=False)
+    # MHA pool [P, Hkv, ps, D], 16 heads: heads on model, page dim whole.
+    s = part.cache_entry_spec(("groups", "0", "k_pages"),
+                              (8, 4096, 16, 64, 128),
+                              shard_batch=True, stacked=True)
+    assert s == P(None, None, "model", None, None)
+    # Non-divisible heads replicate (no fallback onto the page dim).
+    s = part.cache_entry_spec(("v_pages",), (4096, 6, 64, 128),
+                              shard_batch=True, stacked=False)
+    assert s == P(None, None, None, None)
+    # MLA latent pool [P, ps, Dp]: latent-feature axis on model.
+    s = part.cache_entry_spec(("latent_pages",), (4096, 64, 640),
+                              shard_batch=True, stacked=False)
+    assert s == P(None, None, "model")
+    # Block tables replicate everywhere.
+    s = part.cache_entry_spec(("groups", "0", "block_tables"), (8, 128, 64),
+                              shard_batch=True, stacked=True)
+    assert s == P(None, None, None)
+
+
+def test_paged_cache_tree_gets_specs():
+    """The full paged cache tree (MHA and MLA archs) maps through the
+    partitioner with correct ranks."""
+    part = Partitioner(FakeMesh(), fsdp=False)
+    for arch in ("olmo-1b", "deepseek-v2-lite-16b"):
+        cfg = configs.reduced(configs.get(arch))
+        cache = jax.eval_shape(
+            lambda c=cfg: lm.init_cache(c, 8, 256, paged=True, page_size=64))
+        specs = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: part.cache_entry_spec(
+                tuple(getattr(k, "key", getattr(k, "name", k))
+                      for k in path),
+                np.shape(leaf), shard_batch=True,
+                stacked="groups" in str(path)),
+            cache)
+        for leaf, spec in zip(jax.tree.leaves(cache),
+                              jax.tree.leaves(
+                                  specs,
+                                  is_leaf=lambda x: isinstance(x, P))):
+            assert len(spec) <= len(leaf.shape)
+
+
+def test_paged_decode_lowers_multi_device():
+    """The fused paged step (MHA pools + MLA latent pools) lowers and
+    compiles on a multi-device mesh with the pool sharding rules — spawned
+    with 8 host devices so the main process keeps its single-device view."""
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        import repro.configs as configs
+        from repro.models import lm
+        from repro.serving import engine as engine_mod
+        from repro.sharding.partition import Partitioner
+        from repro.sharding import activation
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        for arch in ("olmo-1b", "deepseek-v2-lite-16b"):
+            cfg = configs.reduced(configs.get(arch))
+            part = Partitioner(mesh, fsdp=False)
+            p_abs = lm.abstract_params(cfg)
+            p_shard = part.params_shardings(p_abs)
+            b = 8
+            cache_abs = jax.eval_shape(
+                lambda c=cfg: lm.init_cache(c, b, 256, paged=True,
+                                            page_size=64))
+            c_shard = part.cache_shardings(cache_abs, shard_batch=True)
+            bspec = NamedSharding(mesh, P(("data",)))
+            sd = jax.ShapeDtypeStruct
+            binding = activation.standard_binding(("data",),
+                                                  seq_parallel=True)
+            with activation.bind(binding):
+                jitted = jax.jit(
+                    engine_mod.make_serve_step(cfg),
+                    in_shardings=(p_shard, c_shard, bspec, bspec,
+                                  NamedSharding(mesh, P(None))),
+                    donate_argnums=(1,))
+                with mesh:
+                    jitted.lower(p_abs, cache_abs, sd((b,), jnp.int32),
+                                 sd((b,), jnp.int32),
+                                 sd((2,), jnp.uint32)).compile()
+            print(arch, "OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"},
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "olmo-1b OK" in out.stdout
+    assert "deepseek-v2-lite-16b OK" in out.stdout
