@@ -1,19 +1,24 @@
-"""Serving benchmark: dense vs paged KV cache under continuous batching.
+"""Serving benchmark: dense vs paged KV cache under continuous batching,
+plus the chunked-vs-stalled admission sweep of the token-budget mixed step.
 
 Sweeps batch × context-length skew × cache layout and reports, per config:
 
-  us_per_token            median decode-step wall time / mean active rows
+  us_per_token            median step wall time / mean active rows
   write_bytes_per_step    cache bytes *written* per decode step (analytic)
   read_bytes_per_step     cache bytes *read* per decode step (analytic)
   resident_cache_mb       KV bytes pinned at the live-token watermark
+  decode_stall_steps      steps where a decode-ready lane got no budget
+  ttft_steps / ttft_ms    admission → first token
+  itl_p50 / itl_p99       inter-token latency across all requests
 
-The write accounting is the point of the exercise: the dense path's one-hot
-``jnp.where`` rewrites the full [B, Hkv, S, D] cache per layer per step
-(O(B·max_len)), while the paged path writes one page slot per row (O(page)).
-The analytic ratio lands in ``BENCH_serving.json`` as
-``write_bytes_ratio_dense_over_paged`` — the perf-trajectory headline — next
-to measured wall times and an admission trace proving requests enter freed
-rows mid-flight.
+The write accounting is the point of the original exercise: the dense
+path's one-hot ``jnp.where`` rewrites the full [B, Hkv, S, D] cache per
+layer per step (O(B·max_len)), while the paged path writes one page slot
+per row (O(page)).  The ``chunked_admission`` sweep is the mixed step's
+headline: stalled (whole-prompt, decode lanes idle — the old bucketed
+admission) vs chunked (≤ chunk-size prompt slices interleaved with decode
+spans) — chunked holds decode_stall_steps at zero while the stalled
+baseline idles every in-flight lane per admission.
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--quick] [--out PATH]
 
@@ -55,9 +60,18 @@ def analytic_step_bytes(cfg, *, batch: int, max_len: int, page_size: int,
     return n_attn * write, n_attn * read
 
 
+def _quantile(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+    return xs[i]
+
+
 def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
                skew: str, paged: bool, n_requests: int, prompt_hi: int,
-               max_new: int, seed: int = 0) -> dict:
+               max_new: int, seed: int = 0, chunk_size: int = 32,
+               interleave: bool = True, stagger: bool = False) -> dict:
     from repro.serving.scheduler import ContinuousBatchingEngine, Request
 
     rng = np.random.default_rng(seed)
@@ -66,26 +80,42 @@ def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
     else:                                       # ragged: log-uniform spread
         plens = [int(x) for x in np.exp(rng.uniform(
             np.log(4), np.log(prompt_hi), n_requests)).astype(int)]
+    # ``stagger`` varies generation lengths so completions (and therefore
+    # admissions) interleave with decode — the regime where stalled
+    # admission actually stalls lanes.
+    news = [max(1, max_new // 2 + (i * 3) % max_new) if stagger else max_new
+            for i in range(n_requests)]
     requests = [Request(rid=i,
                         prompt=[int(t) for t in
                                 rng.integers(2, cfg.vocab_size, p)],
-                        max_new_tokens=max_new)
+                        max_new_tokens=news[i])
                 for i, p in enumerate(plens)]
 
     eng = ContinuousBatchingEngine(cfg, params, batch=batch, max_len=max_len,
-                                   paged=paged, page_size=page_size)
+                                   paged=paged, page_size=page_size,
+                                   chunk_size=chunk_size,
+                                   prefill_interleave=interleave)
     for r in requests:
         eng.submit(r)
     step_times: list[float] = []
+    step_stamps: list[float] = [time.perf_counter()]
     active_counts: list[int] = []
     live_len_samples: list[list[int]] = []
     resident_peak = 0
+    tok_stamp: dict[int, list[float]] = {r.rid: [] for r in requests}
+    tok_seen = {r.rid: 0 for r in requests}
     while True:
         live = [len(r.prompt) + len(r.tokens)
                 for r in eng.rows if r is not None]
         t0 = time.perf_counter()
         more = eng.step()
-        step_times.append(time.perf_counter() - t0)
+        now = time.perf_counter()
+        step_times.append(now - t0)
+        step_stamps.append(now)
+        for r in requests:                      # per-token arrival stamps
+            while tok_seen[r.rid] < len(r.tokens):
+                tok_stamp[r.rid].append(now)
+                tok_seen[r.rid] += 1
         if live:
             active_counts.append(len(live))
             live_len_samples.append(live)
@@ -104,11 +134,22 @@ def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
                                  page_size=page_size, live_lens=mid_lens,
                                  paged=paged)
     admitted_mid_flight = sum(1 for r in requests if r.admitted_step > 0)
+    # TTFT in steps is deterministic (greedy, fixed seeds); wall TTFT rides
+    # the step timestamps.  Inter-token latency pools per-request diffs.
+    ttft_steps = [r.first_token_step - r.admitted_step for r in requests
+                  if r.first_token_step >= 0]
+    ttft_wall = [step_stamps[min(r.first_token_step, len(step_stamps) - 1)]
+                 - step_stamps[min(r.admitted_step, len(step_stamps) - 1)]
+                 for r in requests if r.first_token_step >= 0]
+    itl = [b - a for stamps in tok_stamp.values()
+           for a, b in zip(stamps, stamps[1:])]
     return {
         "batch": batch, "skew": skew, "mode": "paged" if paged else "dense",
         "max_len": max_len, "page_size": page_size,
+        "chunk_size": chunk_size, "interleave": interleave,
         "n_requests": n_requests, "gen_tokens": eng.stats["gen_tokens"],
         "steps": eng.stats["steps"], "prefills": eng.stats["prefills"],
+        "prefill_chunks": eng.stats["prefill_chunks"],
         "us_per_token": 1e6 * med_step / max(mean_active, 1e-9),
         "us_per_step": 1e6 * med_step,
         "mean_active_rows": mean_active,
@@ -118,7 +159,43 @@ def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
         "peak_pages": eng.stats["peak_pages"],
         "admitted_mid_flight": admitted_mid_flight,
         "completed": eng.stats["completed"],
+        "decode_stall_steps": eng.stats["decode_stall_steps"],
+        "stalled_lane_steps": eng.stats["stalled_lane_steps"],
+        "ttft_steps_mean": (statistics.fmean(ttft_steps)
+                            if ttft_steps else 0.0),
+        "ttft_steps_max": max(ttft_steps, default=0),
+        "ttft_ms_mean": 1e3 * (statistics.fmean(ttft_wall)
+                               if ttft_wall else 0.0),
+        "itl_p50_us": 1e6 * _quantile(itl, 0.50),
+        "itl_p99_us": 1e6 * _quantile(itl, 0.99),
     }
+
+
+def run_chunked_admission(cfg, params, *, batch: int, max_len: int,
+                          page_size: int, n_requests: int, prompt_hi: int,
+                          max_new: int, chunks: tuple[int, ...]) -> list[dict]:
+    """Chunked vs stalled admission sweep (the mixed-step headline).
+
+    ``stalled`` emulates the old bucketed-admission scheduler: prompts land
+    whole and decode lanes idle while any admission is in flight.  Each
+    ``chunked`` row interleaves ≤ chunk-size prompt slices with decode spans
+    — decode_stall_steps drops to zero and inter-token latency flattens,
+    at the cost of more (smaller) steps per admission.
+    """
+    rows = []
+    base = dict(batch=batch, max_len=max_len, page_size=page_size,
+                skew="ragged", paged=True, n_requests=n_requests,
+                prompt_hi=prompt_hi, max_new=max_new, stagger=True)
+    row = run_config(cfg, params, interleave=False, chunk_size=max_len,
+                     **base)
+    row["admission"] = "stalled"
+    rows.append(row)
+    for chunk in chunks:
+        row = run_config(cfg, params, interleave=True, chunk_size=chunk,
+                         **base)
+        row["admission"] = "chunked"
+        rows.append(row)
+    return rows
 
 
 def run_prefix_share(cfg, params, *, max_len: int, page_size: int,
@@ -189,6 +266,15 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                     n_requests=n_requests, prompt_hi=prompt_hi,
                     max_new=max_new))
 
+    # Chunked-vs-stalled admission sweep (TTFT, decode-stall steps, p50/p99
+    # inter-token latency) — the token-budget mixed step's headline.
+    chunk_rows = run_chunked_admission(
+        cfg, params, batch=batches[0], max_len=max_len,
+        page_size=page_size, n_requests=2 * batches[0] + 2,
+        prompt_hi=prompt_hi, max_new=max_new,
+        chunks=(page_size, 2 * page_size) if quick
+        else (page_size // 2, page_size, 2 * page_size))
+
     # Prefix-share sweep: shared-prompt fan-out, with/without COW sharing.
     share_rows = []
     fanouts = (4,) if quick else (2, 4, 8)
@@ -210,11 +296,13 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                  if r["mode"] == "paged" and r["batch"] == d["batch"]
                  and r["skew"] == d["skew"])
         ratios.append(d["write_bytes_per_step"] / p["write_bytes_per_step"])
+    stalled = next(r for r in chunk_rows if r["admission"] == "stalled")
     report = {
         "config": {"model": cfg.name, "d_model": cfg.d_model,
                    "num_layers": cfg.num_layers, "max_len": max_len,
                    "page_size": page_size, "quick": quick},
         "rows": rows,
+        "chunked_admission": chunk_rows,
         "prefix_share": share_rows,
         "write_bytes_ratio_dense_over_paged": min(ratios),
         "admission": {
@@ -222,6 +310,11 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                                          for r in rows if r["mode"] == "paged"),
             "all_completed": all(r["completed"] == r["n_requests"]
                                  for r in rows),
+            # Acceptance headline: every chunked config stalls strictly
+            # fewer decode steps than the bucketed-admission baseline.
+            "chunked_stalls_below_baseline": all(
+                r["decode_stall_steps"] < stalled["decode_stall_steps"]
+                for r in chunk_rows if r["admission"] == "chunked"),
         },
     }
     Path(out).write_text(json.dumps(report, indent=2))
@@ -233,6 +326,15 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
         emit_csv(f"{name},{r['us_per_token']:.1f},{derived}")
     emit_csv(f"serving/write_ratio,0.0,dense_over_paged="
              f"{report['write_bytes_ratio_dense_over_paged']:.1f}x")
+    for r in chunk_rows:
+        name = (f"serving/admit_{r['admission']}"
+                + (f"_c{r['chunk_size']}" if r["admission"] == "chunked"
+                   else ""))
+        derived = (f"stallSteps={r['decode_stall_steps']}"
+                   f";ttftSteps={r['ttft_steps_mean']:.1f}"
+                   f";itlP50us={r['itl_p50_us']:.0f}"
+                   f";itlP99us={r['itl_p99_us']:.0f}")
+        emit_csv(f"{name},{r['us_per_step']:.1f},{derived}")
     for r in share_rows:
         name = (f"serving/prefix_f{r['fanout']}_"
                 f"{'cow' if r['cow'] else 'nocow'}")

@@ -34,10 +34,21 @@ from pathlib import Path
 COUNTERS = ("write_bytes_per_step", "read_bytes_per_step",
             "resident_cache_mb", "peak_pages")
 
+# Chunked-admission sweep counters: greedy decoding at fixed seeds makes
+# step counts, stall counts and TTFT-in-steps bit-identical across reruns
+# of the same commit, so they get the strict threshold too.
+CHUNK_COUNTERS = ("steps", "decode_stall_steps", "stalled_lane_steps",
+                  "ttft_steps_mean", "peak_pages")
+
 
 def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
     return {(r["batch"], r["skew"]): r
             for r in report["rows"] if r["mode"] == mode}
+
+
+def chunk_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["admission"], r.get("chunk_size", 0)): r
+            for r in report.get("chunked_admission", [])}
 
 
 def timing_value(report: dict, key: tuple) -> tuple[float, str]:
@@ -82,6 +93,24 @@ def check(baseline: dict, current: dict, max_regression: float,
             cval = cur[key]["us_per_token"]
             bkind = "us/tok"
         judge(key, bkind, bval, cval, timing_slack)
+
+    cbase = chunk_rows_by_key(baseline)
+    ccur = chunk_rows_by_key(current)
+    for key in sorted(cbase):
+        if key not in ccur:
+            ok = False
+            lines.append(f"MISSING chunked-admission row {key} in current "
+                         "run")
+            continue
+        for name in CHUNK_COUNTERS:
+            judge(key, name, float(cbase[key][name]),
+                  float(ccur[key][name]), max_regression)
+    if cbase and "chunked_admission" in current:
+        stalls_ok = current.get("admission", {}).get(
+            "chunked_stalls_below_baseline", False)
+        lines.append(f"chunked stalls < stalled baseline: "
+                     f"{'ok' if stalls_ok else 'FAIL'}")
+        ok = ok and stalls_ok
     return ok, lines
 
 

@@ -154,15 +154,22 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
              n_agents: int = 4, seed: int = 0, max_len: int = 1024,
              merge: str = "allgather", delta_capacity: int = 64,
              kv: str = "dense", prefill: str = "replay",
-             page_size: int = 64,
+             page_size: int = 64, chunk_size: int = 32,
              time_fn=time.perf_counter) -> RunResult:
-    """``kv="paged"`` backs the agents with the paged KV cache; ``prefill=
-    "ragged"`` replaces token-by-token prompt replay with one masked
-    per-row-length prefill call per (re-)contextualization — heterogeneous
-    agent prompts stop costing one decode step per token."""
+    """``kv="paged"`` backs the agents with the paged KV cache.
+
+    ``prefill="chunked"`` (alias ``"ragged"``) rides the token-budget mixed
+    serve step: each loop iteration spends one span per agent — a ≤
+    ``chunk_size`` slice of any agent's pending (re-)contextualization
+    prompt AND one decode token for every generating agent, in the same
+    batched call — so an agent replaying a fresh prompt after an
+    invalidation never stalls its neighbours.  ``"replay"`` is the paper's
+    token-by-token baseline (one decode step per prompt token)."""
     assert mode in ("sequential", "parallel")
     assert merge in ("allgather", "pmax", "delta")
-    assert kv in ("dense", "paged") and prefill in ("replay", "ragged")
+    assert kv in ("dense", "paged")
+    assert prefill in ("replay", "ragged", "chunked")
+    chunked = prefill in ("ragged", "chunked")
     if mode == "sequential":
         n_agents = 1
     rng = np.random.default_rng(seed)
@@ -229,29 +236,27 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     pos = jnp.zeros((n_agents,), jnp.int32)
     token = jnp.ones((n_agents,), jnp.int32)
     key = jax.random.PRNGKey(seed)
+    chunk_size = max(1, min(chunk_size, max_len))
+    # Host mirrors for the chunked (mixed-step) path: positions and last
+    # tokens never round-trip through the device.
+    pos_h = np.zeros((n_agents,), np.int64)
+    tok_h = np.ones((n_agents,), np.int64)
 
-    prefill_fn = None
-    if prefill == "ragged":
-        prefill_fn = jax.jit(engine_mod.make_ragged_prefill_fn(cfg))
+    mixed_fn = None
+    if chunked:
+        mixed_fn = jax.jit(engine_mod.make_mixed_step_fn(cfg))
 
     # Warmup: compile every helper shape outside the timed region (the claim
     # helper has one shape per idle-agent count).
     _ = step_fn(params, cache, token, pos, key)
-    if prefill_fn is not None:
-        # Every prompt bucket a (re-)contextualization can hit: base header
-        # plus 0..max_reads read tails.  All-zero lengths leave cache as-is.
-        max_reads = max((len(r) for r in task.reads.values()), default=0)
-        # Same max_len clamp ragged_prefill_batch applies at runtime, so
-        # the compiled warmup shapes are exactly the shapes used in-loop.
-        warm_buckets = sorted({
-            min(engine_mod.bucket_len(task.prompt_tokens
-                                      + k * task.read_prompt_tokens),
-                max_len)
-            for k in range(max_reads + 1)})
-        for wb in warm_buckets:
-            _, cache = prefill_fn(params, cache,
-                                  jnp.zeros((n_agents, wb), jnp.int32),
-                                  jnp.zeros((n_agents,), jnp.int32))
+    if mixed_fn is not None:
+        # One compile per span-width bucket; all-zero spans leave the cache
+        # bit-for-bit as-is, so warmup is free of side effects.
+        for wb in engine_mod.mixed_width_buckets(chunk_size):
+            _, cache = mixed_fn(params, cache,
+                                jnp.zeros((n_agents, wb), jnp.int32),
+                                jnp.zeros((n_agents,), jnp.int32),
+                                jnp.zeros((n_agents,), jnp.int32), key)
     warm_board = todo.post(todo.empty(k_todos), 0,
                            jnp.zeros((k_todos,), bool), jnp.int32(1),
                            jnp.int32(100))
@@ -364,7 +369,9 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                     a.tokens_left = gen_budget
                     snap_len[a.client] = host_len.copy()
                     buf_slot[a.row] = a.todo_id
-                    pos = pos.at[a.row].set(0)
+                    pos_h[a.row] = 0
+                    if mixed_fn is None:
+                        pos = pos.at[a.row].set(0)
                     recontextualize(a)
                 else:
                     stats["collide"] += 1
@@ -386,59 +393,83 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                 break
             continue
 
-        # -- ragged prompt prefill: one masked per-row-length call lands the
-        # whole heterogeneous prompt batch (vs len(queue) decode steps each).
-        if prefill_fn is not None:
-            pre = [a for a in agents if a.phase == PREFILL and a.queue]
-            if pre:
-                push_tables()
-                row_prompts = {a.row: a.queue for a in pre}
-                logits, lens_h, cache = engine_mod.ragged_prefill_batch(
-                    prefill_fn, params, cache, n_agents, row_prompts,
-                    max_len=max_len)
-                stats["steps"] += 1
-                first = np.asarray(jnp.argmax(logits, axis=-1))
-                tok_h = np.array(token)
-                pos_h = np.array(pos)
-                for a in pre:
-                    stats["replay"] += len(a.queue)
-                    a.queue = []
+        if mixed_fn is not None:
+            # -- one token-budget mixed step: every pending prompt spends a
+            # ≤ chunk_size slice AND every generating agent decodes one
+            # token, in the same batched call — re-contextualization never
+            # stalls the other agents' decode lanes.
+            spans = np.zeros((n_agents,), np.int64)
+            finishing: list[AgentState] = []
+            for a in agents:
+                if a.phase == PREFILL and a.queue:
+                    spans[a.row] = min(chunk_size, len(a.queue))
+                elif a.phase == PREFILL:
                     a.phase = GEN
-                    tok_h[a.row] = int(first[a.row])
-                    pos_h[a.row] = int(lens_h[a.row])
-                    buffers[a.row].append(int(first[a.row]) % vocab)
-                    stats["gen"] += 1
-                    a.tokens_left -= 1
-                token = jnp.asarray(tok_h)
-                pos = jnp.asarray(pos_h)
-                for a in pre:
-                    if a.tokens_left <= 0:
-                        finish_agent(a)
-
-        # -- one batched decode step ----------------------------------------
-        forced = np.array(token)      # writable host copy
-        for a in agents:
-            if a.phase == PREFILL and a.queue:
-                forced[a.row] = a.queue.pop(0)
-                stats["replay"] += 1
-            elif a.phase == PREFILL:
-                a.phase = GEN
-        token = jnp.asarray(forced)
-        push_tables()
-        key, sub = jax.random.split(key)
-        token, cache, pos = step_fn(params, cache, token, pos, sub)
-        stats["steps"] += 1
-        sampled = np.array(token)
-
-        # -- generation & completion ----------------------------------------
-        for a in agents:
-            if a.phase != GEN:
-                continue
-            buffers[a.row].append(int(sampled[a.row]) % vocab)
-            stats["gen"] += 1
-            a.tokens_left -= 1
-            if a.tokens_left <= 0:
+                    spans[a.row] = 1
+                elif a.phase == GEN:
+                    spans[a.row] = 1
+            width = engine_mod.width_bucket(int(max(spans.max(), 1)),
+                                            chunk_size)
+            toks = np.zeros((n_agents, width), np.int64)
+            for a in agents:
+                if spans[a.row] == 0:
+                    continue
+                if a.phase == PREFILL:
+                    seg = a.queue[: int(spans[a.row])]
+                    a.queue = a.queue[int(spans[a.row]):]
+                    toks[a.row, :len(seg)] = seg
+                    stats["replay"] += len(seg)
+                else:
+                    toks[a.row, 0] = tok_h[a.row]
+            push_tables()
+            key, sub = jax.random.split(key)
+            nxt, cache = mixed_fn(params, cache,
+                                  jnp.asarray(toks, jnp.int32),
+                                  jnp.asarray(pos_h, jnp.int32),
+                                  jnp.asarray(spans, jnp.int32), sub)
+            stats["steps"] += 1
+            sampled = np.asarray(nxt)
+            for a in agents:
+                if spans[a.row] == 0:
+                    continue
+                pos_h[a.row] += int(spans[a.row])
+                if a.phase == PREFILL:
+                    if a.queue:
+                        continue            # mid-prompt logits: discarded
+                    a.phase = GEN           # chunk's last logits = 1st token
+                tok_h[a.row] = int(sampled[a.row])
+                buffers[a.row].append(int(sampled[a.row]) % vocab)
+                stats["gen"] += 1
+                a.tokens_left -= 1
+                if a.tokens_left <= 0:
+                    finishing.append(a)
+            for a in finishing:
                 finish_agent(a)
+        else:
+            # -- one batched decode step (replay baseline) -------------------
+            forced = np.array(token)      # writable host copy
+            for a in agents:
+                if a.phase == PREFILL and a.queue:
+                    forced[a.row] = a.queue.pop(0)
+                    stats["replay"] += 1
+                elif a.phase == PREFILL:
+                    a.phase = GEN
+            token = jnp.asarray(forced)
+            push_tables()
+            key, sub = jax.random.split(key)
+            token, cache, pos = step_fn(params, cache, token, pos, sub)
+            stats["steps"] += 1
+            sampled = np.array(token)
+
+            # -- generation & completion ------------------------------------
+            for a in agents:
+                if a.phase != GEN:
+                    continue
+                buffers[a.row].append(int(sampled[a.row]) % vocab)
+                stats["gen"] += 1
+                a.tokens_left -= 1
+                if a.tokens_left <= 0:
+                    finish_agent(a)
 
         # -- observation sweep (paper §4.2) ----------------------------------
         if stats["steps"] % OBSERVE_EVERY == 0:
@@ -456,7 +487,9 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                         a.queue = _prompt_tokens(task, a.todo_id, docs,
                                                  vocab, rng)
                         a.phase = PREFILL
-                        pos = pos.at[a.row].set(0)
+                        pos_h[a.row] = 0
+                        if mixed_fn is None:
+                            pos = pos.at[a.row].set(0)
                         recontextualize(a)
                     snap_len[a.client] = host_len.copy()
 
@@ -528,12 +561,17 @@ def main() -> None:
     ap.add_argument("--kv", default="dense", choices=["dense", "paged"],
                     help="KV cache layout for the agents' decode engine")
     ap.add_argument("--prefill", default="replay",
-                    choices=["replay", "ragged"],
+                    choices=["replay", "ragged", "chunked"],
                     help="prompt (re-)contextualization: token-by-token "
-                         "replay or one ragged masked prefill per batch")
+                         "replay, or chunked admission through the "
+                         "token-budget mixed step ('ragged' is a "
+                         "backward-compatible alias for 'chunked')")
     ap.add_argument("--page-size", type=int, default=64,
                     help="paged-KV page size; small pages (8-16) let the "
                          "task/TODO header share across re-contextualizations")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="max prompt tokens one mixed step spends per agent "
+                         "while other agents keep decoding")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -541,7 +579,8 @@ def main() -> None:
     r = run_task(cfg, params, TASKS[args.task], mode=args.mode,
                  n_agents=args.agents, seed=args.seed, merge=args.merge,
                  delta_capacity=args.delta_capacity, kv=args.kv,
-                 prefill=args.prefill, page_size=args.page_size)
+                 prefill=args.prefill, page_size=args.page_size,
+                 chunk_size=args.chunk_size)
     for k, v in sorted(vars(r).items()):
         print(f"{k}: {v}")
 

@@ -23,6 +23,7 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import delta_apply as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lww_merge as _lww
+from repro.kernels import paged_chunk_attention as _pchunk
 from repro.kernels import paged_decode_attention as _pdec
 from repro.kernels import paged_mla_decode as _pmla
 from repro.kernels import ref
@@ -167,6 +168,92 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
         q, k_pages, v_pages, block_tables.astype(jnp.int32),
         pos.astype(jnp.int32), k_new.astype(k_pages.dtype),
         v_new.astype(v_pages.dtype), scale=scale, window=window,
+        interpret=not on_tpu)
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, start, span,
+                          k_new, v_new, *, scale: float | None = None,
+                          window: int | None = None, use_pallas: bool = True):
+    """Chunked mixed-step attention over a paged KV cache, writes fused.
+
+    q: [B, Hq, C, D] per-row query spans; k_pages, v_pages: [P, Hkv, ps, D];
+    block_tables: i32[B, maxp]; start: i32[B] tokens already cached; span:
+    i32[B] valid new tokens in [0, C]; k_new, v_new: [B, Hkv, C, D].
+    Returns (out [B, Hq, C, D], k_pages, v_pages) — the span's K/V written
+    at slots ``start..start+span`` (in place on TPU via aliasing).
+
+    Span 1 is the fused decode step; span C is one prompt chunk.  Like the
+    decode wrapper, the pool is never padded per step — on TPU it must be
+    tileable at init; off-TPU the kernel runs in interpret mode.
+    """
+    ps = k_pages.shape[2]
+    maxp = block_tables.shape[1]
+    # Clamp start to table capacity on BOTH paths (one contract with the
+    # decode wrapper): writes past the table drop and the walk stays in
+    # bounds instead of reading the block table out of range.
+    start = jnp.minimum(start, maxp * ps - 1)
+    span = jnp.clip(span, 0, q.shape[2])
+    if not use_pallas:
+        return ref.paged_chunk_attention(q, k_pages, v_pages, block_tables,
+                                         start, span, k_new, v_new,
+                                         scale=scale, window=window)
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        sublane = 16 if k_pages.dtype == jnp.bfloat16 else 8
+        if ps % sublane or d % 128:
+            raise ValueError(
+                f"paged cache layout (page_size={ps}, head_dim={d}, "
+                f"{k_pages.dtype}) is not TPU-tileable: page_size must be a "
+                f"multiple of {sublane} and head_dim a multiple of 128. "
+                "Pick an aligned page_size/head_dim at init_cache time — the "
+                "pool is deliberately never padded per step.")
+    return _pchunk.paged_chunk_attention(
+        q, k_pages, v_pages, block_tables.astype(jnp.int32),
+        start.astype(jnp.int32), span.astype(jnp.int32),
+        k_new.astype(k_pages.dtype), v_new.astype(v_pages.dtype),
+        scale=scale, window=window, interpret=not on_tpu)
+
+
+def paged_mla_chunk(q_abs, q_rope, latent_pages, block_tables, start, span,
+                    latent_new, *, scale: float, use_pallas: bool = True):
+    """Chunked mixed-step MLA decode over a paged latent cache.
+
+    q_abs: [B, H, C, r] (f32 absorbed queries); q_rope: [B, H, C, rd];
+    latent_pages: [P, ps, Dp] with Dp >= r + rd; block_tables: i32[B, maxp];
+    start/span: i32[B]; latent_new: [B, C, Dp].
+    Returns (ctx [B, H, C, r] f32, latent_pages updated in place on TPU).
+    """
+    r = q_abs.shape[-1]
+    rd = q_rope.shape[-1]
+    ps = latent_pages.shape[1]
+    dp = latent_pages.shape[2]
+    maxp = block_tables.shape[1]
+    if dp < r + rd:
+        raise ValueError(f"latent pool width {dp} < kv_lora_rank + rope_dim "
+                         f"= {r + rd}")
+    start = jnp.minimum(start, maxp * ps - 1)
+    span = jnp.clip(span, 0, q_abs.shape[2])
+    if not use_pallas:
+        return ref.paged_mla_chunk(q_abs, q_rope, latent_pages,
+                                   block_tables, start, span, latent_new,
+                                   r=r, scale=scale)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        sublane = 16 if latent_pages.dtype == jnp.bfloat16 else 8
+        if ps % sublane or dp % 128:
+            raise ValueError(
+                f"paged MLA layout (page_size={ps}, width={dp}, "
+                f"{latent_pages.dtype}) is not TPU-tileable: page_size must "
+                f"be a multiple of {sublane} and the pool width a multiple "
+                f"of 128 (init_cache pads it — was this pool built by hand?)")
+    qc = jnp.concatenate([q_abs.astype(jnp.float32),
+                          q_rope.astype(jnp.float32)], axis=-1)
+    return _pchunk.paged_mla_chunk(
+        qc, latent_pages, block_tables.astype(jnp.int32),
+        start.astype(jnp.int32), span.astype(jnp.int32),
+        latent_new.astype(latent_pages.dtype), r=r, scale=scale,
         interpret=not on_tpu)
 
 

@@ -1,0 +1,343 @@
+"""Pallas TPU kernels: chunked paged attention with a fused multi-slot write.
+
+The token-budget mixed serve step composes, per batch row, a query *span* —
+1 token for rows that are decoding, up to C tokens for rows whose prompt is
+being admitted chunk by chunk.  These kernels are the hot path of that step:
+
+  * **fused multi-slot KV write** — the span's K/V rows are DMA'd into their
+    page slots (pages ``bt[b, (start+j)//ps]``, slots ``(start+j) % ps``,
+    j < span) *before* the attend, so intra-span causality falls out of the
+    ordinary block-table walk: by the time query j reads a page, every key
+    at a position ≤ start+j is already resident.  A span may straddle page
+    boundaries — each token targets its own slot, ``-1`` table entries drop;
+  * **block-table walk over the cached prefix** — double-buffered page DMA
+    HBM→VMEM with split-K online softmax, exactly the decode kernel's
+    schedule, but carrying [group·C] query rows instead of [group];
+  * **causal intra-chunk masking** — query j masks columns > start + j (and
+    below the sliding window, when one applies), so one kernel serves spans
+    of any width: span 1 degenerates to the fused decode kernel.
+
+MHA variant: grid (B, Hkv), pools ``[P, Hkv, ps, D]``.  MLA-latent variant:
+grid (B,), pool ``[P, ps, Dp]`` storing concat([ckv; krope]) rows; queries
+arrive pre-absorbed (concat([q_abs; q_rope])) so both logits terms are one
+contraction, as in kernels/paged_mla_decode.py.
+
+The pools are ANY-space refs aliased input→output (in-place update on TPU).
+Alignment follows the decode kernels: ``page_size`` a multiple of the
+sublane count and the lane dim a multiple of 128 on real TPU; interpret
+mode runs any shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mha_kernel(bt_ref, start_ref, span_ref, q_ref, kn_ref, vn_ref,
+                kp_in, vp_in, o_ref, kp, vp, kbuf, vbuf, tokk, tokv,
+                ksem, vsem, wksem, wvsem, *, ps: int, c: int, scale: float,
+                window: int | None):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    start = start_ref[b]
+    span = span_ref[b]
+    kv_len = start + span                      # tokens resident after write
+    maxp = bt_ref.shape[1]
+    n_pages = jnp.minimum((jnp.maximum(kv_len, 1) + ps - 1) // ps, maxp)
+
+    # -- fused multi-slot write: span tokens -> their page slots ------------
+    # All valid copies start first (distinct slots, so order is free), then
+    # all are waited: the walk below reads the pages the span just wrote.
+    tokk[:, 0, 0, :] = kn_ref[0, 0]
+    tokv[:, 0, 0, :] = vn_ref[0, 0]
+
+    def _start_write(j, _):
+        pos = start + j
+        page_raw = bt_ref[b, jnp.minimum(pos // ps, maxp - 1)]
+        page_w = jnp.maximum(page_raw, 0)
+        slot_w = pos % ps
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            pltpu.make_async_copy(
+                tokk.at[pl.ds(j, 1)],
+                kp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+                wksem.at[j]).start()
+            pltpu.make_async_copy(
+                tokv.at[pl.ds(j, 1)],
+                vp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+                wvsem.at[j]).start()
+        return 0
+
+    def _wait_write(j, _):
+        pos = start + j
+        page_raw = bt_ref[b, jnp.minimum(pos // ps, maxp - 1)]
+        page_w = jnp.maximum(page_raw, 0)
+        slot_w = pos % ps
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            pltpu.make_async_copy(
+                tokk.at[pl.ds(j, 1)],
+                kp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+                wksem.at[j]).wait()
+            pltpu.make_async_copy(
+                tokv.at[pl.ds(j, 1)],
+                vp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+                wvsem.at[j]).wait()
+        return 0
+
+    jax.lax.fori_loop(0, c, _start_write, 0)
+    jax.lax.fori_loop(0, c, _wait_write, 0)
+
+    # -- split-K online softmax over the row's live pages -------------------
+    def page_dma(pool, buf, sem, i, slot):
+        pg = jnp.maximum(bt_ref[b, i], 0)
+        return pltpu.make_async_copy(
+            pool.at[pl.ds(pg, 1), pl.ds(h, 1)], buf.at[pl.ds(slot, 1)],
+            sem.at[slot])
+
+    page_dma(kp, kbuf, ksem, 0, 0).start()
+    page_dma(vp, vbuf, vsem, 0, 0).start()
+
+    q = q_ref[0].astype(jnp.float32)                   # [group, C, D]
+    group, _, d = q.shape
+    qf = q.reshape(group * c, d)
+    # Query row g*C + j carries intra-span offset j -> absolute start + j.
+    qpos = start + jax.lax.broadcasted_iota(jnp.int32, (group * c, ps), 0) % c
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < n_pages)
+        def _prefetch():
+            page_dma(kp, kbuf, ksem, i + 1, nxt).start()
+            page_dma(vp, vbuf, vsem, i + 1, nxt).start()
+
+        page_dma(kp, kbuf, ksem, i, slot).wait()
+        page_dma(vp, vbuf, vsem, i, slot).wait()
+        k = kbuf[slot, 0].astype(jnp.float32)          # [ps, D]
+        v = vbuf[slot, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qf, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [group*C, ps]
+        cols = i * ps + jax.lax.broadcasted_iota(jnp.int32, (group * c, ps), 1)
+        valid = cols <= qpos
+        if window is not None:
+            valid &= cols > qpos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((group * c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group * c,), jnp.float32)
+    a0 = jnp.zeros((group * c, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.reshape(group, c, d).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_chunk_attention(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, block_tables: jax.Array,
+                          start: jax.Array, span: jax.Array,
+                          k_new: jax.Array, v_new: jax.Array, *,
+                          scale: float, window: int | None = None,
+                          interpret: bool = False
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """q: [B, Hq, C, D]; k/v_pages: [P, Hkv, ps, D]; block_tables: i32[B,
+    maxp]; start/span: i32[B]; k/v_new: [B, Hkv, C, D] (pool dtype).
+    Returns (out [B, Hq, C, D], k_pages, v_pages) with the span written at
+    slots ``start..start+span`` (pools updated in place via aliasing)."""
+    b, hq, c, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    group = hq // hkv
+    grid = (b, hkv)
+
+    q_spec = pl.BlockSpec((1, group, c, d), lambda i, j, *_: (i, j, 0, 0))
+    tok_spec = pl.BlockSpec((1, 1, c, d), lambda i, j, *_: (i, j, 0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # block_tables, start, span
+        grid=grid,
+        in_specs=[q_spec, tok_spec, tok_spec, any_spec, any_spec],
+        out_specs=[q_spec, any_spec, any_spec],
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, ps, d), k_pages.dtype),   # k page double-buffer
+            pltpu.VMEM((2, 1, ps, d), v_pages.dtype),
+            pltpu.VMEM((c, 1, 1, d), k_pages.dtype),    # staged span writes
+            pltpu.VMEM((c, 1, 1, d), v_pages.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((c,)),
+            pltpu.SemaphoreType.DMA((c,)),
+        ],
+    )
+    kernel = functools.partial(_mha_kernel, ps=ps, c=c, scale=scale,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        # Input indices count the scalar-prefetch operands (0, 1, 2).
+        input_output_aliases={6: 1, 7: 2},
+        interpret=interpret,
+    )(block_tables, start, span, q, k_new, v_new, k_pages, v_pages)
+
+
+def _mla_kernel(bt_ref, start_ref, span_ref, q_ref, ln_ref, lp_in,
+                o_ref, lp, buf, tok, dsem, wsem, *, ps: int, c: int,
+                r: int, width: int, scale: float):
+    b = pl.program_id(0)
+    start = start_ref[b]
+    span = span_ref[b]
+    kv_len = start + span
+    maxp = bt_ref.shape[1]
+    n_pages = jnp.minimum((jnp.maximum(kv_len, 1) + ps - 1) // ps, maxp)
+
+    # -- fused multi-slot write: span latent rows -> their page slots -------
+    tok[:, 0, :] = ln_ref[0]
+
+    def _start_write(j, _):
+        pos = start + j
+        page_raw = bt_ref[b, jnp.minimum(pos // ps, maxp - 1)]
+        page_w = jnp.maximum(page_raw, 0)
+        slot_w = pos % ps
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            pltpu.make_async_copy(
+                tok.at[pl.ds(j, 1)],
+                lp.at[pl.ds(page_w, 1), pl.ds(slot_w, 1), :],
+                wsem.at[j]).start()
+        return 0
+
+    def _wait_write(j, _):
+        pos = start + j
+        page_raw = bt_ref[b, jnp.minimum(pos // ps, maxp - 1)]
+        page_w = jnp.maximum(page_raw, 0)
+        slot_w = pos % ps
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            pltpu.make_async_copy(
+                tok.at[pl.ds(j, 1)],
+                lp.at[pl.ds(page_w, 1), pl.ds(slot_w, 1), :],
+                wsem.at[j]).wait()
+        return 0
+
+    jax.lax.fori_loop(0, c, _start_write, 0)
+    jax.lax.fori_loop(0, c, _wait_write, 0)
+
+    # -- split-K online softmax over the row's live pages -------------------
+    def page_dma(i, slot):
+        pg = jnp.maximum(bt_ref[b, i], 0)
+        return pltpu.make_async_copy(
+            lp.at[pl.ds(pg, 1)], buf.at[pl.ds(slot, 1)], dsem.at[slot])
+
+    page_dma(0, 0).start()
+
+    q = q_ref[0].astype(jnp.float32)                   # [H, C, width]
+    h = q.shape[0]
+    qf = q.reshape(h * c, width)
+    qpos = start + jax.lax.broadcasted_iota(jnp.int32, (h * c, ps), 0) % c
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < n_pages)
+        def _prefetch():
+            page_dma(i + 1, nxt).start()
+
+        page_dma(i, slot).wait()
+        lat = buf[slot].astype(jnp.float32)            # [ps, Dp]
+        s = jax.lax.dot_general(
+            qf, lat[:, :width], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [H*C, ps]
+        cols = i * ps + jax.lax.broadcasted_iota(jnp.int32, (h * c, ps), 1)
+        s = jnp.where(cols <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, lat[:, :r], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [H*C, r]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((h * c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((h * c,), jnp.float32)
+    a0 = jnp.zeros((h * c, r), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.reshape(h, c, r).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r", "scale", "interpret"))
+def paged_mla_chunk(q: jax.Array, latent_pages: jax.Array,
+                    block_tables: jax.Array, start: jax.Array,
+                    span: jax.Array, latent_new: jax.Array, *, r: int,
+                    scale: float, interpret: bool = False
+                    ) -> tuple[jax.Array, jax.Array]:
+    """q: [B, H, C, width] absorbed queries concat([q_abs; q_rope]);
+    latent_pages: [P, ps, Dp] (Dp >= width, first r features are ckv);
+    block_tables: i32[B, maxp]; start/span: i32[B]; latent_new: [B, C, Dp].
+    Returns (ctx [B, H, C, r] f32, latent_pages) with the span's latent rows
+    written at slots ``start..start+span`` (pool updated in place)."""
+    b, h, c, width = q.shape
+    _, ps, dp = latent_pages.shape
+    grid = (b,)
+
+    q_spec = pl.BlockSpec((1, h, c, width), lambda i, *_: (i, 0, 0, 0))
+    tok_spec = pl.BlockSpec((1, c, dp), lambda i, *_: (i, 0, 0))
+    out_spec = pl.BlockSpec((1, h, c, r), lambda i, *_: (i, 0, 0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # block_tables, start, span
+        grid=grid,
+        in_specs=[q_spec, tok_spec, any_spec],
+        out_specs=[out_spec, any_spec],
+        scratch_shapes=[
+            pltpu.VMEM((2, ps, dp), latent_pages.dtype),     # double buffer
+            pltpu.VMEM((c, 1, dp), latent_pages.dtype),      # staged writes
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((c,)),
+        ],
+    )
+    kernel = functools.partial(_mla_kernel, ps=ps, c=c, r=r, width=width,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, c, r), jnp.float32),
+            jax.ShapeDtypeStruct(latent_pages.shape, latent_pages.dtype),
+        ],
+        # Input indices count the scalar-prefetch operands (0, 1, 2).
+        input_output_aliases={5: 1},
+        interpret=interpret,
+    )(block_tables, start, span, q, latent_new, latent_pages)

@@ -161,6 +161,111 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     return out.astype(q.dtype), k_pages, v_pages
 
 
+def paged_chunk_attention(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, block_tables: jax.Array,
+                          start: jax.Array, span: jax.Array,
+                          k_new: jax.Array, v_new: jax.Array,
+                          scale: float | None = None,
+                          window: int | None = None
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked mixed-step attention against a paged KV cache, writes included.
+
+    q: [B, Hq, C, D] per-row query spans; k_pages, v_pages: [P, Hkv, ps, D]
+    shared page pool; block_tables: i32[B, maxp]; start: i32[B] tokens
+    already cached per row; span: i32[B] valid new tokens in [0, C];
+    k_new, v_new: [B, Hkv, C, D] the span's K/V.
+
+    Semantics (the kernel contract): write the span's K/V into pages
+    ``block_tables[b, (start+j) // ps]`` slot ``(start+j) % ps`` for
+    j < span[b], then each query j attends over the row's ``start + j + 1``
+    live tokens (causal within the span, whole cached prefix before it).
+    Rows with span 0 write nothing and return garbage.  Because the span is
+    written *before* the attend, every query's math depends only on (query
+    position, cached prefix) — chunk partitioning cannot change the bits,
+    which is what makes chunked admission ≡ one-shot prefill.
+    """
+    b, hq, c, d = q.shape
+    num_pages, hkv, ps, _ = k_pages.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    maxp = block_tables.shape[1]
+
+    tpos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # [B, C]
+    pg = jnp.take_along_axis(block_tables,
+                             jnp.clip(tpos // ps, 0, maxp - 1), axis=1)
+    # Dropped writes are routed OUT OF BOUNDS (= num_pages): unallocated
+    # (-1) table entries, positions past the table, and chunk padding
+    # beyond each row's span.
+    pg = jnp.where(pg < 0, num_pages, pg)
+    pg = jnp.where(tpos < maxp * ps, pg, num_pages)
+    pg = jnp.where(jnp.arange(c)[None, :] < span[:, None], pg, num_pages)
+    slot = tpos % ps
+    k_bt = k_new.transpose(0, 2, 1, 3).astype(k_pages.dtype)  # [B, C, Hkv, D]
+    v_bt = v_new.transpose(0, 2, 1, 3).astype(v_pages.dtype)
+    k_pages = k_pages.at[pg, :, slot, :].set(k_bt, mode="drop")
+    v_pages = v_pages.at[pg, :, slot, :].set(v_bt, mode="drop")
+
+    safe_bt = jnp.maximum(block_tables, 0)
+    # [B, maxp, Hkv, ps, D] -> [B, Hkv, maxp*ps, D]
+    kg = jnp.moveaxis(k_pages[safe_bt], 2, 1).reshape(b, hkv, -1, d)
+    vg = jnp.moveaxis(v_pages[safe_bt], 2, 1).reshape(b, hkv, -1, d)
+    kb = _broadcast_kv(kg, hq)
+    vb = _broadcast_kv(vg, hq)
+    logits = jnp.einsum("bhcd,bhsd->bhcs", q.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+    cols = jnp.arange(kg.shape[2])[None, None, :]
+    valid = cols <= tpos[:, :, None]                    # causal to query pos
+    if window is not None:
+        valid &= cols > (tpos[:, :, None] - window)
+    logits = jnp.where(valid[:, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhcs,bhsd->bhcd", p, vb.astype(jnp.float32))
+    return out.astype(q.dtype), k_pages, v_pages
+
+
+def paged_mla_chunk(q_abs: jax.Array, q_rope: jax.Array,
+                    latent_pages: jax.Array, block_tables: jax.Array,
+                    start: jax.Array, span: jax.Array,
+                    latent_new: jax.Array, *, r: int, scale: float
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Chunked mixed-step MLA decode against a paged latent cache.
+
+    q_abs: [B, H, C, r] absorbed queries; q_rope: [B, H, C, rd];
+    latent_pages: [P, ps, Dp]; block_tables: i32[B, maxp]; start/span:
+    i32[B]; latent_new: [B, C, Dp].  Same write-then-attend contract as
+    ``paged_chunk_attention``, same absorbed-weight contractions as
+    ``paged_mla_decode`` (to which it degenerates at span == 1).
+    """
+    b, h, c, _ = q_abs.shape
+    num_pages, ps, dp = latent_pages.shape
+    rd = q_rope.shape[-1]
+    maxp = block_tables.shape[1]
+
+    tpos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    pg = jnp.take_along_axis(block_tables,
+                             jnp.clip(tpos // ps, 0, maxp - 1), axis=1)
+    pg = jnp.where(pg < 0, num_pages, pg)
+    pg = jnp.where(tpos < maxp * ps, pg, num_pages)
+    pg = jnp.where(jnp.arange(c)[None, :] < span[:, None], pg, num_pages)
+    slot = tpos % ps
+    latent_pages = latent_pages.at[pg, slot, :].set(
+        latent_new.astype(latent_pages.dtype), mode="drop")
+
+    safe_bt = jnp.maximum(block_tables, 0)
+    lg = latent_pages[safe_bt].reshape(b, -1, dp)        # [B, maxp*ps, Dp]
+    ckv_g = lg[..., :r]
+    krope_g = lg[..., r:r + rd]
+    logits = (jnp.einsum("bhcr,bsr->bhcs", q_abs, ckv_g,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhcr,bsr->bhcs", q_rope, krope_g,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(lg.shape[1])[None, None, :] <= tpos[:, :, None]
+    logits = jnp.where(valid[:, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhcs,bsr->bhcr", probs, ckv_g.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return ctx, latent_pages
+
+
 def paged_mla_decode(q_abs: jax.Array, q_rope: jax.Array,
                      latent_pages: jax.Array, block_tables: jax.Array,
                      pos: jax.Array, latent_new: jax.Array, *,

@@ -280,6 +280,63 @@ def prefill(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     return proj, new_cache
 
 
+def mixed_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+               start: jax.Array, span: jax.Array, positions: jax.Array,
+               impl: str = "ref") -> tuple[jax.Array, Params]:
+    """Per-row query spans against the cache (the mixed serve step).
+
+    x: [B, C, D]; start: i32[B] tokens already cached per row; span: i32[B]
+    valid new tokens in [0, C]; positions: i32[B, C] absolute positions
+    (start + intra-span offset).  The span's K/V is written into the cache
+    *before* the attend, so query j sees the whole cached prefix plus the
+    span's keys up to itself — span 1 is a decode step, span C a prompt
+    chunk, span 0 an idle row whose cache is untouched (output garbage).
+    """
+    b, c, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    scale = cfg.head_dim ** -0.5
+    if cache_mod.layout_of(cache) == "paged_mha":
+        out, k_pages, v_pages = kops.paged_chunk_attention(
+            q, cache["k_pages"], cache["v_pages"], cache["block_tables"],
+            start, span, k, v, scale=scale, window=cfg.window,
+            use_pallas=(impl == "pallas"))
+        return (common.dense(p["wo"], _merge_heads(out).astype(x.dtype)),
+                dict(cache, k_pages=k_pages, v_pages=v_pages))
+    s = cache["k"].shape[2]
+    # Dense cache: the mixed path assumes no ring wrap (S >= start + span) —
+    # lm.mixed_step rejects windowed/ring patterns up front.  Write the span
+    # via a position gather (slot p takes span token p - start when that
+    # offset lies in [0, span)), then attend with the same gathered-view
+    # masks as the paged oracle.
+    pidx = jnp.arange(s, dtype=jnp.int32)
+    off = pidx[None, :] - start[:, None]                         # [B, S]
+    wmask = (off >= 0) & (off < span[:, None])
+    gidx = jnp.clip(off, 0, c - 1)[:, None, :, None]
+    k_in = jnp.take_along_axis(
+        k.astype(cache["k"].dtype),
+        jnp.broadcast_to(gidx, (b, k.shape[1], s, k.shape[3])), axis=2)
+    v_in = jnp.take_along_axis(
+        v.astype(cache["v"].dtype),
+        jnp.broadcast_to(gidx, (b, v.shape[1], s, v.shape[3])), axis=2)
+    oh = wmask[:, None, :, None]
+    k_cache = jnp.where(oh, k_in, cache["k"])
+    v_cache = jnp.where(oh, v_in, cache["v"])
+    group = cfg.num_heads // cfg.num_kv_heads
+    kb = jnp.repeat(k_cache, group, axis=1)
+    vb = jnp.repeat(v_cache, group, axis=1)
+    logits = jnp.einsum("bhcd,bhsd->bhcs", q.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+    valid = pidx[None, None, :] <= positions[:, :, None]         # [B, C, S]
+    if cfg.window is not None:
+        valid &= pidx[None, None, :] > (positions[:, :, None] - cfg.window)
+    logits = jnp.where(valid[:, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhcs,bhsd->bhcd", probs, vb.astype(jnp.float32))
+    out = out.astype(x.dtype)
+    return (common.dense(p["wo"], _merge_heads(out)),
+            {"k": k_cache, "v": v_cache})
+
+
 def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
                 pos: jax.Array, impl: str = "ref") -> tuple[jax.Array, Params]:
     """One-token step.  x: [B, 1, D]; pos: i32[B] tokens already cached."""

@@ -117,12 +117,17 @@ def block_apply(kind: str, p: Params, cfg: ModelConfig, x: jax.Array,
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     decode = ctx.mode == "decode"
+    mixed = ctx.mode == "mixed"
 
     if kind in ("attn", "local", "moe"):
         h = _norm(p["norm1"], cfg, x)
         mask = ctx.mask_local if kind == "local" else ctx.mask_full
         local_cfg = cfg if kind == "local" else cfg.replace(window=None)
-        if decode:
+        if mixed:
+            a, cache = attention.mixed_step(p["attn"], local_cfg, h, cache,
+                                            ctx.pos, ctx.lengths,
+                                            ctx.positions, ctx.impl)
+        elif decode:
             a, cache = attention.decode_step(p["attn"], local_cfg, h, cache,
                                              ctx.pos, ctx.impl)
         elif cache is not None:
@@ -149,7 +154,10 @@ def block_apply(kind: str, p: Params, cfg: ModelConfig, x: jax.Array,
 
     if kind in ("mla", "mla_moe"):
         h = _norm(p["norm1"], cfg, x)
-        if decode:
+        if mixed:
+            a, cache = mla.mixed_step(p["attn"], cfg, h, cache, ctx.pos,
+                                      ctx.lengths, ctx.positions, ctx.impl)
+        elif decode:
             a, cache = mla.decode_step(p["attn"], cfg, h, cache, ctx.pos,
                                        ctx.impl)
         elif cache is not None:
@@ -170,13 +178,17 @@ def block_apply(kind: str, p: Params, cfg: ModelConfig, x: jax.Array,
             f = ffn.forward(p["ffn"], cfg, h2)
         return x + f, cache, aux
 
+    # Recurrent kinds: the mixed mode is exactly a ragged forward — masked
+    # state carry-through advances each row's state by its span, rows with
+    # span 0 keep their state bit-for-bit.
     if kind == "rglru":
         h = _norm(p["norm1"], cfg, x)
         if decode:
             r, cache = rglru.decode_step(p["rec"], cfg, h, cache, ctx.pos,
                                          ctx.impl)
         else:
-            r, cache = rglru.forward(p["rec"], cfg, h, cache, ctx.impl)
+            r, cache = rglru.forward(p["rec"], cfg, h, cache, ctx.impl,
+                                     lengths=ctx.lengths)
         x = x + r
         f = ffn.forward(p["ffn"], cfg, _norm(p["norm2"], cfg, x))
         return x + f, cache, aux
@@ -186,7 +198,8 @@ def block_apply(kind: str, p: Params, cfg: ModelConfig, x: jax.Array,
         if decode:
             y, cache = xlstm.slstm_decode(p["cell"], cfg, h, cache)
         else:
-            y, cache = xlstm.slstm_forward(p["cell"], cfg, h, cache)
+            y, cache = xlstm.slstm_forward(p["cell"], cfg, h, cache,
+                                           lengths=ctx.lengths)
         return x + y, cache, aux
 
     if kind == "mlstm":
@@ -194,7 +207,8 @@ def block_apply(kind: str, p: Params, cfg: ModelConfig, x: jax.Array,
         if decode:
             y, cache = xlstm.mlstm_decode(p["cell"], cfg, h, cache)
         else:
-            y, cache = xlstm.mlstm_forward(p["cell"], cfg, h, cache)
+            y, cache = xlstm.mlstm_forward(p["cell"], cfg, h, cache,
+                                           lengths=ctx.lengths)
         return x + y, cache, aux
 
     if kind == "xattn":

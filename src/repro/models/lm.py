@@ -319,12 +319,15 @@ def prefill(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
     admit new requests into freed rows while the others keep decoding.
     """
     if lengths is not None:
-        ragged_ok = {"attn", "local", "moe", "mla", "mla_moe"}
+        # Recurrent kinds ride ragged admission through masked state
+        # carry-through (padding steps are exact identities per row).
+        ragged_ok = {"attn", "local", "moe", "mla", "mla_moe",
+                     "rglru", "slstm", "mlstm"}
         kinds = set(cfg.block_pattern) | set(cfg.tail_blocks)
         if (kinds - ragged_ok or cfg.num_prefix_tokens or cfg.is_encdec):
             raise NotImplementedError(
-                f"ragged prefill supports attention-only decoders, got "
-                f"{cfg.block_pattern}")
+                f"ragged prefill supports decoder-only patterns without "
+                f"prefix/encoder inputs, got {cfg.block_pattern}")
     x = _embed(p, cfg, tokens)
     prefix_len = 0
     if cfg.num_prefix_tokens and prefix_embeds is not None:
@@ -356,3 +359,85 @@ def decode_step(p: Params, cfg: ModelConfig, token: jax.Array, cache: Params,
     x, cache, _ = _run_blocks(p, cfg, x, ctx, cache)
     x = common.apply_norm(p["final_norm"], x, cfg.norm_type, cfg.norm_eps)
     return _head(p, cfg, x)[:, 0], cache
+
+
+MIXED_OK = {"attn", "local", "moe", "mla", "mla_moe",
+            "rglru", "slstm", "mlstm"}
+
+
+def mixed_step(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
+               start: jax.Array, span: jax.Array, impl: str = "ref"
+               ) -> tuple[jax.Array, Params]:
+    """Token-budget mixed step: per-row query spans in one batched call.
+
+    tokens: i32[B, C] right-padded span tokens; start: i32[B] tokens already
+    cached per row; span: i32[B] valid new tokens in [0, C].  Row b runs a
+    span of ``span[b]`` queries at positions ``start[b] + [0, span[b])`` —
+    span 1 decodes one token, span C admits one prompt chunk, span 0 leaves
+    the row's cache bit-for-bit untouched.  Returns (logits [B, V] at each
+    row's last valid span position, cache); span-0 rows' logits are garbage.
+
+    Because every layer writes the span into the cache before attending,
+    a query's math depends only on (its position, the cached prefix) —
+    chunk partitioning cannot change the bits, which is what makes chunked
+    admission bit-for-bit equivalent to a one-shot prefill.
+    """
+    kinds = set(cfg.block_pattern) | set(cfg.tail_blocks)
+    if (kinds - MIXED_OK or cfg.num_prefix_tokens or cfg.is_encdec):
+        raise NotImplementedError(
+            f"mixed step supports decoder-only patterns without prefix or "
+            f"encoder inputs, got {cfg.block_pattern}")
+    if "local" in kinds and cfg.ring_local_cache and cfg.window:
+        # A ring cache wraps under multi-token spans: a later span token can
+        # overwrite a slot an earlier query's window still needs.  Windowed
+        # layers over an UNBOUNDED dense cache are fine (masking handles the
+        # window); only the ring layout is excluded.
+        raise NotImplementedError(
+            "mixed step over a ring local cache is unsupported — disable "
+            "ring_local_cache (dense windowed cache) to serve chunked")
+    b, c = tokens.shape
+    x = _embed(p, cfg, tokens)
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    ctx = BlockCtx(positions=positions, mask_full=None, mask_local=None,
+                   mode="mixed", pos=start, impl=impl, lengths=span)
+    x, cache, _ = _run_blocks(p, cfg, x, ctx, cache)
+    last = jnp.clip(span - 1, 0)[:, None, None]
+    x = jnp.take_along_axis(
+        x, jnp.broadcast_to(last, (b, 1, x.shape[2])), axis=1)
+    x = common.apply_norm(p["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    return _head(p, cfg, x)[:, 0], cache
+
+
+def reset_state_rows(cfg: ModelConfig, cache: Params, mask: jax.Array
+                     ) -> Params:
+    """Reset recurrent (state-layout) layers to fresh init for rows where
+    ``mask`` is True — a freed row must not leak its h/conv/cell state into
+    the next admitted request.  Attention caches need no reset: their writes
+    overwrite and their reads are position-bounded."""
+    mask = jnp.asarray(mask, bool)
+    batch = int(mask.shape[0])
+
+    def blend(kind, layer, stacked):
+        spec = cache_mod.spec_for(kind, cfg, batch, 1)
+        fresh = spec.init()
+
+        def one(f, o):
+            m = mask.reshape(((1,) if stacked else ()) + (batch,)
+                             + (1,) * (f.ndim - 1))
+            f = f.astype(o.dtype)
+            return jnp.where(m, f[None] if stacked else f, o)
+
+        return jax.tree.map(one, fresh, layer)
+
+    out: dict[str, Any] = {"groups": dict(cache["groups"])}
+    for i, kind in enumerate(cfg.block_pattern):
+        if cache_mod.layout_for(kind, cfg, paged=False) == "state":
+            out["groups"][str(i)] = blend(kind, cache["groups"][str(i)],
+                                          stacked=True)
+    if "tail" in cache:
+        out["tail"] = dict(cache["tail"])
+        for i, kind in enumerate(cfg.tail_blocks):
+            if cache_mod.layout_for(kind, cfg, paged=False) == "state":
+                out["tail"][str(i)] = blend(kind, cache["tail"][str(i)],
+                                            stacked=False)
+    return dict(cache, **out)

@@ -151,6 +151,71 @@ def prefill(p, cfg, x, cache, mask, positions, impl="ref", chunked=False,
     return y, {"ckv": new_ckv, "krope": new_krope}
 
 
+def mixed_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+               start: jax.Array, span: jax.Array, positions: jax.Array,
+               impl: str = "ref") -> tuple[jax.Array, Params]:
+    """Per-row query spans against the compressed cache (mixed serve step).
+
+    x: [B, C, d]; start/span: i32[B]; positions: i32[B, C].  Runs the
+    absorbed-weight contractions of ``decode_step`` for every query in the
+    span — one math for decode (span 1) and chunked admission (span C), so
+    chunk partitioning cannot change the bits.  The span's latent rows are
+    written before the attend (write-then-attend, causal intra-span).
+    """
+    m = cfg.mla
+    b, c, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _queries(p, cfg, x, positions)               # [B,H,C,*]
+    ckv_t, krope_t = _latents(p, cfg, x, positions)               # [B,C,*]
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_abs = jnp.einsum("bhcn,rhn->bhcr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    if cache_mod.layout_of(cache) == "paged_mla":
+        pool = cache["latent_pages"]
+        dp = pool.shape[-1]
+        lat_new = jnp.concatenate([ckv_t, krope_t], axis=-1)
+        lat_new = jnp.pad(lat_new, ((0, 0), (0, 0),
+                                    (0, dp - lat_new.shape[-1])))
+        ctx, pool = kops.paged_mla_chunk(
+            q_abs, q_rope, pool, cache["block_tables"], start, span,
+            lat_new, scale=scale, use_pallas=(impl == "pallas"))
+        new_cache = dict(cache, latent_pages=pool)
+    else:
+        # Dense latent cache: write the span via a position gather, then the
+        # same absorbed contractions over the full stream.
+        s = cache["ckv"].shape[1]
+        pidx = jnp.arange(s, dtype=jnp.int32)
+        off = pidx[None, :] - start[:, None]                     # [B, S]
+        wmask = ((off >= 0) & (off < span[:, None]))[..., None]
+        gidx = jnp.clip(off, 0, c - 1)[:, :, None]
+        ckv_in = jnp.take_along_axis(
+            ckv_t.astype(cache["ckv"].dtype),
+            jnp.broadcast_to(gidx, (b, s, ckv_t.shape[-1])), axis=1)
+        krope_in = jnp.take_along_axis(
+            krope_t.astype(cache["krope"].dtype),
+            jnp.broadcast_to(gidx, (b, s, krope_t.shape[-1])), axis=1)
+        ckv_c = jnp.where(wmask, ckv_in, cache["ckv"])
+        krope_c = jnp.where(wmask, krope_in, cache["krope"])
+        logits = (jnp.einsum("bhcr,bsr->bhcs", q_abs, ckv_c,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bhcr,bsr->bhcs", q_rope, krope_c,
+                               preferred_element_type=jnp.float32)) * scale
+        valid = pidx[None, None, :] <= positions[:, :, None]
+        logits = jnp.where(valid[:, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhcs,bsr->bhcr", probs,
+                         ckv_c.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        new_cache = {"ckv": ckv_c, "krope": krope_c}
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhcr,rhd->bhcd", ctx, w_uv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, h * m.v_head_dim)
+    return common.dense(p["w_o"], out.astype(x.dtype)), new_cache
+
+
 def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
                 pos: jax.Array, impl: str = "ref") -> tuple[jax.Array, Params]:
     """Absorbed-weight decode against the compressed cache.  x: [B,1,d]."""

@@ -7,7 +7,7 @@ the reason `long_500k` is runnable for this family.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,14 +69,40 @@ def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
 
 
 def forward(p: Params, cfg: ModelConfig, x: jax.Array,
-            cache: Params | None = None, impl: str = "ref"
+            cache: Params | None = None, impl: str = "ref",
+            lengths: Optional[jax.Array] = None
             ) -> tuple[jax.Array, Params | None]:
-    """Full-sequence path.  x: [B, T, d]."""
+    """Full-sequence path.  x: [B, T, d].
+
+    ``lengths`` (i32[B]) marks a ragged right-padded batch: padding steps
+    become exact identities (a_t = 1, b_t = 0, so h passes through
+    bit-for-bit) and the conv state advances by exactly ``lengths[b]``
+    tokens per row — rows with ``lengths[b] == 0`` keep their state
+    untouched.  This is what lets recurrent blocks ride ragged admission
+    and the mixed serve step's per-row spans.
+    """
     gate = jax.nn.gelu(common.dense(p["in_gate"], x))
     u = common.dense(p["in_rec"], x)
     conv_state = None if cache is None else cache["conv"]
-    u, new_conv = _causal_conv(p, u, conv_state)
-    a_t, b_t = _rglru_coeffs(p, u)
+    u_conv, new_conv = _causal_conv(p, u, conv_state)
+    if lengths is not None:
+        # The conv state must hold the last cw-1 *valid* inputs: gather them
+        # from concat([old_state; u]) at indices lengths + [0, cw-1) — for
+        # lengths == 0 that is exactly the old state.
+        cw = p["conv_w"].shape[0]
+        if cw > 1:
+            pad = (jnp.zeros((x.shape[0], cw - 1, u.shape[2]), u.dtype)
+                   if conv_state is None else conv_state.astype(u.dtype))
+            xp = jnp.concatenate([pad, u], axis=1)         # [B, cw-1+T, W]
+            idx = (lengths[:, None] + jnp.arange(cw - 1)[None, :])
+            new_conv = jnp.take_along_axis(
+                xp, idx[:, :, None].astype(jnp.int32), axis=1)
+    a_t, b_t = _rglru_coeffs(p, u_conv)
+    if lengths is not None:
+        valid = (jnp.arange(x.shape[1])[None, :]
+                 < lengths[:, None])[..., None]             # [B, T, 1]
+        a_t = jnp.where(valid, a_t, 1.0)                    # identity step
+        b_t = jnp.where(valid, b_t, 0.0)
     h0 = (jnp.zeros((x.shape[0], cfg.rglru_width), jnp.float32)
           if cache is None else cache["h"])
     h, h_last = kops.linear_scan(a_t, b_t, h0, use_pallas=(impl == "pallas"))

@@ -9,7 +9,7 @@ xlstm runs the `long_500k` shape for exactly this reason.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +18,15 @@ from repro.models import common
 from repro.models.config import ModelConfig
 
 Params = Any
+
+
+def _masked_state(valid_t: jax.Array, new: Params, old: Params) -> Params:
+    """Per-row select: rows where ``valid_t`` is False keep ``old`` exactly
+    (bit-for-bit) — the masked carry-through that lets the recurrent cells
+    ride ragged prefill and the mixed serve step's per-row spans."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            valid_t.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, old)
 
 # Chunked time scan: a flat lax.scan saves every per-step carry for the
 # backward pass — for mLSTM that is a [B, H, dh, dh] matrix PER TOKEN
@@ -91,19 +100,32 @@ def _slstm_cell(p, cfg, wx_t, state):
 
 
 def slstm_forward(p: Params, cfg: ModelConfig, x: jax.Array,
-                  state: Params | None = None
+                  state: Params | None = None,
+                  lengths: Optional[jax.Array] = None
                   ) -> tuple[jax.Array, Params | None]:
+    """``lengths`` (i32[B]): ragged right-padded batch — padding steps keep
+    each row's state bit-for-bit (rows with ``lengths[b] == 0`` untouched)."""
     b, t, d = x.shape
     keep_state = state is not None
     if state is None:
         state = slstm_state(cfg, b)
     wx = common.dense(p["w_in"], x)                              # [B,T,4d]
 
-    def step(s, wx_t):
-        s = _slstm_cell(p, cfg, wx_t, s)
-        return s, s["h"]
+    if lengths is None:
+        def step(s, wx_t):
+            s = _slstm_cell(p, cfg, wx_t, s)
+            return s, s["h"]
 
-    state, hs = _time_scan(step, state, jnp.moveaxis(wx, 1, 0))
+        state, hs = _time_scan(step, state, jnp.moveaxis(wx, 1, 0))
+    else:
+        valid = (jnp.arange(t)[:, None] < lengths[None, :])      # [T, B]
+
+        def step(s, inp):
+            wx_t, v_t = inp
+            s = _masked_state(v_t, _slstm_cell(p, cfg, wx_t, s), s)
+            return s, s["h"]
+
+        state, hs = _time_scan(step, state, (jnp.moveaxis(wx, 1, 0), valid))
     y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                   # [B,T,d]
     y = common.apply_norm(p["norm"], y, "rmsnorm", cfg.norm_eps)
     return common.dense(p["out"], y), (state if keep_state else None)
@@ -176,8 +198,11 @@ def _mlstm_qkvif(p, cfg, xu):
 
 
 def mlstm_forward(p: Params, cfg: ModelConfig, x: jax.Array,
-                  state: Params | None = None
+                  state: Params | None = None,
+                  lengths: Optional[jax.Array] = None
                   ) -> tuple[jax.Array, Params | None]:
+    """``lengths`` (i32[B]): ragged right-padded batch — padding steps keep
+    each row's state bit-for-bit (rows with ``lengths[b] == 0`` untouched)."""
     b, t, d = x.shape
     keep_state = state is not None
     if state is None:
@@ -186,12 +211,23 @@ def mlstm_forward(p: Params, cfg: ModelConfig, x: jax.Array,
     gate = jax.nn.silu(common.dense(p["up_gate"], x))
     q, k, v, i_p, f_p = _mlstm_qkvif(p, cfg, xu)
 
-    def step(s, inp):
-        q_t, k_t, v_t, ip_t, fp_t = inp
-        s, h_t = _mlstm_cell(s, q_t, k_t, v_t, ip_t, fp_t)
-        return s, h_t
+    if lengths is None:
+        def step(s, inp):
+            q_t, k_t, v_t, ip_t, fp_t = inp
+            s, h_t = _mlstm_cell(s, q_t, k_t, v_t, ip_t, fp_t)
+            return s, h_t
 
-    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (q, k, v, i_p, f_p))
+        xs = tuple(jnp.moveaxis(z, 1, 0) for z in (q, k, v, i_p, f_p))
+    else:
+        valid = (jnp.arange(t)[:, None] < lengths[None, :])      # [T, B]
+
+        def step(s, inp):
+            q_t, k_t, v_t, ip_t, fp_t, v_m = inp
+            s_new, h_t = _mlstm_cell(s, q_t, k_t, v_t, ip_t, fp_t)
+            return _masked_state(v_m, s_new, s), h_t
+
+        xs = tuple(jnp.moveaxis(z, 1, 0)
+                   for z in (q, k, v, i_p, f_p)) + (valid,)
     state, hs = _time_scan(step, state, xs)
     h = jnp.moveaxis(hs, 0, 1).reshape(b, t, -1).astype(x.dtype)
     h = common.apply_norm(p["norm"], h, "rmsnorm", cfg.norm_eps)

@@ -12,7 +12,7 @@ the collective playing the role of the paper's WebSocket relay.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Sequence
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,8 +60,9 @@ def make_prefill_fn(cfg: ModelConfig, *, impl: str = "ref"):
 def make_ragged_prefill_fn(cfg: ModelConfig, *, impl: str = "ref"):
     """(params, cache, tokens [B, P], lengths i32[B]) -> (logits, cache).
 
-    Rows with ``lengths[b] == 0`` keep their cache — the continuous-batching
-    scheduler uses this to prefill only freed rows while the rest decode.
+    Rows with ``lengths[b] == 0`` keep their cache.  This is the one-shot
+    oracle the mixed step is verified against — serving itself admits
+    prompts chunk by chunk through ``make_mixed_step_fn``.
     """
     def prefill_fn(params, cache, tokens, lengths):
         return lm.prefill(params, cfg, tokens, cache, impl=impl,
@@ -73,41 +74,63 @@ def make_ragged_prefill_fn(cfg: ModelConfig, *, impl: str = "ref"):
 PROMPT_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024)
 
 
-def bucket_len(n: int, buckets=PROMPT_BUCKETS) -> int:
-    """Smallest bucket >= n — bounds ragged-prefill recompiles."""
+def bucket_len(n: int, buckets=PROMPT_BUCKETS, max_len: Optional[int] = None
+               ) -> int:
+    """Smallest bucket >= n — bounds prefill recompiles.
+
+    ``max_len`` clamps: a prompt longer than the largest bucket still lands
+    (in one [B, max_len] call) as long as it fits the cache — the clamp is
+    applied BEFORE raising, so only prompts that genuinely cannot fit fail.
+    """
+    if max_len is not None and n > max_len:
+        raise ValueError(f"prompt length {n} exceeds max_len {max_len}")
     for b in buckets:
         if n <= b:
-            return b
+            return b if max_len is None else min(b, max_len)
+    if max_len is not None:
+        return max_len                # longer than every bucket, still fits
     raise ValueError(f"prompt length {n} exceeds largest bucket {buckets[-1]}")
 
 
-def ragged_prefill_batch(prefill_fn, params, cache, batch: int,
-                         prompts: dict[int, Sequence[int]],
-                         max_len: Optional[int] = None):
-    """Assemble + run one ragged prefill for ``{row: prompt_tokens}``.
+# ---------------------------------------------------------------------------
+# Token-budget mixed step (chunked prefill fused with decode)
+# ---------------------------------------------------------------------------
 
-    Pads every listed prompt into a right-padded [batch, bucket] matrix
-    (bucket clamped to ``max_len`` so a padded batch never outruns the
-    cache), zero length for unlisted rows.  Returns (logits, lengths
-    np.i32[batch], cache); callers pick each row's first token from the
-    logits (argmax or sampled).
+def make_mixed_step_fn(cfg: ModelConfig, *, impl: str = "ref",
+                       temperature: float = 0.0):
+    """(params, cache, tokens [B, C], start [B], span [B], rng)
+    -> (next_token [B], cache).
+
+    One call spends every row's span — 1 token for decoding rows, a prompt
+    chunk for rows being admitted, 0 for idle rows — so admission never
+    stalls decode.  ``next_token`` is sampled from each row's last valid
+    span position (garbage for span-0 rows; callers ignore it).
     """
-    longest = max(len(p) for p in prompts.values())
-    bucket = bucket_len(longest)
-    if max_len is not None:
-        bucket = min(bucket, max_len)
-        if longest > bucket:
-            raise ValueError(
-                f"prompt of {longest} tokens cannot prefill into a cache of "
-                f"max_len {max_len}")
-    toks = np.zeros((batch, bucket), np.int32)
-    lens = np.zeros((batch,), np.int32)
-    for row, p in prompts.items():
-        toks[row, :len(p)] = p
-        lens[row] = len(p)
-    logits, cache = prefill_fn(params, cache, jnp.asarray(toks),
-                               jnp.asarray(lens))
-    return logits, lens, cache
+    def mixed_step(params, cache, tokens, start, span, rng):
+        logits, cache = lm.mixed_step(params, cfg, tokens, cache, start,
+                                      span, impl=impl)
+        nxt = sample_token(logits, rng, temperature)
+        return nxt, cache
+
+    return mixed_step
+
+
+def width_bucket(n: int, chunk: int) -> int:
+    """Smallest power-of-two >= n, clamped to ``chunk`` — the mixed step
+    compiles once per bucketed span width instead of once per width."""
+    n = max(1, min(n, chunk))
+    return min(1 << (n - 1).bit_length(), chunk)
+
+
+def mixed_width_buckets(chunk: int) -> tuple[int, ...]:
+    """Every width ``width_bucket`` can produce for spans in [1, chunk]."""
+    out = []
+    w = 1
+    while w < chunk:
+        out.append(w)
+        w <<= 1
+    out.append(chunk)
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------

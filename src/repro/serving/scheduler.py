@@ -1,37 +1,46 @@
-"""Continuous batching over the paged KV cache: admission, page accounting,
-copy-on-write prefix sharing, and completion at token granularity.
+"""Continuous batching over the paged KV cache: token-budget mixed steps,
+chunk-granular page accounting, copy-on-write prefix sharing, and completion
+at token granularity.
 
 The scheduler owns a fixed decode batch of B rows backed by a shared page
-pool.  Requests queue up; whenever a row is free and the allocator can
-reserve the pages the *prompt* needs (generation pages are allocated
-incrementally as decode crosses page boundaries — not up front), the request
-is admitted by a *ragged prefill* — one jitted call whose ``lengths`` vector
-is zero for every other row, so in-flight rows keep decoding from
-bit-identical cache while the new row's prompt lands in its pages.  On
-completion the row's pages are released immediately (memory scales with live
-tokens, not B × max_len).
+pool.  Every iteration is ONE **token-budget mixed step**: it composes a
+batch of per-row query spans — span 1 for rows that are decoding, span ≤
+``chunk_size`` for rows whose prompt is being admitted through a per-request
+*prompt cursor*, span 0 for idle rows — and lands them all in a single
+jitted call (``engine.make_mixed_step_fn``).  Admission therefore never
+stalls decode: while one row's prompt streams in chunk by chunk, every other
+row keeps emitting a token per step.  ``token_budget`` caps the total new
+tokens a step may spend (decode rows are funded first; prefill chunks take
+what remains), trading time-to-first-token against inter-token latency.
+
+Page reservation is **chunk-granular**: admission reserves only the pages
+the first chunk needs (plus any prefix-shared pages, refcounted); later
+chunks allocate their pages as the cursor crosses page boundaries — the same
+incremental-growth walk decode rows use.  On completion the row's pages are
+released immediately (memory scales with live tokens, not B × max_len).
 
 Prefix sharing (``prefix_sharing=True``): rows admitted with an identical
-prompt share the prompt's pages (refcounted, copy-on-write).  Full prefix
-pages are shared through a longest-prefix chain; the partial boundary page
-is shared on an exact-prompt match and duplicated (copy-then-remap) the
-moment a sharer is about to write into it — agents forked from the same
-CodeCRDT prompt pay for one copy of the prompt KV, not fan-out copies.
+prompt share the prompt's pages (refcounted, copy-on-write).  A row's writes
+below its shared-prefix match (``safe_upto``) land identical bytes and need
+no copy; the first divergent write into a still-shared page (the first
+generated token in a shared boundary page) duplicates it copy-then-remap.
 
-When incremental growth finds the pool empty, the least-recently-allocating
-row is preempted: its pages are released and the request re-queued at the
-front with its generated tokens folded into the prompt (preemption by
-recomputation — the re-admission prefill replays prompt + generated and
-decoding continues where it stopped).
+When growth finds the pool empty, the least-recently-allocating row is
+preempted: pages released, request re-queued at the front with generated
+tokens folded into its context (preemption by recomputation), its span this
+step zeroed.
 
-Freed rows still ride the batched decode step (there is no dynamic batch
-shape under jit).  Their writes are steered to a dedicated trash page —
-never allocated to real rows — because the fused kernel writes one slot per
-row per step unconditionally; block tables therefore never contain -1 for a
-slot that will be written.
+Idle rows still ride the batched mixed step (no dynamic batch shape under
+jit) with span 0 — a span-0 row writes nothing, so its block table can stay
+parked on the trash page indefinitely.
 
-Dense mode (``paged=False``) runs the same admission logic against the
-classic [B, Hkv, S, D] cache — the benchmark's apples-to-apples baseline.
+Dense mode (``paged=False``) runs the same composer against the classic
+[B, Hkv, S, D] cache — the benchmark's apples-to-apples baseline.
+
+``prefill_interleave=False`` is the *stalled-admission* baseline the bench
+sweeps against: admission chunks run whole-prompt and decode rows get span 0
+while any prompt is in flight — the old bucketed-admission behaviour,
+measured by ``decode_stall_steps`` / ``stalled_lane_steps``.
 """
 from __future__ import annotations
 
@@ -205,8 +214,19 @@ class PrefixCache:
                 pages.append(page)
         return pages
 
+    def lookup_page(self, tokens: list[int], widx: int) -> Optional[int]:
+        """Resident page for context page ``widx`` of ``tokens`` (exact
+        prefix key), or None — O(prefix), for the growth-time re-share."""
+        ps = self.page_size
+        if (widx + 1) * ps <= len(tokens):
+            return self._get(self._chain, tuple(tokens[:(widx + 1) * ps]))
+        if len(tokens) % ps and widx == len(tokens) // ps:
+            return self._get(self._boundary, tuple(tokens))
+        return None
+
     def register(self, tokens: list[int], pages: list[int]) -> None:
-        """Index a row's freshly prefilled prompt pages."""
+        """Index a row's (so far) prefilled prompt pages — safe to call
+        again as chunked admission maps more of the prompt."""
         ps = self.page_size
         n_full = len(tokens) // ps
         for k in range(1, min(n_full, len(pages)) + 1):
@@ -219,6 +239,23 @@ class PrefixCache:
             if self._get(self._boundary, key) is None:
                 self._put(self._boundary, key, pages[npages - 1])
 
+    def register_tail(self, tokens: list[int], pages: list[int]) -> None:
+        """Index only the LAST page in ``pages`` (the page growth just
+        mapped) — O(prefix) key material instead of re-keying every
+        earlier page on every growth step."""
+        ps = self.page_size
+        k = len(pages)                    # pages cover prefix pages [0, k)
+        if k == 0:
+            return
+        if k * ps <= len(tokens):         # page k-1 is full
+            key = tuple(tokens[:k * ps])
+            if self._get(self._chain, key) is None:
+                self._put(self._chain, key, pages[k - 1])
+        elif len(tokens) % ps and k == -(-len(tokens) // ps):
+            key = tuple(tokens)           # the partial boundary page
+            if self._get(self._boundary, key) is None:
+                self._put(self._boundary, key, pages[k - 1])
+
 
 @dataclass
 class Request:
@@ -228,14 +265,23 @@ class Request:
     eos_id: Optional[int] = None
     tokens: list[int] = field(default_factory=list)   # generated output
     admitted_step: int = -1
+    first_token_step: int = -1        # step that emitted the first token
     finished_step: int = -1
     pages: list[int] = field(default_factory=list)
+    filled: int = 0                   # prompt cursor: context tokens cached
+    admit_len: int = 0                # admission target: len(context) at bind
+    safe_upto: int = 0                # writes below this match shared bytes
 
     @property
     def context(self) -> list[int]:
-        """Tokens the next prefill must cover (prompt + generated so far —
+        """Tokens the next admission must cover (prompt + generated so far —
         nonempty generated means the request was preempted and resumed)."""
         return self.prompt + self.tokens
+
+    @property
+    def admitting(self) -> bool:
+        """Still streaming its admission context in (vs decoding)."""
+        return self.filled < self.admit_len
 
 
 class ContinuousBatchingEngine:
@@ -245,7 +291,9 @@ class ContinuousBatchingEngine:
                  max_len: int, paged: bool = True, page_size: int = 64,
                  num_pages: Optional[int] = None, impl: str = "ref",
                  temperature: float = 0.0, seed: int = 0,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False, chunk_size: int = 32,
+                 token_budget: Optional[int] = None,
+                 prefill_interleave: bool = True):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -254,6 +302,10 @@ class ContinuousBatchingEngine:
         self.page_size = page_size
         self.temperature = temperature
         self.prefix_sharing = prefix_sharing and paged
+        self.chunk_size = max(1, min(chunk_size, max_len))
+        self.token_budget = (max(1, token_budget)
+                             if token_budget is not None else None)
+        self.prefill_interleave = prefill_interleave
         self.maxp = -(-max_len // page_size)
         if paged:
             if num_pages is None:
@@ -273,45 +325,50 @@ class ContinuousBatchingEngine:
             self.allocator = None
             self.prefix_cache = None
             self.cache = lm.init_cache(cfg, batch, max_len)
-        self._prefill = jax.jit(
-            engine_mod.make_ragged_prefill_fn(cfg, impl=impl),
+        self._mixed = jax.jit(
+            engine_mod.make_mixed_step_fn(cfg, impl=impl,
+                                          temperature=temperature),
             donate_argnums=(1,))
-        self._step = jax.jit(
-            engine_mod.make_serve_step(cfg, impl=impl,
-                                       temperature=temperature),
-            donate_argnums=(1,))
+        self._has_state = any(
+            cache_mod.layout_for(k, cfg, paged=False) == "state"
+            for k in tuple(cfg.block_pattern) + tuple(cfg.tail_blocks))
+        if self._has_state:
+            self._reset_state = jax.jit(
+                lambda c, m: lm.reset_state_rows(cfg, c, m),
+                donate_argnums=(0,))
         self.rng = jax.random.PRNGKey(seed)
-        self.pos = jnp.zeros((batch,), jnp.int32)
-        # Host mirror of pos, refreshed at the one mandatory post-step sync;
-        # the pre-step growth/COW walk must not force its own device sync.
-        self._host_pos = np.zeros((batch,), np.int32)
-        self.token = jnp.zeros((batch,), jnp.int32)
+        # Positions are host-owned: the mixed step takes (start, span) as
+        # inputs and never returns pos, so there is no per-step host→device
+        # pos upload to skip NOR a post-step pos sync — the old scheduler
+        # paid both.  The one remaining sync is reading the sampled tokens.
+        self.row_pos = np.zeros((batch,), np.int64)   # tokens cached per row
+        self.token = np.zeros((batch,), np.int64)     # last sampled token
         self.rows: list[Optional[Request]] = [None] * batch
         self.queue: deque[Request] = deque()
         self._bt_dirty = False
         self._last_alloc = [0] * batch        # LRU clock for preemption
         self._cow_src: list[int] = []         # COW pairs pending this step
         self._cow_dst: list[int] = []
-        self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
-                      "completed": 0, "peak_pages": 0, "gen_tokens": 0,
+        self._dev_memo: dict[str, tuple[np.ndarray, jax.Array]] = {}
+        self.stats = {"steps": 0, "prefills": 0, "prefill_chunks": 0,
+                      "admitted": 0, "completed": 0, "peak_pages": 0,
+                      "gen_tokens": 0, "prefill_tokens": 0,
                       "shared_pages": 0, "cow_copies": 0, "preemptions": 0,
-                      "grown_pages": 0, "admit_s": 0.0}
+                      "grown_pages": 0, "admit_s": 0.0,
+                      "decode_stall_steps": 0, "stalled_lane_steps": 0}
 
     # -- request lifecycle --------------------------------------------------
 
     def submit(self, req: Request) -> None:
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid}: max_new_tokens must be "
-                             ">= 1 (prefill always yields one token)")
+                             ">= 1 (admission always yields one token)")
         if not req.prompt:
             raise ValueError(f"request {req.rid}: empty prompt")
         if len(req.prompt) + req.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.rid} needs "
                              f"{len(req.prompt) + req.max_new_tokens} slots "
                              f"> max_len {self.max_len}")
-        # Fail here, not mid-run inside admit(): the prompt must fit a
-        # prefill bucket (buckets are clamped to max_len at admission).
-        bucket_len(len(req.prompt))
         if self.paged:
             worst = -(-(len(req.prompt) + req.max_new_tokens)
                       // self.page_size)
@@ -330,6 +387,7 @@ class ContinuousBatchingEngine:
         self.stats["completed"] += 1
         self._release_row(row)
         self.rows[row] = None
+        self.row_pos[row] = 0
 
     def _release_row(self, row: int) -> None:
         req = self.rows[row]
@@ -346,83 +404,79 @@ class ContinuousBatchingEngine:
                                              jnp.asarray(self.host_bt))
             self._bt_dirty = False
 
-    def admit(self) -> int:
-        """Admit queued requests into free rows (one ragged prefill call).
+    def _chunk_pages(self, n_tokens: int) -> int:
+        """Pages covering context positions [0, n_tokens)."""
+        return -(-n_tokens // self.page_size)
 
-        Two-phase: pages are *reserved* per candidate first (reservation
-        removes them from the free list, so candidates later in the loop
-        see the true availability — no double admission), then the batch
-        prefill lands every accepted prompt at once.  Head-of-line blocking
-        on page budget is deliberate: FIFO completion-time fairness.
+    def admit(self) -> int:
+        """Bind queued requests to free rows (chunk-granular reservation).
+
+        Two-phase: pages for each candidate's FIRST chunk are *reserved*
+        (reservation removes them from the free list, so candidates later in
+        the loop see the true availability — no double admission); later
+        chunks and generation pages allocate incrementally as the prompt
+        cursor advances.  No prefill happens here — the next mixed steps
+        stream the prompt in.  Head-of-line blocking on page budget is
+        deliberate: FIFO completion-time fairness.
         """
         t0 = time.perf_counter()
-        pending: list[tuple[int, Request]] = []
+        admitted = 0
+        reset_rows: list[int] = []
         for row in range(self.batch):
             if self.rows[row] is not None or not self.queue:
                 continue
             req = self.queue[0]
+            ctx = req.context
             if self.paged:
-                ctx = req.context
-                npages = -(-len(ctx) // self.page_size)
+                first = min(self.chunk_size, len(ctx)) \
+                    if self.prefill_interleave else len(ctx)
+                npages_ctx = self._chunk_pages(len(ctx))
                 shared: list[int] = []
                 if self.prefix_sharing:
-                    shared = self.prefix_cache.lookup(ctx)[:npages]
-                res = self.allocator.reserve(npages - len(shared))
+                    shared = self.prefix_cache.lookup(ctx)[:npages_ctx]
+                need = max(0, self._chunk_pages(first) - len(shared))
+                res = self.allocator.reserve(need)
                 if res is None:
                     break                      # wait for completions
                 if shared:
                     self.allocator.share(shared)
                     self.stats["shared_pages"] += len(shared)
                 req.pages = shared + res.take()
+                req.safe_upto = min(len(shared) * self.page_size, len(ctx))
                 self.host_bt[row, :] = self.trash_page
                 self.host_bt[row, :len(req.pages)] = req.pages
                 self._bt_dirty = True
                 self._last_alloc[row] = self.stats["steps"]
                 if self.prefix_sharing and not req.tokens:
-                    # Register at reservation time, not after the prefill:
-                    # fan-out clones admitted in the SAME batch then share
-                    # these pages, and the one ragged prefill writes the
-                    # identical prompt KV into them once per slot.
+                    # Register at reservation time: fan-out clones admitted
+                    # while this prompt is still streaming in share these
+                    # pages, and the chunked writes land the identical
+                    # prompt KV once per slot.  The registrant's own prompt
+                    # writes are identical-by-construction as well (sharers
+                    # match on exact tokens), so its safe region is the
+                    # whole prompt — only generated-token writes diverge.
                     self.prefix_cache.register(req.prompt, req.pages)
+                    req.safe_upto = max(req.safe_upto, len(req.prompt))
             self.queue.popleft()
             self.rows[row] = req
+            req.filled = 0
+            req.admit_len = len(ctx)
             req.admitted_step = self.stats["steps"]
-            pending.append((row, req))
-        if not pending:
-            self.stats["admit_s"] += time.perf_counter() - t0
-            return 0
-
-        if self.paged:
-            self._push_tables()
-            self._note_peak()
-        # Context lengths BEFORE the first sampled token is appended: pos is
-        # the number of tokens already cached, and the sampled token is only
-        # written by the next decode step.
-        ctx_len = {row: len(req.context) for row, req in pending}
-        logits, _, self.cache = engine_mod.ragged_prefill_batch(
-            self._prefill, self.params, self.cache, self.batch,
-            {row: req.context for row, req in pending},
-            max_len=self.max_len)
-        self.rng, sub = jax.random.split(self.rng)
-        first = np.asarray(engine_mod.sample_token(logits, sub,
-                                                   self.temperature))
-        token = np.array(self.token)           # writable host copies
-        pos = self._host_pos
-        for row, req in pending:
-            req.tokens.append(int(first[row]))
-            self.stats["gen_tokens"] += 1
-            token[row] = int(first[row])
-            pos[row] = ctx_len[row]
-        self.token = jnp.asarray(token)
-        self.pos = jnp.asarray(pos)
-        self.stats["prefills"] += 1
-        self.stats["admitted"] += len(pending)
-        # A request can complete at its very first token (max_new == 1).
-        for row, req in pending:
-            if self._done(req):
-                self._free_row(row)
+            self.row_pos[row] = 0
+            reset_rows.append(row)
+            admitted += 1
+        if admitted:
+            if self._has_state:
+                # A freed row's recurrent state must not leak into the next
+                # request: blend fresh init into the admitted rows.
+                mask = np.zeros((self.batch,), bool)
+                mask[reset_rows] = True
+                self.cache = self._reset_state(self.cache, jnp.asarray(mask))
+            self.stats["admitted"] += admitted
+            if self.paged:
+                self._note_peak()
         self.stats["admit_s"] += time.perf_counter() - t0
-        return len(pending)
+        return admitted
 
     def _done(self, req: Request) -> bool:
         return (len(req.tokens) >= req.max_new_tokens
@@ -432,7 +486,7 @@ class ContinuousBatchingEngine:
 
     # -- incremental growth / COW / preemption ------------------------------
 
-    def _preempt_for_pages(self, needy_row: int) -> bool:
+    def _preempt_for_pages(self, needy_row: int, spans: np.ndarray) -> bool:
         """Evict the least-recently-allocating other row (recomputation)."""
         victims = [r for r in range(self.batch)
                    if r != needy_row and self.rows[r] is not None]
@@ -452,98 +506,236 @@ class ContinuousBatchingEngine:
         self._release_row(victim)
         self.rows[victim] = None
         self.queue.appendleft(req)             # resumes with context intact
-        self._host_pos[victim] = 0
-        self.pos = jnp.asarray(self._host_pos)
+        self.row_pos[victim] = 0
+        spans[victim] = 0                      # no span for the evicted row
         self.stats["preemptions"] += 1
         return True
 
-    def _alloc_one(self, row: int) -> int:
+    def _alloc_one(self, row: int, spans: np.ndarray) -> int:
         while True:
             pages = self.allocator.alloc(1)
             if pages is not None:
                 self._last_alloc[row] = self.stats["steps"]
                 return pages[0]
-            if not self._preempt_for_pages(row):
+            if not self._preempt_for_pages(row, spans):
                 raise RuntimeError(
                     f"page pool exhausted ({self.allocator.num_pages} pages)"
                     " with no preemptable row — pool too small for one "
                     "request")
 
-    def _grow_and_cow(self) -> None:
-        """Before a decode step: every active row must own, privately, the
-        page its next token lands in.  Crossing into an unallocated page
-        allocates one (incremental growth); a page shared with other rows
-        or the prefix cache is duplicated and remapped (copy-on-write)."""
-        pos = self._host_pos
+    def _ensure_pages(self, spans: np.ndarray) -> None:
+        """Before the mixed step: every row must own, privately, each page
+        its span will write.  Crossing into an unallocated page allocates
+        one (chunk-granular growth); a page shared with other rows or the
+        prefix cache is duplicated and remapped (copy-on-write) — unless
+        every position written into it lies below the row's shared-prefix
+        match (``safe_upto``), where the bytes are identical by
+        construction and a copy would only waste a page."""
         self._cow_src = []
         self._cow_dst = []
         for row in range(self.batch):
             req = self.rows[row]
-            if req is None:
+            if req is None or spans[row] == 0:
                 continue
-            widx = int(pos[row]) // self.page_size
-            if widx >= self.maxp:
-                continue                       # clamped write; cannot grow
-            page = int(self.host_bt[row, widx])
-            if page == self.trash_page:
-                new = self._alloc_one(row)
-                self.host_bt[row, widx] = new
-                req.pages.append(new)
-                self._bt_dirty = True
-                self.stats["grown_pages"] += 1
-            elif self.allocator.refcount(page) > 1:
-                new = self._alloc_one(row)
-                self._cow_src.append(page)
-                self._cow_dst.append(new)
-                self.host_bt[row, widx] = new
-                req.pages[req.pages.index(page)] = new
-                self.allocator.free([page])    # drop our shared reference
-                self._bt_dirty = True
-                self.stats["cow_copies"] += 1
+            w0 = int(self.row_pos[row])
+            w1 = w0 + int(spans[row])          # writes cover [w0, w1)
+            for widx in range(w0 // self.page_size,
+                              (w1 - 1) // self.page_size + 1):
+                if widx >= self.maxp:
+                    continue                   # clamped write; cannot grow
+                if self.rows[row] is not req:
+                    break                      # row was preempted mid-walk
+                page = int(self.host_bt[row, widx])
+                lo = max(w0, widx * self.page_size)
+                hi = min(w1, (widx + 1) * self.page_size)
+                if page == self.trash_page:
+                    if self.prefix_sharing and req.admitting:
+                        # Growth-time re-share: a later chunk whose page is
+                        # already resident for the identical context prefix
+                        # (a concurrent clone, or a survivor of the same
+                        # fan-out) aliases it instead of allocating — the
+                        # writes it would land there are identical bytes.
+                        pg = self.prefix_cache.lookup_page(req.context,
+                                                           widx)
+                        if pg is not None:
+                            self.allocator.share([pg])
+                            self.host_bt[row, widx] = pg
+                            req.pages.append(pg)
+                            self._bt_dirty = True
+                            self.stats["shared_pages"] += 1
+                            req.safe_upto = max(
+                                req.safe_upto,
+                                min((widx + 1) * self.page_size,
+                                    len(req.context)))
+                            continue
+                    new = self._alloc_one(row, spans)
+                    if self.rows[row] is not req:
+                        self.allocator.free([new])
+                        break
+                    self.host_bt[row, widx] = new
+                    req.pages.append(new)
+                    self._bt_dirty = True
+                    self.stats["grown_pages"] += 1
+                    if (self.prefix_sharing and req.admitting
+                            and not req.tokens):
+                        # Index the freshly grown prompt page immediately so
+                        # clones growing later in this same pass share it.
+                        self.prefix_cache.register_tail(req.prompt,
+                                                        req.pages)
+                elif (self.allocator.refcount(page) > 1
+                        and max(lo, req.safe_upto) < hi):
+                    new = self._alloc_one(row, spans)
+                    if self.rows[row] is not req:
+                        self.allocator.free([new])
+                        break
+                    self._cow_src.append(page)
+                    self._cow_dst.append(new)
+                    self.host_bt[row, widx] = new
+                    req.pages[req.pages.index(page)] = new
+                    self.allocator.free([page])  # drop our shared reference
+                    self._bt_dirty = True
+                    self.stats["cow_copies"] += 1
         if self._cow_src:
             # Pad to the fixed batch width (-1 lanes drop in copy_pages):
             # at most one COW per row per step, and a constant shape keeps
             # the whole-cache scatter compiled once instead of per count.
-            pad = self.batch - len(self._cow_src)
+            pad = max(0, self.batch - len(self._cow_src))
             src = np.asarray(self._cow_src + [-1] * pad, np.int32)
             dst = np.asarray(self._cow_dst + [-1] * pad, np.int32)
             self.cache = self._copy_pages(self.cache, jnp.asarray(src),
                                           jnp.asarray(dst))
         self._cow_src = []
         self._cow_dst = []
-        if self.paged:
-            self._note_peak()
-            self._push_tables()
+        self._note_peak()
+        self._push_tables()
+
+    # -- token-budget composer + mixed step ---------------------------------
+
+    def _compose(self) -> np.ndarray:
+        """Per-row spans for this step: decode rows are funded first (one
+        token each), then prompt chunks split the remaining budget.  Under
+        a constraining budget, funding order rotates with the step counter
+        so no fixed row index is starved indefinitely."""
+        spans = np.zeros((self.batch,), np.int64)
+        rot = self.stats["steps"] % self.batch
+        order = sorted(range(self.batch),
+                       key=lambda r: (r - rot) % self.batch)
+        decoding = [r for r in order
+                    if self.rows[r] is not None
+                    and not self.rows[r].admitting]
+        admitting = [r for r in order
+                     if self.rows[r] is not None and self.rows[r].admitting]
+        budget = self.token_budget if self.token_budget is not None \
+            else self.batch * self.chunk_size
+        if admitting and not self.prefill_interleave:
+            # Stalled-admission baseline: prompts land whole, decode lanes
+            # idle while any admission is in flight (the pre-mixed-step
+            # behaviour the bench quantifies).
+            if decoding:
+                self.stats["decode_stall_steps"] += 1
+                self.stats["stalled_lane_steps"] += len(decoding)
+            for r in admitting:
+                req = self.rows[r]
+                spans[r] = req.admit_len - req.filled
+            return spans
+        starved = 0
+        for r in decoding:
+            if budget <= 0:
+                starved += 1
+                continue
+            spans[r] = 1
+            budget -= 1
+        if starved:
+            # Same unit as the stalled baseline: a step counts once however
+            # many lanes it starves; the lane total rides the second counter.
+            self.stats["decode_stall_steps"] += 1
+            self.stats["stalled_lane_steps"] += starved
+        for r in admitting:
+            if budget <= 0:
+                break
+            req = self.rows[r]
+            take = min(self.chunk_size, req.admit_len - req.filled, budget)
+            spans[r] = take
+            budget -= take
+        return spans
+
+    def _to_dev(self, name: str, arr: np.ndarray) -> jax.Array:
+        """Upload ``arr`` unless it is unchanged since the last step — the
+        drained/idle steady state then reuses the resident device buffer
+        instead of re-transferring identical bytes."""
+        memo = self._dev_memo.get(name)
+        if memo is not None and np.array_equal(memo[0], arr):
+            return memo[1]
+        dev = jnp.asarray(arr)
+        self._dev_memo[name] = (arr.copy(), dev)
+        return dev
 
     # -- decode loop --------------------------------------------------------
 
     def step(self) -> bool:
-        """One batched decode step.  Returns False when fully drained."""
+        """One token-budget mixed step.  Returns False when fully drained."""
         self.admit()
         if all(r is None for r in self.rows):
             return bool(self.queue)
+        spans = self._compose()
         if self.paged:
-            self._grow_and_cow()
-        self.rng, sub = jax.random.split(self.rng)
-        self.token, self.cache, self.pos = self._step(
-            self.params, self.cache, self.token, self.pos, sub)
-        self.stats["steps"] += 1
-        sampled = np.asarray(self.token)
-        pos = np.array(self.pos)               # the one post-step sync
-        self._host_pos = pos
-        freed = False
-        for row, req in enumerate(self.rows):
-            if req is None:
-                # Idle lanes park at pos 0: their (trash-page) writes stay
-                # in slot range and their walk reads a single garbage page.
-                pos[row] = 0
+            self._ensure_pages(spans)
+        if not spans.any():
+            # Budget 0 with live rows cannot make progress — treat as a
+            # stall-only bookkeeping step.
+            self.stats["steps"] += 1
+            return True
+        width = engine_mod.width_bucket(
+            int(spans.max()), max(self.chunk_size, 1)
+            if self.prefill_interleave else self.max_len)
+        toks = np.zeros((self.batch, width), np.int64)
+        for row in range(self.batch):
+            req = self.rows[row]
+            if req is None or spans[row] == 0:
                 continue
+            if req.admitting:
+                seg = req.context[req.filled: req.filled + int(spans[row])]
+                toks[row, :len(seg)] = seg
+            else:
+                toks[row, 0] = self.token[row]
+        self.rng, sub = jax.random.split(self.rng)
+        nxt, self.cache = self._mixed(
+            self.params, self.cache,
+            self._to_dev(f"tok{width}", toks.astype(np.int32)),
+            self._to_dev("start", self.row_pos.astype(np.int32)),
+            self._to_dev(f"span{width}", spans.astype(np.int32)), sub)
+        self.stats["steps"] += 1
+        sampled = np.asarray(nxt)              # the one per-step sync
+        chunks = 0
+        freed = False
+        for row in range(self.batch):
+            req = self.rows[row]
+            if req is None or spans[row] == 0:
+                continue
+            self.row_pos[row] += int(spans[row])
+            if req.admitting:
+                req.filled += int(spans[row])
+                chunks += 1
+                self.stats["prefill_tokens"] += int(spans[row])
+                if req.admitting:
+                    continue                  # mid-prompt logits: discarded
+                # Admission complete: this chunk's last logits sampled the
+                # request's first token.  TTFT is recorded below, guarded,
+                # so a preempted request's re-admission keeps its TRUE
+                # time-to-first-token.
+                if self.prefix_sharing and not req.tokens:
+                    self.prefix_cache.register(req.prompt, req.pages)
+            self.token[row] = int(sampled[row])
             req.tokens.append(int(sampled[row]))
             self.stats["gen_tokens"] += 1
+            if req.first_token_step < 0:
+                req.first_token_step = self.stats["steps"]
             if self._done(req):
                 self._free_row(row)
                 freed = True
-        self.pos = jnp.asarray(pos)
+        if chunks:
+            self.stats["prefill_chunks"] += chunks
+            self.stats["prefills"] += 1        # steps that carried a chunk
         if freed:
             self.admit()
         return any(r is not None for r in self.rows) or bool(self.queue)
