@@ -1,5 +1,7 @@
 """Serving benchmark: dense vs paged KV cache under continuous batching,
-plus the chunked-vs-stalled admission sweep of the token-budget mixed step.
+the chunked-vs-stalled admission sweep of the token-budget mixed step, and
+the replicated page-table sweep (N engines gossiping one CRDT page table:
+sync bytes per step + cross-replica shared-prefix resolution).
 
 Sweeps batch × context-length skew × cache layout and reports, per config:
 
@@ -245,6 +247,71 @@ def run_prefix_share(cfg, params, *, max_len: int, page_size: int,
     }
 
 
+def run_replicated(cfg, params, *, replicas: int, batch: int, max_len: int,
+                   page_size: int, prompt_len: int, max_new: int,
+                   sync_every: int = 1, seed: int = 0) -> dict:
+    """Staggered shared-prefix fan-out across ``replicas`` engine replicas.
+
+    Requests arrive in an ``A A B B ...`` pattern over two distinct prompts,
+    sized so round-robin dispatch lands BOTH prompts on EVERY replica.  The
+    first admitter of each prompt publishes its immutable full prefix pages
+    into the replicated CRDT map; later admissions of the same prompt on
+    *other* replicas then resolve those pages through the gossip'd metadata
+    (``cross_replica_hits`` — the coordination-layer signal this sweep
+    gates on) while local re-admissions hit the ordinary COW prefix cache.
+    Also reports the anti-entropy wire cost (``sync_bytes_per_step``) and
+    asserts bitwise page-table convergence across replicas at drain.
+    """
+    from repro.serving.replicated import MultiEngineServer
+    from repro.serving.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    prompts = [[int(t) for t in rng.integers(2, cfg.vocab_size, prompt_len)]
+               for _ in range(2)]
+    # Round-robin sends request i to replica i % R.  Wave w = i // R gives
+    # the first half of the replicas prompt A and the rest prompt B, then
+    # SWAPS every wave — so each replica's queue alternates prompts and its
+    # later admissions land after a peer has published that prompt's pages.
+    n_requests = 4 * replicas
+    def _prompt_idx(i: int) -> int:
+        half = 0 if 2 * (i % replicas) < replicas else 1
+        return (half + i // replicas) % 2
+    requests = [Request(rid=i, prompt=list(prompts[_prompt_idx(i)]),
+                        max_new_tokens=max_new)
+                for i in range(n_requests)]
+    server = MultiEngineServer(cfg, params, replicas=replicas, batch=batch,
+                               max_len=max_len, page_size=page_size,
+                               sync_every=sync_every, chunk_size=page_size)
+    for r in requests:
+        server.submit(r)
+    step_times: list[float] = []
+    while True:
+        t0 = time.perf_counter()
+        more = server.step()
+        step_times.append(time.perf_counter() - t0)
+        if not more:
+            break
+        if server.clock > 50_000:
+            raise RuntimeError("replicated bench runaway")
+    server.sync()                           # final round: frontiers settle
+    s = server.stats()
+    med_step = statistics.median(step_times)
+    return {
+        "replicas": replicas, "batch": batch, "page_size": page_size,
+        "sync_every": sync_every, "n_requests": n_requests,
+        "prompt_len": prompt_len,
+        "us_per_step": 1e6 * med_step,
+        "steps": s["steps"], "syncs": s["syncs"],
+        "gen_tokens": s["gen_tokens"], "completed": s["completed"],
+        "sync_bytes": s["sync_bytes"],
+        "sync_bytes_per_step": s["sync_bytes_per_step"],
+        "cross_replica_hits": s["cross_replica_hits"],
+        "published_prefix_pages": s["published_prefix_pages"],
+        "shared_pages": s["shared_pages"],
+        "converged": server.converged(),
+    }
+
+
 def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
               emit_csv=print) -> dict:
     from repro.agents.orchestrator import make_sim_llm
@@ -288,6 +355,15 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                 fanout=fanout, prompt_len=3 * page_size + 5,
                 max_new=max_new, share=share))
 
+    # Replicated sweep: N engines on one CRDT page table, staggered
+    # shared-prefix fan-out (gossip cost + cross-replica prefix reuse).
+    repl_rows = []
+    for replicas in ((2,) if quick else (2, 4)):
+        repl_rows.append(run_replicated(
+            cfg, params, replicas=replicas, batch=2, max_len=max_len,
+            page_size=page_size, prompt_len=3 * page_size + 5,
+            max_new=max_new))
+
     ratios = []
     for d in rows:
         if d["mode"] != "dense":
@@ -304,6 +380,17 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
         "rows": rows,
         "chunked_admission": chunk_rows,
         "prefix_share": share_rows,
+        "replicated": repl_rows,
+        "replication": {
+            # Every replica pair landed bitwise-identical page tables after
+            # the drain sync, and the fan-out workload produced at least one
+            # cross-replica shared-prefix resolution per config.
+            "all_converged": all(r["converged"] for r in repl_rows),
+            "cross_replica_hits_positive": all(
+                r["cross_replica_hits"] > 0 for r in repl_rows),
+            "all_completed": all(r["completed"] == r["n_requests"]
+                                 for r in repl_rows),
+        },
         "write_bytes_ratio_dense_over_paged": min(ratios),
         "admission": {
             "mid_flight_admissions": sum(r["admitted_mid_flight"]
@@ -342,6 +429,13 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                    f";sharedPages={r['shared_pages']}"
                    f";cowCopies={r['cow_copies']}")
         emit_csv(f"{name},{r['admission_us']:.1f},{derived}")
+    for r in repl_rows:
+        derived = (f"syncB/step={r['sync_bytes_per_step']}"
+                   f";xReplicaHits={r['cross_replica_hits']}"
+                   f";publishedPages={r['published_prefix_pages']}"
+                   f";converged={int(r['converged'])}")
+        emit_csv(f"serving/repl_r{r['replicas']},{r['us_per_step']:.1f},"
+                 f"{derived}")
     return report
 
 

@@ -9,6 +9,11 @@ Only paged rows are gated, keyed by (batch, skew), on two signal classes:
   ``--max-regression`` threshold: any increase past it is a real paged-path
   regression (more bytes touched per step, more resident memory), never
   runner noise.
+The replicated sweep (N engines on one CRDT page table) is gated the same
+way: anti-entropy sync bytes and step counts are deterministic counters,
+plus boolean acceptance flags (bitwise replica convergence, cross-replica
+shared-prefix hits > 0, all requests completed).
+
 * **Wall clock** — µs/token normalized by the *same run's* dense row at the
   same key (which cancels the runner-speed term; absolute interpret-mode
   timings are machine-dependent).  Tiny CPU benches still jitter ±20% on
@@ -40,6 +45,13 @@ COUNTERS = ("write_bytes_per_step", "read_bytes_per_step",
 CHUNK_COUNTERS = ("steps", "decode_stall_steps", "stalled_lane_steps",
                   "ttft_steps_mean", "peak_pages")
 
+# Replicated sweep counters: the gossip schedule is reliable and in-order
+# and decoding is greedy, so anti-entropy wire bytes and step counts are
+# bit-identical across reruns of the same commit (the suite asserts this).
+# An increase past the strict threshold means the sync protocol started
+# shipping more metadata per step — a real coordination-cost regression.
+REPL_COUNTERS = ("sync_bytes_per_step", "sync_bytes", "steps")
+
 
 def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
     return {(r["batch"], r["skew"]): r
@@ -49,6 +61,10 @@ def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
 def chunk_rows_by_key(report: dict) -> dict[tuple, dict]:
     return {(r["admission"], r.get("chunk_size", 0)): r
             for r in report.get("chunked_admission", [])}
+
+
+def repl_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["replicas"],): r for r in report.get("replicated", [])}
 
 
 def timing_value(report: dict, key: tuple) -> tuple[float, str]:
@@ -67,14 +83,14 @@ def check(baseline: dict, current: dict, max_regression: float,
     ok = True
     lines = []
 
-    def judge(key, name, bval, cval, limit):
+    def judge(label, name, bval, cval, limit):
         nonlocal ok
         ratio = cval / max(bval, 1e-9) - 1.0
         bad = ratio > limit and cval - bval > 1e-9
         if bad:
             ok = False
         lines.append(
-            f"paged b{key[0]} {key[1]:>7} {name:>18}: baseline "
+            f"{label:>16} {name:>18}: baseline "
             f"{bval:12.3f}, current {cval:12.3f} ({ratio:+.1%}) "
             f"{'FAIL' if bad else 'ok'}")
 
@@ -83,8 +99,9 @@ def check(baseline: dict, current: dict, max_regression: float,
             ok = False
             lines.append(f"MISSING paged row {key} in current run")
             continue
+        label = f"paged b{key[0]} {key[1]}"
         for name in COUNTERS:
-            judge(key, name, float(base[key][name]), float(cur[key][name]),
+            judge(label, name, float(base[key][name]), float(cur[key][name]),
                   max_regression)
         bval, bkind = timing_value(baseline, key)
         cval, ckind = timing_value(current, key)
@@ -92,7 +109,7 @@ def check(baseline: dict, current: dict, max_regression: float,
             bval = base[key]["us_per_token"]
             cval = cur[key]["us_per_token"]
             bkind = "us/tok"
-        judge(key, bkind, bval, cval, timing_slack)
+        judge(label, bkind, bval, cval, timing_slack)
 
     cbase = chunk_rows_by_key(baseline)
     ccur = chunk_rows_by_key(current)
@@ -103,7 +120,7 @@ def check(baseline: dict, current: dict, max_regression: float,
                          "run")
             continue
         for name in CHUNK_COUNTERS:
-            judge(key, name, float(cbase[key][name]),
+            judge(f"{key[0]} c{key[1]}", name, float(cbase[key][name]),
                   float(ccur[key][name]), max_regression)
     if cbase and "chunked_admission" in current:
         stalls_ok = current.get("admission", {}).get(
@@ -111,6 +128,27 @@ def check(baseline: dict, current: dict, max_regression: float,
         lines.append(f"chunked stalls < stalled baseline: "
                      f"{'ok' if stalls_ok else 'FAIL'}")
         ok = ok and stalls_ok
+
+    rbase = repl_rows_by_key(baseline)
+    rcur = repl_rows_by_key(current)
+    for key in sorted(rbase):
+        if key not in rcur:
+            ok = False
+            lines.append(f"MISSING replicated row {key} in current run")
+            continue
+        for name in REPL_COUNTERS:
+            judge(f"repl r{key[0]}", name, float(rbase[key][name]),
+                  float(rcur[key][name]), max_regression)
+    if rbase and "replicated" in current:
+        for flag, desc in (("all_converged",
+                            "replicas bitwise converged"),
+                           ("cross_replica_hits_positive",
+                            "cross-replica shared-prefix hits > 0"),
+                           ("all_completed",
+                            "replicated sweep completed all requests")):
+            flag_ok = current.get("replication", {}).get(flag, False)
+            lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
+            ok = ok and flag_ok
     return ok, lines
 
 

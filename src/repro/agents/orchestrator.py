@@ -78,6 +78,9 @@ class RunResult:
     kv_mode: str = "dense"          # dense | paged KV cache
     prefill_mode: str = "replay"    # replay (token-by-token) | ragged
     shared_prefix_pages: int = 0    # prompt pages shared across (re-)prefills
+    replicas: int = 1               # page-table metadata replicas
+    cross_replica_prefix_hits: int = 0  # prefix pages adopted from a peer
+    page_sync_bytes: int = 0        # page-table anti-entropy wire bytes
 
     @property
     def tokens_per_s(self) -> float:
@@ -154,7 +157,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
              n_agents: int = 4, seed: int = 0, max_len: int = 1024,
              merge: str = "allgather", delta_capacity: int = 64,
              kv: str = "dense", prefill: str = "replay",
-             page_size: int = 64, chunk_size: int = 32,
+             page_size: int = 64, chunk_size: int = 32, replicas: int = 1,
              time_fn=time.perf_counter) -> RunResult:
     """``kv="paged"`` backs the agents with the paged KV cache.
 
@@ -169,6 +172,10 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     assert merge in ("allgather", "pmax", "delta")
     assert kv in ("dense", "paged")
     assert prefill in ("replay", "ragged", "chunked")
+    if replicas > 1 and kv != "paged":
+        raise ValueError("--replicas > 1 requires the paged KV cache "
+                         "(the replicated page table replicates page "
+                         "metadata, not a dense per-row cache)")
     chunked = prefill in ("ragged", "chunked")
     if mode == "sequential":
         n_agents = 1
@@ -211,10 +218,20 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         # the unchanged task/TODO prompt header keeps its pages across
         # invalidation replays instead of being re-pooled per agent.
         maxp = -(-max_len // page_size)
-        pool_pages = (n_agents + 1) * maxp     # +maxp: remap transient
-        mapper = PrefixPageMapper(n_agents, maxp, page_size,
-                                  trash_page=pool_pages,
-                                  num_pages=pool_pages)
+        if replicas > 1:
+            from repro.serving.replicated import ReplicatedPrefixPageMapper
+            # One remap-transient spare slice per metadata replica: agents
+            # are partitioned round-robin, so each home partition must hold
+            # its agents' pages plus one in-flight remap.
+            pool_pages = (n_agents + replicas) * maxp
+            mapper = ReplicatedPrefixPageMapper(
+                n_agents, maxp, page_size, trash_page=pool_pages,
+                replicas=replicas, num_pages=pool_pages)
+        else:
+            pool_pages = (n_agents + 1) * maxp     # +maxp: remap transient
+            mapper = PrefixPageMapper(n_agents, maxp, page_size,
+                                      trash_page=pool_pages,
+                                      num_pages=pool_pages)
         cache = lm.init_cache(cfg, n_agents, max_len, paged=True,
                               page_size=page_size,
                               num_pages=pool_pages + 1)
@@ -320,6 +337,8 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         for i in range(n_agents):
             flush_agent(i)
         stats["syncs"] += 1
+        if replicas > 1 and mapper is not None:
+            mapper.gossip()               # page-table anti-entropy round
         if delta_sync is not None:
             docs = delta_sync.sync(docs)
             stats["sync_bytes"] = delta_sync.bytes_shipped
@@ -529,6 +548,9 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         sync_bytes=int(stats["sync_bytes"]),
         kv_mode=kv, prefill_mode=prefill,
         shared_prefix_pages=mapper.shared_pages if mapper else 0,
+        replicas=replicas,
+        cross_replica_prefix_hits=getattr(mapper, "cross_replica_hits", 0),
+        page_sync_bytes=getattr(mapper, "sync_bytes", 0),
     )
 
 
@@ -572,6 +594,11 @@ def main() -> None:
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="max prompt tokens one mixed step spends per agent "
                          "while other agents keep decoding")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="page-table metadata replicas (> 1 requires "
+                         "--kv paged): agents are partitioned round-robin "
+                         "and the run reports cross-replica prefix hits "
+                         "plus page-table anti-entropy bytes")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -580,7 +607,7 @@ def main() -> None:
                  n_agents=args.agents, seed=args.seed, merge=args.merge,
                  delta_capacity=args.delta_capacity, kv=args.kv,
                  prefill=args.prefill, page_size=args.page_size,
-                 chunk_size=args.chunk_size)
+                 chunk_size=args.chunk_size, replicas=args.replicas)
     for k, v in sorted(vars(r).items()):
         print(f"{k}: {v}")
 

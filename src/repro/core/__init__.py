@@ -5,6 +5,7 @@ Observation-driven coordination over join-semilattice (CRDT) state:
   clock     Lamport clocks, packed (clock, client) keys, version vectors
   lww       LWW register banks (Y.Map analogue) — the TODO board substrate
   gset      G-counter / G-set / per-client append-only logs (Y.Array analogue)
+  counter   PN-counters with per-replica lanes (replicated page refcounts)
   rga       sequence CRDT with deterministic materialization (Y.Text analogue)
   doc       SlotDoc — fixed-shape production code document
   todo      TodoBoard + status/dependency semantics
@@ -13,8 +14,8 @@ Observation-driven coordination over join-semilattice (CRDT) state:
   delta     delta-state sync: frontiers, O(Δ) extraction, join-apply
   merge     replica joins: local fold, all-gather, O(S) pmax, O(Δ) delta ring
 """
-from repro.core import (clock, delta, doc, gset, lww, merge, observe,
-                        protocol, rga, todo)
+from repro.core import (clock, counter, delta, doc, gset, lww, merge,
+                        observe, protocol, rga, todo)
 
-__all__ = ["clock", "delta", "doc", "gset", "lww", "merge", "observe",
-           "protocol", "rga", "todo"]
+__all__ = ["clock", "counter", "delta", "doc", "gset", "lww", "merge",
+           "observe", "protocol", "rga", "todo"]

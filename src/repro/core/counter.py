@@ -1,0 +1,79 @@
+"""Grow/shrink counters with per-replica lanes (PN-counters).
+
+A ``PNCounter`` holds ``K`` keyed counters replicated across ``R`` writer
+lanes.  Lane ``r`` is single-writer: only replica ``r`` ever bumps
+``inc[r, :]`` / ``dec[r, :]``, so every cell is monotone non-decreasing and
+the join is an elementwise max — the same G-type shape as ``gset.GCounter``
+but with a *decrement* side, which makes the observed value
+
+    value[k] = sum_r (inc[r, k] - dec[r, k])
+
+able to go both up and down while the state itself stays a join-semilattice
+(Shapiro et al. 2011, §3.1.3).  This is the distributed serving tier's page
+*refcount*: allocation/share increments the caller's lane, free decrements
+it, and a replica may free only references its own lane holds — which makes
+"no double-free" a per-lane invariant (``dec <= inc`` cellwise) that any
+observer can audit on any (partially) merged state.
+
+Delta support (frontier / O(Δ) extract / join-apply) lives in
+``core/delta.py`` next to the other registered CRDTs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PNCounter(NamedTuple):
+    inc: jax.Array    # i32[R, K] — per-lane cumulative increments
+    dec: jax.Array    # i32[R, K] — per-lane cumulative decrements
+
+    @classmethod
+    def zeros(cls, num_lanes: int, num_keys: int) -> "PNCounter":
+        return cls(inc=jnp.zeros((num_lanes, num_keys), jnp.int32),
+                   dec=jnp.zeros((num_lanes, num_keys), jnp.int32))
+
+    @property
+    def num_lanes(self) -> int:
+        return self.inc.shape[0]
+
+    @property
+    def num_keys(self) -> int:
+        return self.inc.shape[1]
+
+    def add(self, lane: jax.Array, key: jax.Array,
+            amount: jax.Array = 1) -> "PNCounter":
+        """Increment ``key`` on ``lane`` (call only from lane's owner)."""
+        return self._replace(
+            inc=self.inc.at[lane, key].add(jnp.int32(amount)))
+
+    def sub(self, lane: jax.Array, key: jax.Array,
+            amount: jax.Array = 1) -> "PNCounter":
+        """Decrement ``key`` on ``lane``.  The caller must hold the
+        references it releases (``dec <= inc`` cellwise is the auditable
+        no-double-free invariant); this is a semantic contract of the lane
+        owner, not a shape guard."""
+        return self._replace(
+            dec=self.dec.at[lane, key].add(jnp.int32(amount)))
+
+    def join(self, other: "PNCounter") -> "PNCounter":
+        return PNCounter(inc=jnp.maximum(self.inc, other.inc),
+                         dec=jnp.maximum(self.dec, other.dec))
+
+    @property
+    def value(self) -> jax.Array:
+        """Observed per-key value: i32[K]."""
+        return jnp.sum(self.inc - self.dec, axis=0)
+
+    def value_masked(self, lanes: jax.Array) -> jax.Array:
+        """Per-key value counting only ``lanes`` (bool[R]) — e.g. the live
+        (non-retired) replicas, so a crashed replica's zombie references
+        stop pinning pages once its retirement is observed."""
+        m = lanes[:, None]
+        return jnp.sum(jnp.where(m, self.inc - self.dec, 0), axis=0)
+
+    def lane_value(self, lane: jax.Array) -> jax.Array:
+        """One lane's per-key holdings: i32[K]."""
+        return self.inc[lane] - self.dec[lane]

@@ -66,6 +66,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import counter as counter_mod
 from repro.core import doc as doc_mod
 from repro.core import gset, lww, rga, todo
 from repro.core.clock import pack_key
@@ -134,6 +135,24 @@ class CounterDelta(NamedTuple):
 
 class SetDelta(NamedTuple):
     bits: jax.Array           # u8[ceil(N/8)] — bit-packed membership
+
+
+class PNFrontier(NamedTuple):
+    inc: jax.Array            # i32[R, K] — cell values observed/shipped
+    dec: jax.Array            # i32[R, K]
+
+
+class PNDelta(NamedTuple):
+    """Changed cells of a PNCounter, left-packed into ``capacity`` lanes.
+
+    ``idx`` is the flattened lane*K+key index, -1 for empty lanes.  Values
+    are ABSOLUTE cumulative counts (not increments): every cell is monotone,
+    so apply is a scatter-max and re-delivery/reordering are no-ops.
+    """
+
+    idx: jax.Array            # i32[capacity]
+    inc: jax.Array            # i32[capacity]
+    dec: jax.Array            # i32[capacity]
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +361,45 @@ def _gset_apply(state: gset.GSet, d: SetDelta) -> gset.GSet:
                      | jnp.unpackbits(d.bits, count=n).astype(jnp.bool_))
 
 
+# -- PNCounter --------------------------------------------------------------
+
+def _pn_frontier(state: counter_mod.PNCounter) -> PNFrontier:
+    return PNFrontier(inc=state.inc, dec=state.dec)
+
+
+def _pn_extract(state: counter_mod.PNCounter, fr: PNFrontier, capacity: int
+                ) -> tuple[PNDelta, PNFrontier]:
+    r, k = state.inc.shape
+    n = r * k
+    cap = min(capacity, n)
+    inc_f, dec_f = state.inc.reshape(-1), state.dec.reshape(-1)
+    changed = (inc_f > fr.inc.reshape(-1)) | (dec_f > fr.dec.reshape(-1))
+    # Smallest-total changed cells ship first: a starved cell's cumulative
+    # count is fixed while hot cells keep growing, so every pending cell is
+    # eventually among the ``cap`` smallest (same argument as _lww_extract).
+    priority = jnp.where(changed, inc_f + dec_f, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(priority).astype(jnp.int32)[:cap]
+    take = changed[order]
+    idx = jnp.where(take, order, -1)
+    delta = PNDelta(idx=idx,
+                    inc=jnp.where(take, inc_f[order], 0),
+                    dec=jnp.where(take, dec_f[order], 0))
+    shipped = jnp.zeros((n,), jnp.bool_).at[
+        jnp.where(take, order, n)].set(True, mode="drop")
+    return delta, PNFrontier(
+        inc=jnp.where(shipped, inc_f, fr.inc.reshape(-1)).reshape(r, k),
+        dec=jnp.where(shipped, dec_f, fr.dec.reshape(-1)).reshape(r, k))
+
+
+def _pn_apply(state: counter_mod.PNCounter, d: PNDelta
+              ) -> counter_mod.PNCounter:
+    r, k = state.inc.shape
+    tgt = jnp.where(d.idx >= 0, d.idx, r * k)   # empty lanes routed OOB
+    inc = state.inc.reshape(-1).at[tgt].max(d.inc, mode="drop").reshape(r, k)
+    dec = state.dec.reshape(-1).at[tgt].max(d.dec, mode="drop").reshape(r, k)
+    return counter_mod.PNCounter(inc=inc, dec=dec)
+
+
 # -- TodoBoard --------------------------------------------------------------
 
 def _board_frontier(board: todo.TodoBoard) -> KeyFrontier:
@@ -369,6 +427,7 @@ _FRONTIER = {
     gset.GCounter: _gcounter_frontier,
     gset.GSet: _gset_frontier,
     todo.TodoBoard: _board_frontier,
+    counter_mod.PNCounter: _pn_frontier,
 }
 
 _EXTRACT = {
@@ -379,6 +438,7 @@ _EXTRACT = {
     gset.GCounter: _gcounter_extract,
     gset.GSet: _gset_extract,
     todo.TodoBoard: _board_extract,
+    counter_mod.PNCounter: _pn_extract,
 }
 
 _APPLY = {
@@ -389,6 +449,7 @@ _APPLY = {
     gset.GCounter: _gcounter_apply,
     gset.GSet: _gset_apply,
     todo.TodoBoard: _board_apply,
+    counter_mod.PNCounter: _pn_apply,
 }
 
 

@@ -41,6 +41,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import counter as counter_mod
 from repro.core import delta as delta_mod
 from repro.core import doc as doc_mod
 from repro.core import gset, lww, rga, todo
@@ -60,6 +61,7 @@ _JOINS: dict[type, Callable[[Any, Any], Any]] = {
     rga.RGA: rga.merge,
     doc_mod.SlotDoc: doc_mod.merge,
     todo.TodoBoard: lambda a, b: todo.TodoBoard(lww.merge(a.bank, b.bank)),
+    counter_mod.PNCounter: lambda a, b: a.join(b),
 }
 
 
@@ -155,7 +157,7 @@ def pmax_merge(state: Any, axis_name: str) -> Any:
         return _pmax_lww(state, axis_name)
     if t is todo.TodoBoard:
         return todo.TodoBoard(_pmax_lww(state.bank, axis_name))
-    if t in (gset.GCounter, gset.GSet):
+    if t in (gset.GCounter, gset.GSet, counter_mod.PNCounter):
         return jax.tree.map(lambda x: _pmax(x, axis_name), state)
     if t is gset.GLog:
         valid = state.valid_mask()

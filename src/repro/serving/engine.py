@@ -185,6 +185,37 @@ def make_coord_merge(mesh: Mesh, dp_axes: tuple[str, ...],
     return merge_fn
 
 
+class GossipFns:
+    """Jitted delta-sync triple for host-side replica gossip.
+
+    The host analogue of ``make_coord_merge(strategy="delta")``: where the
+    fused step syncs coordination state through an in-mesh ``ppermute``
+    ring, host-level replicas (multi-engine serving, the replica simulator)
+    gossip the same frontiers/deltas over an explicit — possibly faulty —
+    channel.  One instance per state *template*: the jitted callables cache
+    on the pytree structure, so every replica of the same store shares the
+    compilations.
+    """
+
+    def __init__(self, template: Any, capacity: int):
+        self.capacity = capacity
+        self.genesis = delta_mod.frontier_jit(template)
+        self._apply = delta_mod.apply_jit
+
+    def extract(self, state: Any, frontier: Any) -> tuple[Any, Any]:
+        """(delta beyond ``frontier``, frontier actually shipped)."""
+        return delta_mod.extract_jit(state, frontier, self.capacity)
+
+    def apply(self, state: Any, delta: Any) -> Any:
+        return self._apply(state, delta)
+
+
+def make_gossip_fns(template: Any, capacity: int = 32) -> GossipFns:
+    """Build the jitted (genesis frontier, extract, apply) gossip triple for
+    a CRDT state template (any registered type or dict container)."""
+    return GossipFns(template, capacity)
+
+
 def make_fused_serve_step(cfg: ModelConfig, mesh: Mesh,
                           dp_axes: tuple[str, ...], *, impl: str = "ref",
                           merge_strategy: str = "pmax",

@@ -1,0 +1,910 @@
+"""Replicated CRDT page table — the distributed serving tier.
+
+The scheduler's host-local ``PageAllocator`` refcounts and ``PrefixCache``
+chain become replicated state shared by N serving engines:
+
+  * per-page refcounts   — a PN-counter with one writer lane per replica
+                           (``core/counter.py``): replica r's references to
+                           page p live in lane r; the observed refcount is
+                           the live-lane sum, so a crashed replica's zombie
+                           references stop pinning pages once its retirement
+                           is observed.
+  * prefix → page map    — an LWW register bank (``core/lww.py``) keyed by a
+                           62-bit hash of the token prefix: full chain pages
+                           (immutable once filled) are published so peers
+                           can discover shareable prompt KV.
+  * page ownership       — an LWW lease ``(owner, seq)`` per page.  ``seq``
+                           is the page's *epoch*: it bumps on every alloc
+                           AND every free-to-zero, so any stale reference a
+                           peer resolved under an old epoch fails validation
+                           instead of aliasing reused KV.
+  * liveness             — heartbeat G-counter + retirement-vote G-set.
+
+All of it syncs through the PR-1 delta engine: ``delta.frontier`` /
+``delta.extract`` / ``delta.apply`` on the registered CRDT leaves, shipped
+as fixed-capacity packets by ``AntiEntropyNode`` (host gossip with per-peer
+ack frontiers — the fault-tolerant sibling of ``delta.DeltaSync``).
+
+Protocol rules (verified by serving/simulator.py)
+-------------------------------------------------
+
+1. **Home-partition allocation.**  Page p is allocated only by its home
+   replica ``home(p) = p * N // P``, so allocation never needs consensus.
+   Any replica may *reference* any page (prefix sharing); only the lease
+   owner writes it.
+
+2. **Epoch fencing.**  The lease seq bumps on alloc and on free-to-zero.
+   Published prefix entries carry the seq they were minted under; every
+   cross-replica resolution re-validates ``seq`` against the current lease.
+
+3. **Provisional cross-replica shares.**  A replica adopting a peer's page
+   increments its own refcount lane first (so the home can never observe
+   refcount 0 while the adoption is in flight... once the inc has synced),
+   then commits only after it has since *heard from the owner* with the
+   epoch unchanged; otherwise it aborts and decrements.  The home absorbs
+   the in-flight window by lingering: an exported page that reaches
+   refcount 0 cools for ``linger`` steps (and is re-validated at promotion)
+   before re-entering the free list.
+
+4. **Fencing / retirement / reclamation.**  Replicas heartbeat every step.
+   A replica FENCES ITSELF (stops allocating and writing) while any
+   non-retired peer has been unheard for > ``ttl`` steps — during a
+   partition *both* sides stall rather than risk divergent ownership
+   (safety over liveness).  A peer whose merged heartbeat is stale by
+   > ``2*ttl`` gets a retirement vote; retirement takes effect at a
+   majority (floor(N/2)+1), so an N=2 crash pins pages forever rather than
+   reclaiming unsafely.  The lowest-id live replica then re-homes a retired
+   replica's pages: claim (lease write, seq+1) → wait ``grace`` → commit if
+   still the lease winner and itself unfenced.  Safety margin: an isolated
+   owner fences at ``ttl`` unheard, strictly before any claim can commit at
+   ``2*ttl (vote) + grace``.
+
+5. **Self-halt.**  A replica that observes its own retirement stops
+   operating (its lanes are already excluded from effective refcounts).
+
+The engine-facing adapters ``ReplicatedPageAllocator`` /
+``ReplicatedPrefixCache`` are drop-in for the scheduler's ``PageAllocator``
+/ ``PrefixCache`` API, so ``ContinuousBatchingEngine(allocator=...,
+prefix_cache=...)`` runs unmodified on replicated state.
+``MultiEngineServer`` drives N such engines with reliable in-process gossip
+(cross-replica prefix hits are accounted at the metadata layer there;
+physical cross-engine KV adoption is the ROADMAP follow-on — the simulator,
+whose pages are abstract, exercises real adoption end to end).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import counter as counter_mod
+from repro.core import delta as delta_mod
+from repro.core import gset, lww
+from repro.core.clock import MAX_CLIENTS, MAX_CLOCK
+from repro.serving import scheduler as sched_mod
+
+HASH_BITS = 62
+
+
+def prefix_hash(key: tuple) -> int:
+    """Deterministic 62-bit FNV-1a of an int tuple (a token prefix).  Both
+    31-bit halves fit an int32 lane of the LWW payload."""
+    h = 0xcbf29ce484222325
+    for t in key:
+        h ^= int(t) & 0xFFFFFFFFFFFFFFFF
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h & ((1 << HASH_BITS) - 1)
+
+
+def zero_state(num_replicas: int, num_pages: int, prefix_slots: int) -> dict:
+    """The pristine CRDT pytree every replica starts from (and the template
+    gossip frontiers are seeded with)."""
+    return {
+        "ref": counter_mod.PNCounter.zeros(num_replicas, num_pages),
+        "lease": lww.empty(num_pages, {"owner": ((), np.int32),
+                                       "seq": ((), np.int32)}),
+        "prefix": lww.empty(prefix_slots, {"hash_lo": ((), np.int32),
+                                           "hash_hi": ((), np.int32),
+                                           "page": ((), np.int32),
+                                           "seq": ((), np.int32),
+                                           "owner": ((), np.int32)}),
+        "hb": gset.GCounter.zeros(num_replicas),
+        "retire": gset.GSet.empty(num_replicas * num_replicas),
+    }
+
+
+class ReplicatedPageStore:
+    """One replica's view of the replicated page table.
+
+    Working state is host numpy (mutations are O(1) scalar ops on the hot
+    admission/growth path); ``state()`` materializes the registered CRDT
+    pytree for the delta engine and ``load()`` writes a joined state back.
+    Local mutators implement exactly the CRDT op semantics — single-writer
+    monotone lane bumps, Lamport-guarded LWW writes — so a replica's state
+    is always the join of the ops it generated and the deltas it applied.
+    """
+
+    def __init__(self, rid: int, num_replicas: int, num_pages: int,
+                 prefix_slots: Optional[int] = None):
+        if not 0 <= rid < num_replicas:
+            raise ValueError(f"rid {rid} outside [0, {num_replicas})")
+        if num_replicas >= MAX_CLIENTS:
+            raise ValueError("num_replicas exceeds LWW client space")
+        self.rid = rid
+        self.num_replicas = num_replicas
+        self.num_pages = num_pages
+        self.prefix_slots = (2 * num_pages if prefix_slots is None
+                             else prefix_slots)
+        self.majority = num_replicas // 2 + 1
+        n, p, s = num_replicas, num_pages, self.prefix_slots
+        self.inc = np.zeros((n, p), np.int32)
+        self.dec = np.zeros((n, p), np.int32)
+        self.lease_clock = np.zeros(p, np.int32)
+        self.lease_client = np.zeros(p, np.int32)
+        self.lease_owner = np.zeros(p, np.int32)      # rid+1; 0 = unleased
+        self.lease_seq = np.zeros(p, np.int32)
+        self.pfx_clock = np.zeros(s, np.int32)
+        self.pfx_client = np.zeros(s, np.int32)
+        self.pfx = {name: np.zeros(s, np.int32)
+                    for name in ("hash_lo", "hash_hi", "page", "seq",
+                                 "owner")}
+        self.hb = np.zeros(n, np.int32)
+        self.retire = np.zeros(n * n, bool)
+        self.lam = 0                                  # local Lamport time
+        # Host metadata (not CRDT state): gossip recency per peer, fed by
+        # AntiEntropyNode and read by the fencing rule.
+        self.last_heard = {j: 0 for j in range(n) if j != rid}
+
+    # -- Lamport ------------------------------------------------------------
+
+    def _tick(self) -> int:
+        self.lam += 1
+        if self.lam > MAX_CLOCK:
+            raise OverflowError("Lamport clock exhausted")
+        return self.lam
+
+    # -- refcount lanes (single-writer: own lane only) ----------------------
+
+    def ref_add(self, page: int, n: int = 1) -> None:
+        self.inc[self.rid, page] += n
+
+    def ref_sub(self, page: int, n: int = 1) -> None:
+        if self.lane_held(page) < n:
+            raise ValueError(
+                f"double free of page {page} (lane {self.rid} holds "
+                f"{self.lane_held(page)}, releasing {n})")
+        self.dec[self.rid, page] += n
+
+    def lane_held(self, page: int) -> int:
+        return int(self.inc[self.rid, page] - self.dec[self.rid, page])
+
+    def retired_mask(self) -> np.ndarray:
+        """bool[N] — replicas whose retirement has majority support in this
+        replica's merged view.  Votes are monotone facts, so every replica
+        converges to the same mask."""
+        n = self.num_replicas
+        votes = self.retire.reshape(n, n).sum(axis=0)
+        return votes >= self.majority
+
+    def live_lanes(self) -> np.ndarray:
+        return ~self.retired_mask()
+
+    def refcount(self, page: int) -> int:
+        live = self.live_lanes()
+        return int((self.inc[live, page] - self.dec[live, page]).sum())
+
+    def refcounts(self) -> np.ndarray:
+        """Effective (live-lane) refcount of every page: i32[P]."""
+        live = self.live_lanes()
+        return (self.inc[live] - self.dec[live]).sum(axis=0)
+
+    # -- lease --------------------------------------------------------------
+
+    def _lww_write(self, clock_arr, client_arr, idx: int,
+                   fields: dict[str, dict]) -> bool:
+        clock = self._tick()
+        client = self.rid + 1
+        new_key = clock * MAX_CLIENTS + client
+        cur_key = int(clock_arr[idx]) * MAX_CLIENTS + int(client_arr[idx])
+        if new_key <= cur_key:
+            return False
+        clock_arr[idx] = clock
+        client_arr[idx] = client
+        for payload, values in fields.items():
+            for name, value in values.items():
+                getattr(self, payload)[name][idx] = value
+        return True
+
+    def lease_write(self, page: int, owner_rid: int, seq: int) -> None:
+        ok = self._lww_write(
+            self.lease_clock, self.lease_client, page,
+            {"_lease_payload": {"owner": owner_rid + 1, "seq": seq}})
+        if not ok:
+            raise RuntimeError(f"lease write lost on page {page} — a local "
+                               "Lamport tick can never lose locally")
+
+    @property
+    def _lease_payload(self) -> dict[str, np.ndarray]:
+        return {"owner": self.lease_owner, "seq": self.lease_seq}
+
+    def lease(self, page: int) -> tuple[int, int]:
+        """(owner_rid or -1, seq) of the page's current epoch."""
+        return int(self.lease_owner[page]) - 1, int(self.lease_seq[page])
+
+    # -- prefix map ---------------------------------------------------------
+
+    def publish_prefix(self, h: int, page: int, seq: int) -> None:
+        slot = h % self.prefix_slots
+        self._lww_write(
+            self.pfx_clock, self.pfx_client, slot,
+            {"pfx": {"hash_lo": h & 0x7FFFFFFF, "hash_hi": h >> 31,
+                     "page": page, "seq": seq, "owner": self.rid + 1}})
+
+    def lookup_prefix(self, h: int) -> Optional[tuple[int, int, int]]:
+        """(owner_rid, page, seq) of a published prefix page, or None.  The
+        caller still must validate seq against the page's current lease."""
+        slot = h % self.prefix_slots
+        if self.pfx_clock[slot] == 0:
+            return None
+        if (int(self.pfx["hash_lo"][slot]) != (h & 0x7FFFFFFF)
+                or int(self.pfx["hash_hi"][slot]) != (h >> 31)):
+            return None                     # slot collision — treat as miss
+        return (int(self.pfx["owner"][slot]) - 1,
+                int(self.pfx["page"][slot]), int(self.pfx["seq"][slot]))
+
+    # -- liveness -----------------------------------------------------------
+
+    def heartbeat(self, now: int) -> None:
+        self.hb[self.rid] = max(int(self.hb[self.rid]), now)
+
+    def vote_retire(self, target: int) -> None:
+        self.retire[self.rid * self.num_replicas + target] = True
+
+    def is_retired(self, r: int) -> bool:
+        return bool(self.retired_mask()[r])
+
+    # -- CRDT pytree bridge -------------------------------------------------
+
+    def state(self) -> dict:
+        """The registered-CRDT pytree this replica's state IS (the thing the
+        delta engine extracts from / applies into / joins)."""
+        import jax.numpy as jnp
+        return {
+            "ref": counter_mod.PNCounter(inc=jnp.asarray(self.inc),
+                                         dec=jnp.asarray(self.dec)),
+            "lease": lww.LWWBank(
+                clock=jnp.asarray(self.lease_clock),
+                client=jnp.asarray(self.lease_client),
+                payload={"owner": jnp.asarray(self.lease_owner),
+                         "seq": jnp.asarray(self.lease_seq)}),
+            "prefix": lww.LWWBank(
+                clock=jnp.asarray(self.pfx_clock),
+                client=jnp.asarray(self.pfx_client),
+                payload={k: jnp.asarray(v) for k, v in self.pfx.items()}),
+            "hb": gset.GCounter(jnp.asarray(self.hb)),
+            "retire": gset.GSet(jnp.asarray(self.retire)),
+        }
+
+    def load(self, tree: dict) -> None:
+        """Adopt a joined state (post delta-apply) and observe its clocks so
+        later local LWW writes stay ahead of everything merged in."""
+        host = lambda x: np.array(x)       # mutable host copy
+        self.inc = host(tree["ref"].inc)
+        self.dec = host(tree["ref"].dec)
+        self.lease_clock = host(tree["lease"].clock)
+        self.lease_client = host(tree["lease"].client)
+        self.lease_owner = host(tree["lease"].payload["owner"])
+        self.lease_seq = host(tree["lease"].payload["seq"])
+        self.pfx_clock = host(tree["prefix"].clock)
+        self.pfx_client = host(tree["prefix"].client)
+        self.pfx = {k: host(v) for k, v in tree["prefix"].payload.items()}
+        self.hb = host(tree["hb"].counts)
+        self.retire = host(tree["retire"].member)
+        self.lam = max(self.lam, int(self.lease_clock.max()),
+                       int(self.pfx_clock.max()))
+
+    def apply_delta(self, d: Any) -> None:
+        self.load(delta_mod.apply_jit(self.state(), d))
+
+    def digest(self) -> bytes:
+        """Order-stable byte digest of the CRDT state (for convergence
+        traces; bitwise equality of digests == bitwise equality of state)."""
+        import hashlib
+        m = hashlib.sha256()
+        for arr in (self.inc, self.dec, self.lease_clock, self.lease_client,
+                    self.lease_owner, self.lease_seq, self.pfx_clock,
+                    self.pfx_client, *(self.pfx[k] for k in sorted(self.pfx)),
+                    self.hb, self.retire):
+            m.update(np.ascontiguousarray(arr).tobytes())
+        return m.digest()
+
+
+# ---------------------------------------------------------------------------
+# Anti-entropy gossip (delta engine on an unreliable channel)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DeltaPacket:
+    """One gossip hop: a fixed-capacity delta of src's state beyond what dst
+    last acknowledged.  ``nbytes`` is constant per (store shape, capacity) —
+    that is what makes sync-bytes a deterministic, regression-gatable
+    counter."""
+
+    src: int
+    dst: int
+    send_time: int
+    delta: Any
+    nbytes: int
+
+
+@dataclass
+class AckPacket:
+    src: int
+    dst: int
+    send_time: int
+
+
+class AntiEntropyNode:
+    """Per-replica gossip endpoint with per-peer acknowledged frontiers.
+
+    Unlike ``delta.DeltaSync`` (reliable shared-frontier all-to-all), this
+    node tolerates an adversarial channel: the frontier for a peer advances
+    only when that peer ACKNOWLEDGES a packet, so dropped packets simply
+    re-extract on the next round; duplicated or reordered packets are
+    no-ops by join idempotence/commutativity; delayed acks join in late
+    (frontiers are monotone).  Convergence is delayed, never lost.
+    """
+
+    PENDING_LIMIT = 64        # unacked shipped-frontiers kept per peer
+
+    def __init__(self, store: ReplicatedPageStore, capacity: int = 32,
+                 gossip=None):
+        from repro.serving import engine as engine_mod
+        self.store = store
+        self.capacity = capacity
+        self.gossip = gossip if gossip is not None else \
+            engine_mod.make_gossip_fns(
+                zero_state(store.num_replicas, store.num_pages,
+                           store.prefix_slots), capacity)
+        peers = [j for j in range(store.num_replicas) if j != store.rid]
+        self.acked = {j: self.gossip.genesis for j in peers}
+        self.pending: dict[int, dict[int, Any]] = {j: {} for j in peers}
+        self.bytes_sent = 0
+        self.packets_sent = 0
+
+    def make_packet(self, dst: int, now: int) -> DeltaPacket:
+        d, shipped = self.gossip.extract(self.store.state(), self.acked[dst])
+        pend = self.pending[dst]
+        pend[now] = shipped
+        while len(pend) > self.PENDING_LIMIT:
+            pend.pop(min(pend))           # oldest unacked: superseded anyway
+        nb = delta_mod.nbytes(d)
+        self.bytes_sent += nb
+        self.packets_sent += 1
+        return DeltaPacket(self.store.rid, dst, now, d, nb)
+
+    def receive(self, pkt: DeltaPacket, now: int) -> AckPacket:
+        self.store.last_heard[pkt.src] = max(self.store.last_heard[pkt.src],
+                                             now)
+        self.store.load(self.gossip.apply(self.store.state(), pkt.delta))
+        return AckPacket(self.store.rid, pkt.src, pkt.send_time)
+
+    def receive_ack(self, ack: AckPacket, now: int) -> None:
+        self.store.last_heard[ack.src] = max(self.store.last_heard[ack.src],
+                                             now)
+        fr = self.pending[ack.src].pop(ack.send_time, None)
+        if fr is not None:
+            self.acked[ack.src] = delta_mod.join_frontiers(
+                self.acked[ack.src], fr)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-facing backends
+# ---------------------------------------------------------------------------
+
+
+class ReplicatedPageAllocator:
+    """Drop-in for ``scheduler.PageAllocator`` backed by the replicated
+    store.  Allocation draws from this replica's home partition only;
+    refcounts, leases and the retirement protocol ride the CRDT state.
+
+    ``ttl``/``grace``/``linger`` are in the caller's step units (the
+    simulator's logical clock, or engine steps for ``MultiEngineServer``).
+    The safety inequality — fence at ``ttl`` < retire-vote at ``2*ttl`` +
+    ``grace`` — is baked in; ``linger`` must exceed the channel's maximum
+    in-flight time for rule 3 (see module docstring) to hold.
+    """
+
+    def __init__(self, store: ReplicatedPageStore, *, ttl: int = 8,
+                 grace: Optional[int] = None, linger: int = 0):
+        self.store = store
+        self.ttl = ttl
+        self.retire_after = 2 * ttl
+        self.grace = ttl if grace is None else grace
+        self.linger = linger
+        p, n, rid = store.num_pages, store.num_replicas, store.rid
+        self._home0 = (np.arange(p, dtype=np.int64) * n) // p
+        self._mine = {int(pg) for pg in np.nonzero(self._home0 == rid)[0]}
+        self._free = sorted(self._mine, reverse=True)
+        self._outstanding: set[int] = set()
+        self._cooling: dict[int, int] = {}      # page -> cooled-since step
+        self._exported: set[int] = set()
+        self._claims: dict[int, tuple[int, int]] = {}   # page -> (t0, seq)
+        self.now = 0                            # advanced by maintain()
+        self.reclaimed_pages = 0
+        self.fence_steps = 0
+
+    # -- PageAllocator API --------------------------------------------------
+
+    @property
+    def num_pages(self) -> int:
+        return self.store.num_pages        # engines size their pool to this
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n <= 0:
+            return []
+        if self.halted or self.fenced(self.now) or n > len(self._free):
+            return None
+        pages, self._free = self._free[-n:][::-1], self._free[:-n]
+        for p in pages:
+            _, seq = self.store.lease(p)
+            self.store.lease_write(p, self.store.rid, seq + 1)
+            self.store.ref_add(p)
+            self._outstanding.add(p)
+        return pages
+
+    def reserve(self, n: int) -> Optional[sched_mod.Reservation]:
+        pages = self.alloc(n)
+        if pages is None:
+            return None
+        return sched_mod.Reservation(self, pages)
+
+    def share(self, pages: list[int]) -> None:
+        for p in pages:
+            if self.store.refcount(p) <= 0:
+                raise ValueError(f"cannot share unallocated page {p}")
+            self.store.ref_add(p)
+
+    def refcount(self, page: int) -> int:
+        return self.store.refcount(page)
+
+    def generation(self, page: int) -> int:
+        """The page's lease epoch: bumps on every alloc and every
+        free-to-zero, which is exactly the staleness the local PrefixCache
+        guards against."""
+        return self.store.lease(page)[1]
+
+    def free(self, pages: list[int]) -> None:
+        for p in reversed(pages):
+            self.store.ref_sub(p)          # raises on lane double-free
+            self._retire_if_idle(p)
+
+    # -- replication-side machinery ------------------------------------------
+
+    def _retire_if_idle(self, p: int) -> None:
+        """Home-side: a page of ours at effective refcount 0 ends its epoch
+        (seq bump fences stale references) and cools or frees."""
+        if p not in self._mine or p not in self._outstanding:
+            return
+        if self.store.refcount(p) != 0:
+            return                         # remote lanes still hold refs
+        _, seq = self.store.lease(p)
+        self.store.lease_write(p, self.store.rid, seq + 1)
+        self._outstanding.discard(p)
+        if p in self._exported and self.linger > 0:
+            self._cooling[p] = self.now
+        else:
+            self._free.append(p)
+
+    def mark_exported(self, page: int) -> None:
+        self._exported.add(page)
+
+    def scavenge(self) -> None:
+        """After a sync round: reap home pages whose last remote references
+        were released elsewhere, and promote cooled pages whose linger has
+        elapsed (re-validating refcount — an in-flight provisional share
+        may have resurrected one; it will abort on the epoch bump, so the
+        page just keeps cooling until the release arrives)."""
+        for p in sorted(self._outstanding):
+            self._retire_if_idle(p)
+        for p in sorted(self._cooling):
+            if self.now - self._cooling[p] >= self.linger:
+                if self.store.refcount(p) == 0:
+                    del self._cooling[p]
+                    self._free.append(p)
+                else:
+                    self._cooling[p] = self.now
+
+    @property
+    def halted(self) -> bool:
+        return self.store.is_retired(self.store.rid)
+
+    def fenced(self, now: int) -> bool:
+        """Safety rule 4: stall while any non-retired peer is unheard."""
+        retired = self.store.retired_mask()
+        return any(now - t > self.ttl
+                   for j, t in self.store.last_heard.items()
+                   if not retired[j])
+
+    def maintain(self, now: int) -> None:
+        """One protocol step: heartbeat, stale-peer votes, reclamation."""
+        self.now = now
+        if self.halted:
+            return
+        self.store.heartbeat(now)
+        retired = self.store.retired_mask()
+        for j in self.store.last_heard:
+            if not retired[j] and now - int(self.store.hb[j]) \
+                    > self.retire_after:
+                self.store.vote_retire(j)
+        retired = self.store.retired_mask()
+        if self.fenced(now):
+            self.fence_steps += 1
+            self._claims.clear()           # a fenced claimant starts over
+            return
+        live = [r for r in range(self.store.num_replicas) if not retired[r]]
+        if not live or live[0] != self.store.rid:
+            return
+        # Lowest live replica re-homes every retired replica's pages.
+        for p in np.nonzero(retired[self._home0])[0]:
+            p = int(p)
+            if p in self._mine:
+                continue
+            owner, seq = self.store.lease(p)
+            claim = self._claims.get(p)
+            if claim is None:
+                self.store.lease_write(p, self.store.rid, seq + 1)
+                self._claims[p] = (now, seq + 1)
+            else:
+                t0, cseq = claim
+                if owner != self.store.rid or seq != cseq:
+                    del self._claims[p]    # lost the epoch — retry next step
+                elif now - t0 >= self.grace:
+                    del self._claims[p]
+                    self._mine.add(p)
+                    self.reclaimed_pages += 1
+                    if self.store.refcount(p) == 0:
+                        self._free.append(p)
+                    else:                  # live sharers elsewhere
+                        self._outstanding.add(p)
+
+
+class ReplicatedPrefixCache(sched_mod.PrefixCache):
+    """The scheduler's ``PrefixCache`` plus cross-replica publication.
+
+    Local lookups/registration behave exactly like the host-local cache
+    (same OrderedDict LRU, same generation validation — the generation now
+    being the page's replicated lease epoch).  On top of that, full chain
+    pages this replica OWNS are published to the replicated prefix map, and
+    ``lookup`` probes the map for prompt pages resident on peers.  Remote
+    hits are accounted in ``cross_replica_hits`` — the coordination-layer
+    signal the bench gates on; engines do not adopt a peer's physical KV
+    yet (each engine owns a separate device pool — ROADMAP follow-on),
+    while the simulator's abstract replicas adopt for real via
+    ``resolve_remote``.
+    """
+
+    def __init__(self, allocator: ReplicatedPageAllocator, page_size: int,
+                 max_entries: int = 4096):
+        super().__init__(allocator, page_size, max_entries)
+        self.store = allocator.store
+        self.cross_replica_hits = 0
+        self.published = 0
+
+    def _publish_page(self, key: tuple, page: int) -> None:
+        owner, seq = self.store.lease(page)
+        if owner != self.store.rid:
+            return                         # only the lease owner publishes
+        self.store.publish_prefix(prefix_hash(key), page, seq)
+        self._allocator.mark_exported(page)
+        self.published += 1
+
+    def _publish_chain(self, tokens: list[int], pages: list[int]) -> None:
+        ps = self.page_size
+        for k in range(1, min(len(tokens) // ps, len(pages)) + 1):
+            self._publish_page(tuple(tokens[:k * ps]), pages[k - 1])
+
+    def register(self, tokens: list[int], pages: list[int]) -> None:
+        super().register(tokens, pages)
+        self._publish_chain(tokens, pages)
+
+    def register_tail(self, tokens: list[int], pages: list[int]) -> None:
+        super().register_tail(tokens, pages)
+        ps = self.page_size
+        k = len(pages)
+        if k and k * ps <= len(tokens):    # the page just grown is full
+            self._publish_page(tuple(tokens[:k * ps]), pages[k - 1])
+
+    def resolve_remote(self, key: tuple) -> Optional[tuple[int, int, int]]:
+        """Validated replicated-map probe for the full chain page covering
+        ``key``: (owner_rid, page, seq), or None.  Validation: hash match,
+        publishing epoch still current, page still referenced, owner lane
+        still live.  The *caller* performs the provisional share + commit
+        dance (protocol rule 3)."""
+        hit = self.store.lookup_prefix(prefix_hash(key))
+        if hit is None:
+            return None
+        owner, page, seq = hit
+        if owner < 0 or owner >= self.store.num_replicas:
+            return None
+        cur_owner, cur_seq = self.store.lease(page)
+        if (cur_seq != seq or cur_owner != owner
+                or self.store.retired_mask()[owner]
+                or self.store.refcount(page) <= 0):
+            return None
+        return owner, page, seq
+
+    def lookup(self, tokens: list[int], *, boundary: bool = True
+               ) -> list[int]:
+        local = super().lookup(tokens, boundary=boundary)
+        ps = self.page_size
+        n_full = len(tokens) // ps
+        for k in range(min(len(local), n_full) + 1, n_full + 1):
+            hit = self.resolve_remote(tuple(tokens[:k * ps]))
+            if hit is None or hit[0] == self.store.rid:
+                break
+            self.cross_replica_hits += 1
+        return local
+
+
+# ---------------------------------------------------------------------------
+# Multi-engine serving
+# ---------------------------------------------------------------------------
+
+
+class MultiEngineServer:
+    """N continuous-batching engines on one replicated page table.
+
+    Each engine gets its own ``ReplicatedPageStore`` replica plus the
+    allocator/prefix-cache adapters; requests are dispatched round-robin;
+    every ``sync_every`` steps the replicas gossip all-to-all through their
+    ``AntiEntropyNode``s over a reliable in-process channel (the adversarial
+    channel lives in serving/simulator.py).  ``ttl`` is sized so the
+    fencing rule never fires under this reliable schedule.
+    """
+
+    def __init__(self, cfg, params, *, replicas: int = 2, batch: int,
+                 max_len: int, page_size: int = 64,
+                 pages_per_replica: Optional[int] = None,
+                 sync_every: int = 1, delta_capacity: int = 32,
+                 **engine_kwargs):
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        self.replicas = replicas
+        self.sync_every = sync_every
+        maxp = -(-max_len // page_size)
+        per = pages_per_replica if pages_per_replica is not None \
+            else batch * maxp
+        num_pages = replicas * per
+        ttl = 4 * sync_every
+        self.stores = [ReplicatedPageStore(r, replicas, num_pages)
+                       for r in range(replicas)]
+        gossip = None
+        self.allocators, self.caches, self.nodes = [], [], []
+        for store in self.stores:
+            node = AntiEntropyNode(store, capacity=delta_capacity,
+                                   gossip=gossip)
+            gossip = node.gossip           # share the jitted triple
+            alloc = ReplicatedPageAllocator(store, ttl=ttl, linger=0)
+            self.nodes.append(node)
+            self.allocators.append(alloc)
+            self.caches.append(ReplicatedPrefixCache(alloc, page_size))
+        self.engines = [
+            sched_mod.ContinuousBatchingEngine(
+                cfg, params, batch=batch, max_len=max_len, paged=True,
+                page_size=page_size, num_pages=num_pages,
+                prefix_sharing=True, allocator=self.allocators[r],
+                prefix_cache=self.caches[r], **engine_kwargs)
+            for r in range(replicas)]
+        self.clock = 0
+        self.syncs = 0
+        self._rr = 0
+
+    def submit(self, req: sched_mod.Request) -> int:
+        """Round-robin dispatch; returns the replica the request landed on."""
+        r = self._rr
+        self._rr = (self._rr + 1) % self.replicas
+        self.engines[r].submit(req)
+        return r
+
+    def sync(self) -> None:
+        """One reliable all-to-all gossip round (packets and acks delivered
+        in order, same tick)."""
+        now = self.clock
+        packets = [node.make_packet(dst, now)
+                   for node in self.nodes
+                   for dst in node.acked]
+        for pkt in packets:
+            ack = self.nodes[pkt.dst].receive(pkt, now)
+            self.nodes[pkt.src].receive_ack(ack, now)
+        for alloc in self.allocators:
+            alloc.scavenge()
+        self.syncs += 1
+
+    def step(self) -> bool:
+        more = [e.step() for e in self.engines]
+        self.clock += 1
+        for alloc in self.allocators:
+            alloc.maintain(self.clock)
+        if self.clock % self.sync_every == 0:
+            self.sync()
+        return any(more)
+
+    def run(self, requests: list[sched_mod.Request],
+            max_steps: int = 100_000) -> list[sched_mod.Request]:
+        for req in requests:
+            self.submit(req)
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        else:
+            raise RuntimeError("multi-engine serve hit max_steps")
+        self.sync()                        # final round: frontiers settle
+        return requests
+
+    @property
+    def sync_bytes(self) -> int:
+        return sum(node.bytes_sent for node in self.nodes)
+
+    def stats(self) -> dict:
+        out = {"replicas": self.replicas, "steps": self.clock,
+               "syncs": self.syncs, "sync_bytes": self.sync_bytes,
+               "sync_bytes_per_step": (self.sync_bytes // self.clock
+                                       if self.clock else 0),
+               "cross_replica_hits": sum(c.cross_replica_hits
+                                         for c in self.caches),
+               "published_prefix_pages": sum(c.published
+                                             for c in self.caches)}
+        for key in ("admitted", "completed", "gen_tokens", "prefill_tokens",
+                    "shared_pages", "cow_copies", "preemptions",
+                    "prefill_chunks", "decode_stall_steps"):
+            out[key] = sum(e.stats[key] for e in self.engines)
+        return out
+
+    def converged(self) -> bool:
+        """Bitwise page-table agreement across all replicas."""
+        d0 = self.stores[0].digest()
+        return all(s.digest() == d0 for s in self.stores[1:])
+
+
+class ReplicatedPrefixPageMapper:
+    """``PrefixPageMapper`` over a replicated page table (orchestrator
+    ``--replicas N``).
+
+    Agent rows are partitioned round-robin across N metadata replicas, each
+    owning a home slice of ONE physical page pool (the agents still share a
+    single batched engine, so page ids are globally meaningful).  Because
+    the pool is physically shared, a validated remote prefix hit is adopted
+    for REAL here: the row's block table points straight at the peer-owned
+    page while this replica's counter lane holds the share — the in-process
+    degenerate case of protocol rule 3, where the provisional share commits
+    immediately because the lease epoch is re-read in the same tick.
+    Replicas gossip at every coordination sync (``gossip()``), so
+    cross-replica hits only appear once a peer's publication has shipped —
+    exactly the observation-driven coordination the paper measures, applied
+    to the serving plane.
+    """
+
+    def __init__(self, num_rows: int, maxp: int, page_size: int,
+                 trash_page: int, *, replicas: int = 2,
+                 num_pages: Optional[int] = None,
+                 delta_capacity: int = 32):
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        num_pages = (num_rows + replicas) * maxp if num_pages is None \
+            else num_pages
+        if trash_page < num_pages:
+            raise ValueError(
+                f"trash_page {trash_page} lies inside the allocatable pool "
+                f"[0, {num_pages})")
+        self.replicas = replicas
+        self.page_size = page_size
+        self.maxp = maxp
+        self.trash_page = trash_page
+        self.stores = [ReplicatedPageStore(r, replicas, num_pages)
+                       for r in range(replicas)]
+        gossip = None
+        self.nodes, self.allocators, self.caches = [], [], []
+        for store in self.stores:
+            node = AntiEntropyNode(store, capacity=delta_capacity,
+                                   gossip=gossip)
+            gossip = node.gossip
+            alloc = ReplicatedPageAllocator(store, ttl=4, linger=0)
+            self.nodes.append(node)
+            self.allocators.append(alloc)
+            self.caches.append(ReplicatedPrefixCache(alloc, page_size))
+        self.host_bt = np.full((num_rows, maxp), trash_page, np.int32)
+        self._row_pages: list[list[int]] = [[] for _ in range(num_rows)]
+        self.shared_pages = 0
+        self.cross_replica_hits = 0
+        self.now = 0
+        self._dirty = True
+
+    def _domain(self, row: int) -> int:
+        return row % self.replicas
+
+    def map_row(self, row: int, tokens: list[int], horizon: int) -> int:
+        """Remap ``row``: longest local prefix run, then validated remote
+        adoption for chain pages published by peers, fresh home pages for
+        the rest.  Returns the number of shared (local + adopted) pages."""
+        d = self._domain(row)
+        alloc, cache = self.allocators[d], self.caches[d]
+        ps = self.page_size
+        npages = min(-(-horizon // ps), self.maxp)
+        n_write = len(tokens) // ps       # decode writes from page n_write
+        local = sched_mod.PrefixCache.lookup(cache, tokens,
+                                             boundary=False)[:n_write]
+        alloc.share(local)
+        adopted: list[int] = []
+        for k in range(len(local) + 1, n_write + 1):
+            hit = cache.resolve_remote(tuple(tokens[:k * ps]))
+            if hit is None or hit[0] == d:
+                break
+            owner, page, seq = hit
+            alloc.share([page])            # provisional...
+            if cache.store.lease(page) != (owner, seq):
+                cache.store.ref_sub(page)  # ...epoch moved: abort
+                break
+            adopted.append(page)           # ...same tick: commit
+            self.cross_replica_hits += 1
+        shared = local + adopted
+        fresh = alloc.alloc(npages - len(shared))
+        if fresh is None:
+            alloc.free(shared)
+            raise RuntimeError("agent page pool exhausted")
+        pages = shared + fresh
+        old = self._row_pages[row]
+        self._row_pages[row] = pages
+        self.host_bt[row, :] = self.trash_page
+        self.host_bt[row, :len(pages)] = pages
+        if old:
+            alloc.free(old)               # after remap: self-prefix shares
+        cache.register(tokens[:n_write * ps], pages[:n_write])
+        self.shared_pages += len(shared)
+        self._dirty = True
+        return len(shared)
+
+    def free_row(self, row: int) -> None:
+        if self._row_pages[row]:
+            self.allocators[self._domain(row)].free(self._row_pages[row])
+            self._row_pages[row] = []
+        self.host_bt[row, :] = self.trash_page
+        self._dirty = True
+
+    def install(self, cache):
+        if self._dirty:
+            import jax.numpy as jnp
+            from repro.models import lm
+            cache = lm.set_block_tables(cache, jnp.asarray(self.host_bt))
+            self._dirty = False
+        return cache
+
+    def gossip(self) -> None:
+        """One reliable all-to-all anti-entropy round (same tick)."""
+        self.now += 1
+        for alloc in self.allocators:
+            alloc.now = self.now
+            alloc.maintain(self.now)
+        for src in range(self.replicas):
+            for dst in range(self.replicas):
+                if src == dst:
+                    continue
+                pkt = self.nodes[src].make_packet(dst, self.now)
+                ack = self.nodes[dst].receive(pkt, self.now)
+                self.nodes[src].receive_ack(ack, self.now)
+        for alloc in self.allocators:
+            alloc.scavenge()
+
+    @property
+    def sync_bytes(self) -> int:
+        return sum(node.bytes_sent for node in self.nodes)
+
+    def converged(self) -> bool:
+        d0 = self.stores[0].digest()
+        return all(s.digest() == d0 for s in self.stores[1:])

@@ -293,7 +293,9 @@ class ContinuousBatchingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  prefix_sharing: bool = False, chunk_size: int = 32,
                  token_budget: Optional[int] = None,
-                 prefill_interleave: bool = True):
+                 prefill_interleave: bool = True,
+                 allocator: Optional[Any] = None,
+                 prefix_cache: Optional[Any] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -308,10 +310,18 @@ class ContinuousBatchingEngine:
         self.prefill_interleave = prefill_interleave
         self.maxp = -(-max_len // page_size)
         if paged:
-            if num_pages is None:
+            # Injectable backends: a replicated allocator / prefix cache
+            # (serving/replicated.py) swaps in for the host-local ones as
+            # long as it speaks the same API; the engine sizes its physical
+            # pool to the allocator's full page space either way.
+            if allocator is not None:
+                num_pages = allocator.num_pages
+            elif num_pages is None:
                 num_pages = batch * self.maxp
-            self.allocator = PageAllocator(num_pages)
-            self.prefix_cache = PrefixCache(self.allocator, page_size)
+            self.allocator = (PageAllocator(num_pages) if allocator is None
+                              else allocator)
+            self.prefix_cache = (PrefixCache(self.allocator, page_size)
+                                 if prefix_cache is None else prefix_cache)
             self.trash_page = num_pages          # extra physical page
             self.cache = lm.init_cache(cfg, batch, max_len, paged=True,
                                        page_size=page_size,

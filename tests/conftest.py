@@ -38,4 +38,8 @@ def pytest_configure(config):
         max_examples=25,
         suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
     )
-    settings.load_profile("repro")
+    # "ci" = the repro profile with a fixed derivation seed, so the CI
+    # property job is reproducible run-to-run (HYPOTHESIS_PROFILE=ci).
+    settings.register_profile(
+        "ci", settings.get_profile("repro"), derandomize=True)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "repro"))

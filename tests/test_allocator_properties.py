@@ -1,0 +1,269 @@
+"""Property tests for the single-engine page pool (serving/scheduler.py).
+
+A model-based op machine drives ``PageAllocator`` (alloc / share / free /
+reserve / take / release) against a reference refcount model and checks,
+after EVERY op:
+
+  * conservation: free + referenced == pool (a share never consumes a page,
+    a reservation is already out of the free list),
+  * the allocator's refcounts equal the model's exactly,
+  * the free list is duplicate-free and disjoint from referenced pages,
+  * double-free and share-after-free raise instead of corrupting.
+
+Plus ``PrefixCache`` safety: a lookup never returns a freed or re-allocated
+(generation-bumped) page.
+
+Mirrors tests/test_delta_properties.py's optional-hypothesis pattern:
+explicit seed parameters always run, and when ``hypothesis`` is installed
+(the CI property job) the same machine is additionally driven by generated
+op tapes.  Tier-1 collects and passes without the package.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import PageAllocator, PrefixCache
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+SEEDS = range(10)
+POOL = 12
+
+
+# ---------------------------------------------------------------------------
+# Model-based op machine
+# ---------------------------------------------------------------------------
+
+
+class _Machine:
+    """Interprets an op tape against PageAllocator + a reference model."""
+
+    def __init__(self, num_pages: int = POOL):
+        self.num_pages = num_pages
+        self.alloc = PageAllocator(num_pages)
+        self.refs: dict[int, int] = {}       # model: page -> refcount
+        self.handles: list[int] = []         # one entry per outstanding ref
+        self.reservations: list = []
+        self.ever_allocated: set[int] = set()
+
+    # ops ------------------------------------------------------------------
+
+    def op_alloc(self, k: int) -> None:
+        pages = self.alloc.alloc(k)
+        if pages is None:
+            assert self.alloc.available < k    # only refusal reason
+            return
+        assert len(pages) == k
+        for p in pages:
+            assert self.refs.get(p, 0) == 0, "handed out a live page"
+            self.refs[p] = 1
+            self.handles.append(p)
+            self.ever_allocated.add(p)
+
+    def op_share(self, pick: int) -> None:
+        if not self.handles:
+            return
+        p = self.handles[pick % len(self.handles)]
+        self.alloc.share([p])
+        self.refs[p] += 1
+        self.handles.append(p)
+
+    def op_free(self, pick: int) -> None:
+        if not self.handles:
+            return
+        p = self.handles.pop(pick % len(self.handles))
+        self.alloc.free([p])
+        self.refs[p] -= 1
+
+    def op_reserve(self, k: int) -> None:
+        res = self.alloc.reserve(k)
+        if res is None:
+            return
+        self.reservations.append(res)
+        for p in res._pages:
+            self.refs[p] = 1
+            self.ever_allocated.add(p)
+
+    def op_take(self, pick: int) -> None:
+        if not self.reservations:
+            return
+        res = self.reservations.pop(pick % len(self.reservations))
+        for p in res.take():
+            self.handles.append(p)             # ref already 1 from reserve
+
+    def op_release(self, pick: int) -> None:
+        if not self.reservations:
+            return
+        res = self.reservations.pop(pick % len(self.reservations))
+        for p in list(res._pages):
+            self.refs[p] -= 1
+        res.release()
+
+    OPS = ("alloc", "share", "free", "reserve", "take", "release")
+
+    def apply(self, op: str, arg: int) -> None:
+        if op in ("alloc", "reserve"):
+            getattr(self, f"op_{op}")(arg % 4 + 1)
+        else:
+            getattr(self, f"op_{op}")(arg)
+        self.check()
+
+    # invariants -----------------------------------------------------------
+
+    def check(self) -> None:
+        referenced = {p for p, c in self.refs.items() if c > 0}
+        # Conservation: free + referenced == pool, exactly once each.
+        assert self.alloc.available + len(referenced) == self.num_pages
+        free = self.alloc._free
+        assert len(free) == len(set(free)), "duplicate page on free list"
+        assert not (set(free) & referenced), "free page still referenced"
+        for p in range(self.num_pages):
+            assert self.alloc.refcount(p) == self.refs.get(p, 0), p
+        # shared references never consume pool capacity
+        assert len(self.handles) >= len(referenced) - sum(
+            r.count for r in self.reservations)
+
+    def run_tape(self, tape) -> None:
+        for op, arg in tape:
+            self.apply(op, arg)
+
+
+def _random_tape(rng, length=120):
+    weights = [0.3, 0.2, 0.3, 0.08, 0.06, 0.06]
+    ops = rng.choice(_Machine.OPS, size=length, p=weights)
+    args = rng.integers(0, 1000, size=length)
+    return list(zip(ops.tolist(), args.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# Always-on: explicit seed sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_allocator_conservation_random_tape(seed):
+    rng = np.random.default_rng(seed)
+    m = _Machine()
+    m.run_tape(_random_tape(rng))
+    # Drain: every handle freed returns the pool to fully-available.
+    for res in m.reservations:
+        res.release()
+    m.reservations.clear()
+    for p in list(m.handles):
+        m.alloc.free([p])
+    m.handles.clear()
+    assert m.alloc.available == m.num_pages
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_double_free_always_raises(seed):
+    rng = np.random.default_rng(100 + seed)
+    m = _Machine()
+    m.run_tape(_random_tape(rng, length=60))
+    dead = [p for p in m.ever_allocated if m.refs.get(p, 0) == 0]
+    if not dead:
+        pytest.skip("tape left no fully-freed page")
+    with pytest.raises(ValueError, match="double free"):
+        m.alloc.free([dead[0]])
+    with pytest.raises(ValueError, match="unallocated"):
+        m.alloc.share([dead[0]])
+    m.check()                                  # the failed ops changed nothing
+
+
+def test_free_is_all_or_nothing_on_double_free():
+    """A batched free that hits a dead page must not half-apply silently —
+    pages after the dead one are untouched (free iterates reversed)."""
+    a = PageAllocator(4)
+    pages = a.alloc(3)
+    a.free([pages[2]])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([pages[0], pages[2]])           # reversed: dead page first
+    assert a.refcount(pages[0]) == 1           # untouched by the failed call
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_prefix_cache_never_returns_dead_pages(seed):
+    """Interleave register/free/realloc churn: every page lookup() returns
+    is live (refcount > 0) and generation-current."""
+    rng = np.random.default_rng(200 + seed)
+    ps = 4
+    alloc = PageAllocator(POOL)
+    cache = PrefixCache(alloc, ps)
+    prompts = [[int(t) for t in rng.integers(2, 50, int(rng.integers(4, 13)))]
+               for _ in range(6)]
+    live: list[tuple[list, list]] = []         # (tokens, pages)
+    for _ in range(80):
+        u = rng.random()
+        if u < 0.45 and prompts:
+            toks = list(prompts[int(rng.integers(0, len(prompts)))])
+            npages = -(-len(toks) // ps)
+            shared = cache.lookup(toks)
+            for p in shared:
+                alloc.share([p])
+            fresh = alloc.alloc(npages - len(shared))
+            if fresh is None:
+                alloc.free(shared)
+                continue
+            pages = shared + fresh
+            cache.register(toks, pages)
+            live.append((toks, pages))
+        elif u < 0.8 and live:
+            _, pages = live.pop(int(rng.integers(0, len(live))))
+            alloc.free(pages)
+        else:
+            for toks in prompts:
+                for p in cache.lookup(toks):
+                    assert alloc.refcount(p) > 0, "lookup returned dead page"
+    # Conservation held throughout; drain and verify total recovery.
+    for _, pages in live:
+        alloc.free(pages)
+    assert alloc.available == POOL
+
+
+def test_prefix_cache_generation_guard_rejects_reused_page():
+    ps = 4
+    alloc = PageAllocator(4)
+    cache = PrefixCache(alloc, ps)
+    toks = [1, 2, 3, 4]
+    [page] = alloc.alloc(1)
+    cache.register(toks, [page])
+    assert cache.lookup(toks) == [page]
+    alloc.free([page])
+    # Same physical page, new life: the old prompt's entry must miss.
+    assert alloc.alloc(1) == [page]
+    assert cache.lookup(toks) == []
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven (optional: runs when the package is installed, e.g. in
+# the CI property job; tier-1 collects without it)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    _op_tape = st.lists(
+        st.tuples(st.sampled_from(_Machine.OPS), st.integers(0, 999)),
+        max_size=150)
+
+    @given(tape=_op_tape)
+    @settings(max_examples=50)
+    def test_allocator_conservation_hypothesis(tape):
+        m = _Machine()
+        m.run_tape(tape)
+
+    @given(tape=_op_tape, pool=st.integers(1, 24))
+    @settings(max_examples=50)
+    def test_allocator_drain_recovers_pool_hypothesis(tape, pool):
+        m = _Machine(pool)
+        m.run_tape(tape)
+        for res in m.reservations:
+            res.release()
+        for p in list(m.handles):
+            m.alloc.free([p])
+        assert m.alloc.available == pool

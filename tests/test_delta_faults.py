@@ -1,0 +1,215 @@
+"""Wire faults against the delta sync engine (core/delta.py).
+
+The delta protocol's safety story is that packets are *join deltas*: apply
+is idempotent and commutative, frontiers advance only over shipped cells,
+and a sender re-extracts anything unacknowledged.  These tests put that
+story on an adversarial wire: ``LogDelta`` / ``LWWDelta`` / ``PNDelta``
+packets are dropped, duplicated, and reordered by a seeded channel, acks
+travel over the same faulty wire, and the states must STILL converge
+bit-for-bit to the ``merge.fold_join`` full-state oracle.
+
+This is the packet-level analogue of tests/test_delta_properties.py (which
+syncs losslessly) and the unit-level substrate under the replica simulator
+(tests/test_replicated_pages.py, which faults the whole page-table
+protocol).
+"""
+from __future__ import annotations
+
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counter, delta, gset, merge, todo
+
+SEEDS = range(6)
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Divergent-state builders (ops all happen before any sync)
+# ---------------------------------------------------------------------------
+
+
+def _glog_states(rng, n):
+    base = gset.GLog.empty(n, 16, {"x": ((), jnp.int32)})
+    replicas = [base for _ in range(n)]
+    for _ in range(12):
+        who = int(rng.integers(0, n))
+        replicas[who] = replicas[who].append(
+            jnp.int32(who), x=jnp.int32(rng.integers(1, 99)))
+    return base, replicas
+
+
+def _board_states(rng, n):
+    base = todo.empty(8)
+    replicas = [base for _ in range(n)]
+    clocks = [1] * n
+    for _ in range(12):
+        who = int(rng.integers(0, n))
+        key = int(rng.integers(0, 8))
+        replicas[who] = todo.post(replicas[who], key,
+                                  jnp.zeros((8,), bool),
+                                  jnp.int32(clocks[who]), jnp.int32(who + 1))
+        clocks[who] += 1
+    return base, replicas
+
+
+def _pn_states(rng, n):
+    base = counter.PNCounter.zeros(n, 12)
+    replicas = [base for _ in range(n)]
+    for _ in range(16):
+        who = int(rng.integers(0, n))
+        key = int(rng.integers(0, 12))
+        c = replicas[who]
+        if rng.random() < 0.7 or int(c.inc[who, key] - c.dec[who, key]) == 0:
+            c = c.add(who, key, int(rng.integers(1, 4)))
+        else:
+            c = c.sub(who, key)       # dec <= inc: only drop held refs
+        replicas[who] = c
+    return base, replicas
+
+
+BUILDERS = {"glog": _glog_states, "board": _board_states, "pn": _pn_states}
+
+
+# ---------------------------------------------------------------------------
+# Faulty wire: acked-frontier senders over a drop/dup/reorder channel
+# ---------------------------------------------------------------------------
+
+
+def _faulty_sync(base, replicas, rng, *, drop, dup, delay_max, capacity=4,
+                 rounds=40):
+    """Anti-entropy over an adversarial wire.
+
+    Each sender keeps, per peer, the last *acknowledged* frontier and
+    re-extracts against it every round — exactly the AntiEntropyNode
+    discipline.  Deltas AND acks ride the same faulty channel, so a lost
+    ack forces a (harmless, idempotent) re-send and a duplicated delta is
+    a no-op re-apply.  Returns the converged replicas.
+    """
+    n = len(replicas)
+    genesis = delta.frontier(base)
+    acked = {(s, d): genesis for s in range(n) for d in range(n) if s != d}
+    pending: dict = {}                # (s, d, pkt_id) -> shipped frontier
+    want = merge.fold_join(replicas)
+    q: list = []                      # heap of (deliver_at, seq, payload)
+    seq = 0
+    pkt_id = 0
+    for t in range(rounds):
+        healed = t >= rounds // 2     # second half: reliable catch-up
+        while q and q[0][0] <= t:
+            _, _, msg = heapq.heappop(q)
+            if msg[0] == "delta":
+                _, s, d, pid, dlt = msg
+                replicas[d] = delta.apply(replicas[d], dlt)
+                ack = ("ack", s, d, pid)
+                delay = 1 + (0 if healed else
+                             int(rng.integers(0, delay_max + 1)))
+                heapq.heappush(q, (t + delay, seq, ack))
+                seq += 1
+            else:
+                _, s, d, pid = msg
+                fr = pending.pop((s, d, pid), None)
+                if fr is not None:
+                    acked[(s, d)] = fr
+        if all(_trees_equal(r, want) for r in replicas) and not q:
+            break
+        for s in range(n):
+            for d in range(n):
+                if s == d:
+                    continue
+                dlt, shipped = delta.extract(replicas[s], acked[(s, d)],
+                                             capacity)
+                if not healed and rng.random() < drop:
+                    continue
+                copies = 2 if (not healed and rng.random() < dup) else 1
+                pending[(s, d, pkt_id)] = shipped
+                for _ in range(copies):
+                    delay = 1 + (0 if healed else
+                                 int(rng.integers(0, delay_max + 1)))
+                    heapq.heappush(
+                        q, (t + delay, seq, ("delta", s, d, pkt_id, dlt)))
+                    seq += 1
+                pkt_id += 1
+    return replicas, want
+
+
+FAULTS = {
+    "drop": dict(drop=0.5, dup=0.0, delay_max=0),
+    "dup": dict(drop=0.0, dup=0.6, delay_max=0),
+    "reorder": dict(drop=0.0, dup=0.0, delay_max=4),
+    "all": dict(drop=0.3, dup=0.3, delay_max=3),
+}
+
+
+@pytest.mark.parametrize("fault", sorted(FAULTS))
+@pytest.mark.parametrize("kind", sorted(BUILDERS))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_delta_sync_survives_wire_faults(kind, fault, seed):
+    rng = np.random.default_rng(1000 + seed)
+    n = int(rng.integers(2, 5))
+    base, replicas = BUILDERS[kind](rng, n)
+    replicas, want = _faulty_sync(base, replicas,
+                                  np.random.default_rng(2000 + seed),
+                                  **FAULTS[fault])
+    for i, r in enumerate(replicas):
+        assert _trees_equal(r, want), (kind, fault, seed, i)
+
+
+@pytest.mark.parametrize("kind", sorted(BUILDERS))
+def test_duplicated_delta_is_idempotent(kind):
+    rng = np.random.default_rng(42)
+    base, replicas = BUILDERS[kind](rng, 3)
+    fr = delta.frontier(base)
+    tgt = base
+    for r in replicas:
+        d, _ = delta.extract(r, fr, 32)
+        tgt = delta.apply(tgt, d)
+        assert _trees_equal(tgt, delta.apply(tgt, d))   # dup -> no-op
+    assert _trees_equal(tgt, merge.fold_join(replicas))
+
+
+@pytest.mark.parametrize("kind", sorted(BUILDERS))
+def test_reordered_deltas_commute(kind):
+    """Applying a batch of deltas in any order lands the same bits."""
+    rng = np.random.default_rng(43)
+    base, replicas = BUILDERS[kind](rng, 4)
+    fr = delta.frontier(base)
+    deltas = [delta.extract(r, fr, 32)[0] for r in replicas]
+    orders = [list(range(4)), [3, 1, 0, 2], [2, 3, 1, 0]]
+    results = []
+    for order in orders:
+        tgt = base
+        for i in order:
+            tgt = delta.apply(tgt, deltas[i])
+        results.append(tgt)
+    for got in results[1:]:
+        assert _trees_equal(got, results[0])
+    assert _trees_equal(results[0], merge.fold_join(replicas))
+
+
+def test_pn_counter_delta_capacity_overflow_converges():
+    """More changed PN cells than packet capacity: unshipped cells stay
+    behind the frontier and ship on later rounds (overflow liveness for
+    the counter type added with the replicated page table)."""
+    base = counter.PNCounter.zeros(2, 16)
+    a = base
+    for k in range(12):
+        a = a.add(0, k, k + 1)
+    fr = delta.frontier(base)
+    peer = base
+    for _ in range(6):
+        d, fr = delta.extract(a, fr, 3)
+        peer = delta.apply(peer, d)
+        if _trees_equal(peer, a):
+            break
+    assert _trees_equal(peer, a)
+    assert int(peer.value[5]) == 6

@@ -605,3 +605,51 @@ def test_mixed_width_buckets():
     assert engine_mod.width_bucket(3, 8) == 4
     assert engine_mod.width_bucket(9, 8) == 8
     assert engine_mod.width_bucket(0, 8) == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cross-mode stats invariants (interleaved vs stalled admission)
+# ---------------------------------------------------------------------------
+
+def test_cross_mode_counter_invariants(mha_llm):
+    """On an identical workload, the two admission modes must agree on every
+    work-conservation counter — same tokens prefilled, same tokens
+    generated, same completions — and differ exactly where they schedule:
+    interleaved admission never stalls a decode lane
+    (``decode_stall_steps == 0``) while the stalled baseline must, and its
+    stalls are bounded by its own prefill-chunk count (a lane can only
+    stall on steps that run a prompt chunk)."""
+    cfg, params = mha_llm
+    stats = {}
+    toks = {}
+    for interleave in (True, False):
+        rng = np.random.default_rng(71)
+        eng = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                       paged=True, page_size=PS,
+                                       chunk_size=PS,
+                                       prefill_interleave=interleave)
+        toks[interleave] = [tuple(r.tokens)
+                            for r in eng.run(_mk_requests(rng, SPEC))]
+        stats[interleave] = dict(eng.stats)
+    inter, stall = stats[True], stats[False]
+    # Work conservation: identical totals in both modes.
+    for key in ("admitted", "completed", "prefill_tokens", "gen_tokens"):
+        assert inter[key] == stall[key], key
+    assert inter["prefill_tokens"] == sum(n for n, _ in SPEC)
+    assert inter["gen_tokens"] == sum(m for _, m in SPEC)
+    # Chunk accounting: every admission carries at least one chunk, and
+    # interleaved (chunk_size-bounded) admission can only split prompts
+    # more finely than the stalled whole-prompt baseline — never coarser.
+    for s in (inter, stall):
+        assert s["prefill_chunks"] >= s["admitted"]
+        assert s["prefills"] <= s["prefill_chunks"]
+    assert inter["prefill_chunks"] >= stall["prefill_chunks"]
+    # Scheduling difference: interleaving is exactly the removal of stalls.
+    assert inter["decode_stall_steps"] == 0
+    assert inter["stalled_lane_steps"] == 0
+    assert stall["decode_stall_steps"] > 0
+    assert stall["stalled_lane_steps"] >= stall["decode_stall_steps"]
+    # A lane only stalls on a step that carried someone else's chunk.
+    assert stall["decode_stall_steps"] <= stall["prefills"]
+    # Scheduling never changes tokens.
+    assert toks[True] == toks[False]
