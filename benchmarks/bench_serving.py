@@ -312,6 +312,51 @@ def run_replicated(cfg, params, *, replicas: int, batch: int, max_len: int,
     }
 
 
+def _fault_row(trace: dict, base_steps: int) -> dict:
+    srv = trace["server"]
+    return {
+        "schedule": trace["schedule"],
+        # -1 marks the fault-free reference run of the same workload.
+        "crash_at": -1 if trace["crash_replica"] is None
+        else trace["crash_at"],
+        "steps": trace["steps"],
+        "recovery_step_overhead": trace["steps"] - base_steps,
+        "completed": srv["completed"],
+        "gen_tokens": srv["gen_tokens"],
+        "goodput_tokens_per_step": srv["gen_tokens"] / max(trace["steps"], 1),
+        "recovered": srv["recovered_requests"],
+        "retried": srv["retried"],
+        "shed": srv["shed"],
+        "expired": srv["expired"],
+        "lost": srv["lost_requests"],
+        "failed": srv["failed_requests"],
+        "ok": trace["ok"],
+    }
+
+
+def run_fault_sweep(cfg, params, *, schedules: tuple[str, ...],
+                    crash_ats: tuple[int, ...], seed: int = 0) -> list[dict]:
+    """Crash-failover sweep over the REAL multi-engine server (chaos
+    harness): each row is one seeded (fault schedule x crash step) trial
+    plus one fault-free reference of the same workload.  Greedy decoding
+    and a seeded channel make every counter bit-identical across reruns of
+    the same commit, so the regression gate holds them to the strict
+    threshold; ``recovery_step_overhead`` (extra steps vs the fault-free
+    reference — a TTFT/latency penalty in step units) is the headline
+    recovery-cost number."""
+    from repro.serving import chaos
+
+    clean = chaos.run_chaos(cfg, params, schedule="lossy", seed=seed,
+                            crash_replica=None)
+    rows = [_fault_row(clean, clean["steps"])]
+    for schedule in schedules:
+        for crash_at in crash_ats:
+            trace = chaos.run_chaos(cfg, params, schedule=schedule,
+                                    seed=seed, crash_at=crash_at)
+            rows.append(_fault_row(trace, clean["steps"]))
+    return rows
+
+
 def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
               emit_csv=print) -> dict:
     from repro.agents.orchestrator import make_sim_llm
@@ -364,6 +409,13 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
             page_size=page_size, prompt_len=3 * page_size + 5,
             max_new=max_new))
 
+    # Fault sweep: crash failover + load shedding on the real server over
+    # seeded faulty gossip (deterministic counters; see run_fault_sweep).
+    fault_rows = run_fault_sweep(
+        cfg, params,
+        schedules=("lossy",) if quick else ("lossy", "reorder_delay"),
+        crash_ats=(4,) if quick else (4, 8))
+
     ratios = []
     for d in rows:
         if d["mode"] != "dense":
@@ -381,6 +433,17 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
         "chunked_admission": chunk_rows,
         "prefix_share": share_rows,
         "replicated": repl_rows,
+        "fault": fault_rows,
+        "fault_tolerance": {
+            # Acceptance: every trial upholds the chaos invariants
+            # (exactly-once, bitwise convergence, lane conservation), no
+            # accepted request is ever lost, and every crash trial actually
+            # exercised failover (recovered at least one orphan).
+            "all_invariants_ok": all(r["ok"] for r in fault_rows),
+            "no_lost_requests": all(r["lost"] == 0 for r in fault_rows),
+            "crash_runs_recovered": all(
+                r["recovered"] > 0 for r in fault_rows if r["crash_at"] >= 0),
+        },
         "replication": {
             # Every replica pair landed bitwise-identical page tables after
             # the drain sync, and the fan-out workload produced at least one
@@ -436,6 +499,15 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                    f";converged={int(r['converged'])}")
         emit_csv(f"serving/repl_r{r['replicas']},{r['us_per_step']:.1f},"
                  f"{derived}")
+    for r in fault_rows:
+        name = (f"serving/fault_{r['schedule']}"
+                + ("_clean" if r["crash_at"] < 0 else f"_c{r['crash_at']}"))
+        derived = (f"recovered={r['recovered']};retried={r['retried']}"
+                   f";shed={r['shed']};lost={r['lost']}"
+                   f";overheadSteps={r['recovery_step_overhead']}"
+                   f";goodput={r['goodput_tokens_per_step']:.3f}"
+                   f";ok={int(r['ok'])}")
+        emit_csv(f"{name},0.0,{derived}")
     return report
 
 

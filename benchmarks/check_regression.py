@@ -52,6 +52,15 @@ CHUNK_COUNTERS = ("steps", "decode_stall_steps", "stalled_lane_steps",
 # shipping more metadata per step — a real coordination-cost regression.
 REPL_COUNTERS = ("sync_bytes_per_step", "sync_bytes", "steps")
 
+# Fault sweep counters: the chaos harness decodes greedily over a seeded
+# channel, so recovery cost and shedding volume are bit-identical across
+# reruns of the same commit.  An increase past the strict threshold means
+# failover got slower (more overhead steps to re-complete orphans) or the
+# runtime started dropping more work (shed/failed/lost) — both real
+# robustness regressions.
+FAULT_COUNTERS = ("steps", "recovery_step_overhead", "recovered", "retried",
+                  "shed", "lost", "failed")
+
 
 def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
     return {(r["batch"], r["skew"]): r
@@ -65,6 +74,11 @@ def chunk_rows_by_key(report: dict) -> dict[tuple, dict]:
 
 def repl_rows_by_key(report: dict) -> dict[tuple, dict]:
     return {(r["replicas"],): r for r in report.get("replicated", [])}
+
+
+def fault_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["schedule"], r["crash_at"]): r
+            for r in report.get("fault", [])}
 
 
 def timing_value(report: dict, key: tuple) -> tuple[float, str]:
@@ -147,6 +161,30 @@ def check(baseline: dict, current: dict, max_regression: float,
                            ("all_completed",
                             "replicated sweep completed all requests")):
             flag_ok = current.get("replication", {}).get(flag, False)
+            lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
+            ok = ok and flag_ok
+
+    fbase = fault_rows_by_key(baseline)
+    fcur = fault_rows_by_key(current)
+    for key in sorted(fbase):
+        if key not in fcur:
+            ok = False
+            lines.append(f"MISSING fault row {key} in current run")
+            continue
+        label = (f"fault {key[0]}"
+                 + (" clean" if key[1] < 0 else f" c{key[1]}"))
+        for name in FAULT_COUNTERS:
+            judge(label, name, float(fbase[key][name]),
+                  float(fcur[key][name]), max_regression)
+    if fbase and "fault" in current:
+        for flag, desc in (("all_invariants_ok",
+                            "chaos invariants (exactly-once, convergence, "
+                            "lane conservation) hold"),
+                           ("no_lost_requests",
+                            "no accepted request lost across failover"),
+                           ("crash_runs_recovered",
+                            "every crash trial recovered orphans")):
+            flag_ok = current.get("fault_tolerance", {}).get(flag, False)
             lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
             ok = ok and flag_ok
     return ok, lines

@@ -40,6 +40,7 @@ from repro.serving import engine as engine_mod
 IDLE, PREFILL, GEN, HALT = "idle", "prefill", "gen", "halt"
 OBSERVE_EVERY = 8          # steps between observation sweeps
 MAX_REPREFILL = 2          # bounded re-contextualizations per TODO
+MAX_MAP_FAILURES = 3       # consecutive page-map failures before giving up
 SLOT_CAP = 1024
 
 
@@ -54,6 +55,9 @@ class AgentState:
     reprefills: int = 0
     snapshot: Optional[observe.Snapshot] = None
     lamport: Lamport = None
+    failures: int = 0                   # consecutive page-map failures
+    needs_map: bool = False             # row unmapped; waiting to retry
+    retry_at: int = 0                   # step at which to retry the map
 
 
 @dataclass
@@ -81,6 +85,8 @@ class RunResult:
     replicas: int = 1               # page-table metadata replicas
     cross_replica_prefix_hits: int = 0  # prefix pages adopted from a peer
     page_sync_bytes: int = 0        # page-table anti-entropy wire bytes
+    agent_failures: int = 0         # page-map failures hit by agent loops
+    agent_retries: int = 0          # successful backoff re-maps after failure
 
     @property
     def tokens_per_s(self) -> float:
@@ -239,12 +245,35 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     else:
         cache = lm.init_cache(cfg, n_agents, max_len)
 
-    def recontextualize(a: AgentState) -> None:
-        """Map the agent's new prompt into pages (shared-prefix admission)."""
+    def recontextualize(a: AgentState) -> bool:
+        """Map the agent's new prompt into pages (shared-prefix admission).
+
+        Returns False when the pool cannot serve the re-map right now: the
+        agent's row is released (which relieves the very pressure that made
+        the map fail) and the agent backs off with deterministic jitter
+        instead of the whole trial aborting.  Only after MAX_MAP_FAILURES
+        consecutive failures does the pool-exhausted error propagate.
+        """
         if mapper is None:
-            return
+            return True
         horizon = min(len(a.queue) + gen_budget, max_len)
-        mapper.map_row(a.row, a.queue, horizon)
+        try:
+            mapper.map_row(a.row, a.queue, horizon)
+        except RuntimeError:
+            stats["agent_fail"] += 1
+            a.failures += 1
+            if a.failures >= MAX_MAP_FAILURES:
+                raise
+            mapper.free_row(a.row)
+            a.needs_map = True
+            a.retry_at = stats["steps"] + engine_mod.backoff_steps(
+                a.client, a.failures)
+            return False
+        if a.needs_map:
+            stats["agent_retry"] += 1
+        a.needs_map = False
+        a.failures = 0
+        return True
 
     def push_tables() -> None:
         nonlocal cache
@@ -304,7 +333,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                            * (task.par_inflation if mode == "parallel"
                               else 1.0)))
     stats = dict(gen=0, replay=0, steps=0, inval=0, collide=0, observe=0,
-                 syncs=0, sync_bytes=0)
+                 syncs=0, sync_bytes=0, agent_fail=0, agent_retry=0)
     merge_perm_seed = 0
 
     # Host-side mirrors: CRDT appends are buffered per agent and flushed at
@@ -420,6 +449,13 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
             spans = np.zeros((n_agents,), np.int64)
             finishing: list[AgentState] = []
             for a in agents:
+                if a.phase == PREFILL and a.needs_map:
+                    # Unmapped row: no KV pages to write into.  Idle this
+                    # lane (span 0) until the backoff expires and a re-map
+                    # succeeds; positions never advanced, so nothing resets.
+                    if not (stats["steps"] >= a.retry_at
+                            and recontextualize(a)):
+                        continue
                 if a.phase == PREFILL and a.queue:
                     spans[a.row] = min(chunk_size, len(a.queue))
                 elif a.phase == PREFILL:
@@ -468,6 +504,14 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
             # -- one batched decode step (replay baseline) -------------------
             forced = np.array(token)      # writable host copy
             for a in agents:
+                if a.phase == PREFILL and a.needs_map:
+                    # Unmapped row: its writes land on the trash page, so
+                    # the step is harmless — but its prompt must not be
+                    # consumed.  On a successful re-map, restart from 0.
+                    if stats["steps"] >= a.retry_at and recontextualize(a):
+                        pos = pos.at[a.row].set(0)
+                    else:
+                        continue
                 if a.phase == PREFILL and a.queue:
                     forced[a.row] = a.queue.pop(0)
                     stats["replay"] += 1
@@ -551,6 +595,8 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         replicas=replicas,
         cross_replica_prefix_hits=getattr(mapper, "cross_replica_hits", 0),
         page_sync_bytes=getattr(mapper, "sync_bytes", 0),
+        agent_failures=stats["agent_fail"],
+        agent_retries=stats["agent_retry"],
     )
 
 

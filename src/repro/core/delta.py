@@ -468,13 +468,32 @@ def frontier(state: Any) -> Any:
     raise TypeError(f"no delta support for {type(state).__name__}")
 
 
-def extract(state: Any, fr: Any, capacity: int) -> tuple[Any, Any]:
-    """Delta of ``state`` beyond ``fr`` plus the frontier actually shipped."""
+def _cap_for(capacity: Any, key: str) -> Any:
+    """Resolve a per-key delta capacity.  ``capacity`` is either a plain int
+    (every leaf ships that many slots) or a hashable tuple of ``(key, cap)``
+    pairs with a ``"*"`` default — so one chatty leaf (e.g. the request
+    journal) can ship bigger deltas without inflating every other leaf's
+    fixed-size packet.  Tuples stay hashable for ``extract_jit``'s static
+    argnum."""
+    if isinstance(capacity, int):
+        return capacity
+    spec = dict(capacity)
+    return spec.get(key, spec["*"])
+
+
+def extract(state: Any, fr: Any, capacity: Any) -> tuple[Any, Any]:
+    """Delta of ``state`` beyond ``fr`` plus the frontier actually shipped.
+
+    ``capacity`` is an int, or a tuple of ``(key, cap)`` pairs (see
+    ``_cap_for``) resolved at each dict level."""
     fn = _EXTRACT.get(type(state))
     if fn is not None:
+        if not isinstance(capacity, int):
+            capacity = _cap_for(capacity, "*")
         return fn(state, fr, capacity)
     if isinstance(state, dict):
-        pairs = {k: extract(v, fr[k], capacity) for k, v in state.items()}
+        pairs = {k: extract(v, fr[k], _cap_for(capacity, k))
+                 for k, v in state.items()}
         return ({k: p[0] for k, p in pairs.items()},
                 {k: p[1] for k, p in pairs.items()})
     raise TypeError(f"no delta support for {type(state).__name__}")

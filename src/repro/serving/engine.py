@@ -133,6 +133,22 @@ def mixed_width_buckets(chunk: int) -> tuple[int, ...]:
     return tuple(out)
 
 
+def backoff_steps(rid: int, attempt: int, *, base: int = 4,
+                  cap: int = 64) -> int:
+    """Retry delay (in steps) for attempt ``attempt`` of request/agent
+    ``rid``: capped exponential backoff plus deterministic jitter.
+
+    The jitter is a pure hash of (rid, attempt), so re-admission order is
+    reproducible across runs (the fault benches and chaos harness gate on
+    deterministic counters) while still de-synchronizing retries that failed
+    together — the reason jitter exists at all.
+    """
+    delay = min(cap, base << max(0, attempt - 1))
+    h = (rid * 0x9E3779B1 + attempt * 0x85EBCA77) & 0xFFFFFFFF
+    h ^= h >> 16
+    return delay + h % max(1, delay // 2)
+
+
 # ---------------------------------------------------------------------------
 # Fused decode + CRDT coordination
 # ---------------------------------------------------------------------------

@@ -86,6 +86,22 @@ from repro.serving import scheduler as sched_mod
 
 HASH_BITS = 62
 
+# Request-journal entry tags (the ``tag`` field of the ``journal`` GLog).
+# The journal is the crash-failover substrate: every accepted request's
+# descriptor (prompt tokens + generated-so-far) is journaled in its owner
+# replica's append-only lane and gossips with the rest of the CRDT state,
+# so any survivor can reconstruct a crashed replica's in-flight requests.
+#   ACCEPT : a = (prompt_len << 16) | max_new_tokens, b = eos_id+1 (0=None)
+#   PROMPT : a = position, b = token            (one entry per prompt token)
+#   GEN    : a = output index, b = token        (one entry per decode step)
+#   DONE / SHED / EXPIRED / FAIL : terminal markers (DONE: a = output len)
+#   ADOPT  : a = retry count — a survivor took ownership after retirement
+(J_ACCEPT, J_PROMPT, J_GEN, J_DONE,
+ J_SHED, J_EXPIRED, J_ADOPT, J_FAIL) = range(8)
+
+JOURNAL_FIELDS = {"rid": ((), np.int32), "tag": ((), np.int32),
+                  "a": ((), np.int32), "b": ((), np.int32)}
+
 
 def prefix_hash(key: tuple) -> int:
     """Deterministic 62-bit FNV-1a of an int tuple (a token prefix).  Both
@@ -97,7 +113,8 @@ def prefix_hash(key: tuple) -> int:
     return h & ((1 << HASH_BITS) - 1)
 
 
-def zero_state(num_replicas: int, num_pages: int, prefix_slots: int) -> dict:
+def zero_state(num_replicas: int, num_pages: int, prefix_slots: int,
+               journal_capacity: int = 256) -> dict:
     """The pristine CRDT pytree every replica starts from (and the template
     gossip frontiers are seeded with)."""
     return {
@@ -111,6 +128,8 @@ def zero_state(num_replicas: int, num_pages: int, prefix_slots: int) -> dict:
                                            "owner": ((), np.int32)}),
         "hb": gset.GCounter.zeros(num_replicas),
         "retire": gset.GSet.empty(num_replicas * num_replicas),
+        "journal": gset.GLog.empty(num_replicas, journal_capacity,
+                                   JOURNAL_FIELDS),
     }
 
 
@@ -126,7 +145,8 @@ class ReplicatedPageStore:
     """
 
     def __init__(self, rid: int, num_replicas: int, num_pages: int,
-                 prefix_slots: Optional[int] = None):
+                 prefix_slots: Optional[int] = None,
+                 journal_capacity: int = 256):
         if not 0 <= rid < num_replicas:
             raise ValueError(f"rid {rid} outside [0, {num_replicas})")
         if num_replicas >= MAX_CLIENTS:
@@ -136,6 +156,7 @@ class ReplicatedPageStore:
         self.num_pages = num_pages
         self.prefix_slots = (2 * num_pages if prefix_slots is None
                              else prefix_slots)
+        self.journal_capacity = journal_capacity
         self.majority = num_replicas // 2 + 1
         n, p, s = num_replicas, num_pages, self.prefix_slots
         self.inc = np.zeros((n, p), np.int32)
@@ -151,6 +172,10 @@ class ReplicatedPageStore:
                                  "owner")}
         self.hb = np.zeros(n, np.int32)
         self.retire = np.zeros(n * n, bool)
+        self.jr_count = np.zeros(n, np.int32)
+        self.jr = {name: np.zeros((n, journal_capacity), np.int32)
+                   for name in ("rid", "tag", "a", "b")}
+        self.journal_dropped = 0          # appends lost to a full lane
         self.lam = 0                                  # local Lamport time
         # Host metadata (not CRDT state): gossip recency per peer, fed by
         # AntiEntropyNode and read by the fencing rule.
@@ -253,6 +278,32 @@ class ReplicatedPageStore:
         return (int(self.pfx["owner"][slot]) - 1,
                 int(self.pfx["page"][slot]), int(self.pfx["seq"][slot]))
 
+    # -- request journal (single-writer: own lane only) ---------------------
+
+    def journal_append(self, rid: int, tag: int, a: int = 0, b: int = 0
+                       ) -> None:
+        """One entry in this replica's journal lane (GLog semantics: drops
+        silently when the lane is full — ``journal_dropped`` counts it, and
+        a request whose descriptor is incomplete fails over as FAIL instead
+        of resurrecting with corrupt state)."""
+        i = int(self.jr_count[self.rid])
+        if i >= self.journal_capacity:
+            self.journal_dropped += 1
+            return
+        for name, v in (("rid", rid), ("tag", tag), ("a", a), ("b", b)):
+            self.jr[name][self.rid, i] = v
+        self.jr_count[self.rid] = i + 1
+
+    def journal_entries(self):
+        """Every journal entry visible in this replica's merged view, as
+        ``(lane, rid, tag, a, b)`` — per-lane append order within a lane."""
+        for lane in range(self.num_replicas):
+            for i in range(int(self.jr_count[lane])):
+                yield (lane, int(self.jr["rid"][lane, i]),
+                       int(self.jr["tag"][lane, i]),
+                       int(self.jr["a"][lane, i]),
+                       int(self.jr["b"][lane, i]))
+
     # -- liveness -----------------------------------------------------------
 
     def heartbeat(self, now: int) -> None:
@@ -284,6 +335,9 @@ class ReplicatedPageStore:
                 payload={k: jnp.asarray(v) for k, v in self.pfx.items()}),
             "hb": gset.GCounter(jnp.asarray(self.hb)),
             "retire": gset.GSet(jnp.asarray(self.retire)),
+            "journal": gset.GLog(
+                count=jnp.asarray(self.jr_count),
+                fields={k: jnp.asarray(v) for k, v in self.jr.items()}),
         }
 
     def load(self, tree: dict) -> None:
@@ -301,6 +355,8 @@ class ReplicatedPageStore:
         self.pfx = {k: host(v) for k, v in tree["prefix"].payload.items()}
         self.hb = host(tree["hb"].counts)
         self.retire = host(tree["retire"].member)
+        self.jr_count = host(tree["journal"].count)
+        self.jr = {k: host(v) for k, v in tree["journal"].fields.items()}
         self.lam = max(self.lam, int(self.lease_clock.max()),
                        int(self.pfx_clock.max()))
 
@@ -315,7 +371,8 @@ class ReplicatedPageStore:
         for arr in (self.inc, self.dec, self.lease_clock, self.lease_client,
                     self.lease_owner, self.lease_seq, self.pfx_clock,
                     self.pfx_client, *(self.pfx[k] for k in sorted(self.pfx)),
-                    self.hb, self.retire):
+                    self.hb, self.retire, self.jr_count,
+                    *(self.jr[k] for k in sorted(self.jr))):
             m.update(np.ascontiguousarray(arr).tobytes())
         return m.digest()
 
@@ -360,14 +417,22 @@ class AntiEntropyNode:
     PENDING_LIMIT = 64        # unacked shipped-frontiers kept per peer
 
     def __init__(self, store: ReplicatedPageStore, capacity: int = 32,
-                 gossip=None):
+                 gossip=None, journal_capacity: Optional[int] = None):
         from repro.serving import engine as engine_mod
         self.store = store
         self.capacity = capacity
+        # The journal lane is chattier than the page-table leaves (one entry
+        # per prompt/decode token), so it ships with its own, larger delta
+        # capacity — a per-leaf override resolved by delta._cap_for.
+        jcap = min(store.journal_capacity,
+                   4 * capacity if journal_capacity is None
+                   else journal_capacity)
+        cap_spec = (("journal", jcap), ("*", capacity))
         self.gossip = gossip if gossip is not None else \
             engine_mod.make_gossip_fns(
                 zero_state(store.num_replicas, store.num_pages,
-                           store.prefix_slots), capacity)
+                           store.prefix_slots, store.journal_capacity),
+                cap_spec)
         peers = [j for j in range(store.num_replicas) if j != store.rid]
         self.acked = {j: self.gossip.genesis for j in peers}
         self.pending: dict[int, dict[int, Any]] = {j: {} for j in peers}
@@ -465,10 +530,13 @@ class ReplicatedPageAllocator:
             return None
         return sched_mod.Reservation(self, pages)
 
-    def share(self, pages: list[int]) -> None:
+    def share(self, pages: list[int], row: Optional[int] = None) -> None:
         for p in pages:
             if self.store.refcount(p) <= 0:
-                raise ValueError(f"cannot share unallocated page {p}")
+                raise ValueError(
+                    f"cannot share unallocated page {p}"
+                    f"{sched_mod._row_ctx(row)} (refcount "
+                    f"{self.store.refcount(p)})")
             self.store.ref_add(p)
 
     def refcount(self, page: int) -> int:
@@ -480,8 +548,13 @@ class ReplicatedPageAllocator:
         guards against."""
         return self.store.lease(page)[1]
 
-    def free(self, pages: list[int]) -> None:
+    def free(self, pages: list[int], row: Optional[int] = None) -> None:
         for p in reversed(pages):
+            if self.store.lane_held(p) < 1:
+                raise ValueError(
+                    f"double free of page {p}{sched_mod._row_ctx(row)} "
+                    f"(lane {self.store.rid} holds "
+                    f"{self.store.lane_held(p)})")
             self.store.ref_sub(p)          # raises on lane double-free
             self._retire_if_idle(p)
 
@@ -658,21 +731,73 @@ class ReplicatedPrefixCache(sched_mod.PrefixCache):
 # ---------------------------------------------------------------------------
 
 
+class ReliableChannel:
+    """Lossless in-process transport: every packet sent this tick delivers
+    this tick, in send order.  API-compatible with the simulator's
+    ``FaultyChannel`` (``send``/``deliver``/``in_flight``/``healed``), so
+    ``MultiEngineServer`` syncs through either interchangeably."""
+
+    def __init__(self):
+        self._q: list = []
+        self.sent = 0
+        self.healed = True                 # nothing to heal
+
+    def send(self, pkt, now: int) -> None:
+        self._q.append(pkt)
+        self.sent += 1
+
+    def deliver(self, now: int) -> list:
+        out, self._q = self._q, []
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._q)
+
+
 class MultiEngineServer:
     """N continuous-batching engines on one replicated page table.
 
     Each engine gets its own ``ReplicatedPageStore`` replica plus the
     allocator/prefix-cache adapters; requests are dispatched round-robin;
     every ``sync_every`` steps the replicas gossip all-to-all through their
-    ``AntiEntropyNode``s over a reliable in-process channel (the adversarial
-    channel lives in serving/simulator.py).  ``ttl`` is sized so the
-    fencing rule never fires under this reliable schedule.
+    ``AntiEntropyNode``s over ``channel`` — the default ``ReliableChannel``
+    (under which ``ttl`` is sized so the fencing rule never fires) or the
+    simulator's ``FaultyChannel``, which subjects the *real* engines to
+    drop/dup/delay/reorder/partition schedules.
+
+    Fault tolerance (the PR-6 fault model, promoted to the real path):
+
+      * Every accepted request's descriptor is journaled in its owner's
+        CRDT journal lane (``J_ACCEPT`` + per-token ``J_PROMPT``, then one
+        ``J_GEN`` per decode step and a terminal marker) and gossips with
+        the page table.
+      * ``crash(r)`` crash-stops replica r mid-flight.  Its heartbeat
+        freezes; survivors fence, vote, and retire it through the existing
+        lease/TTL/majority machinery, after which its pages re-home and
+        the lowest live replica ADOPTS its unfinished requests: each is
+        reconstructed from the merged journal (prompt + generated-so-far)
+        and re-admitted — through the prefix cache, so recovered prefill
+        is mostly page hits — with capped retries and deterministic
+        backoff (``engine.backoff_steps``).
+      * Exactly-once delivery = journaled ``J_DONE``: completion is
+        recorded once (re-runs that find a DONE already visible suppress
+        the duplicate), and the adopter is deterministic (lowest live), so
+        an accepted-and-not-shed request completes exactly once.
+      * Crash failover needs enough survivors to form a retirement
+        majority (``floor(N/2)+1``): with N=2 a crashed peer's requests
+        stay pinned rather than being reclaimed unsafely — the same
+        trade the page table itself makes.
     """
 
     def __init__(self, cfg, params, *, replicas: int = 2, batch: int,
                  max_len: int, page_size: int = 64,
                  pages_per_replica: Optional[int] = None,
                  sync_every: int = 1, delta_capacity: int = 32,
+                 channel=None, ttl: Optional[int] = None,
+                 journal_capacity: int = 256,
+                 max_queue: Optional[int] = None, max_retries: int = 2,
+                 adopt_grace: Optional[int] = None,
                  **engine_kwargs):
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
@@ -682,8 +807,12 @@ class MultiEngineServer:
         per = pages_per_replica if pages_per_replica is not None \
             else batch * maxp
         num_pages = replicas * per
-        ttl = 4 * sync_every
-        self.stores = [ReplicatedPageStore(r, replicas, num_pages)
+        ttl = 4 * sync_every if ttl is None else ttl
+        self.channel = channel if channel is not None else ReliableChannel()
+        self.max_retries = max_retries
+        self.adopt_grace = ttl if adopt_grace is None else adopt_grace
+        self.stores = [ReplicatedPageStore(r, replicas, num_pages,
+                                           journal_capacity=journal_capacity)
                        for r in range(replicas)]
         gossip = None
         self.allocators, self.caches, self.nodes = [], [], []
@@ -700,41 +829,246 @@ class MultiEngineServer:
                 cfg, params, batch=batch, max_len=max_len, paged=True,
                 page_size=page_size, num_pages=num_pages,
                 prefix_sharing=True, allocator=self.allocators[r],
-                prefix_cache=self.caches[r], **engine_kwargs)
+                prefix_cache=self.caches[r], max_queue=max_queue,
+                journal=(lambda rr: lambda kind, req:
+                         self._journal(rr, kind, req))(r),
+                **engine_kwargs)
             for r in range(replicas)]
         self.clock = 0
         self.syncs = 0
         self._rr = 0
+        self.crashed = [False] * replicas
+        self.crash_events: list[dict] = []
+        self._retired_seen: dict[int, int] = {}
+        self._recovery_pending = False
+        self._adopted_this_step = 0
+        self.recovered_requests = 0        # reconstructed + re-admitted
+        self.recovered_complete = 0        # finished; only the DONE was lost
+        self.failed_requests = 0           # exceeded max_retries
+        self.lost_requests = 0             # descriptor incomplete (journal)
+        self.dup_done_suppressed = 0       # exactly-once dedup hits
+
+    # -- request journal ----------------------------------------------------
+
+    def _journal(self, r: int, kind: str, req: sched_mod.Request) -> None:
+        """Engine → journal hook: record decode progress and terminal
+        status in replica r's journal lane."""
+        store = self.stores[r]
+        if kind == "gen":
+            store.journal_append(req.rid, J_GEN, len(req.tokens) - 1,
+                                 req.tokens[-1])
+        elif kind == "done":
+            if self._done_logged(store, req.rid):
+                self.dup_done_suppressed += 1
+            else:
+                store.journal_append(req.rid, J_DONE, len(req.tokens))
+        elif kind == "shed":
+            store.journal_append(req.rid, J_SHED)
+        elif kind == "expired":
+            store.journal_append(req.rid, J_EXPIRED)
+
+    @staticmethod
+    def _done_logged(store: ReplicatedPageStore, rid: int) -> bool:
+        return any(t == J_DONE and r == rid
+                   for _, r, t, _a, _b in store.journal_entries())
 
     def submit(self, req: sched_mod.Request) -> int:
-        """Round-robin dispatch; returns the replica the request landed on."""
-        r = self._rr
-        self._rr = (self._rr + 1) % self.replicas
-        self.engines[r].submit(req)
-        return r
+        """Round-robin dispatch over live replicas; journals the request
+        descriptor in the accepting replica's lane.  Returns the replica."""
+        for _ in range(self.replicas):
+            r = self._rr
+            self._rr = (self._rr + 1) % self.replicas
+            if self.crashed[r] or self.allocators[r].halted:
+                continue
+            store = self.stores[r]
+            store.journal_append(
+                req.rid, J_ACCEPT,
+                (len(req.prompt) << 16) | req.max_new_tokens,
+                0 if req.eos_id is None else req.eos_id + 1)
+            for i, t in enumerate(req.prompt):
+                store.journal_append(req.rid, J_PROMPT, i, t)
+            self.engines[r].submit(req)
+            return r
+        raise RuntimeError("no live replica to accept the request")
+
+    # -- gossip through the channel -----------------------------------------
+
+    def _pump(self, now: int) -> None:
+        """Deliver everything the channel has due: delta packets go to the
+        destination node (its ack rides the channel back), acks advance the
+        sender's frontier.  Packets addressed to a crashed replica drop on
+        the floor — exactly what a dead process does."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for pkt in self.channel.deliver(now):
+                progressed = True
+                if self.crashed[pkt.dst]:
+                    continue
+                node = self.nodes[pkt.dst]
+                if isinstance(pkt, AckPacket):
+                    node.receive_ack(pkt, now)
+                else:
+                    self.channel.send(node.receive(pkt, now), now)
 
     def sync(self) -> None:
-        """One reliable all-to-all gossip round (packets and acks delivered
-        in order, same tick)."""
+        """One all-to-all gossip round through the channel.  Reliable
+        channel: packets and acks deliver in order, same tick — bit-
+        identical to the pre-channel reliable sync.  Faulty channel:
+        this round's packets land on later ticks (min delay 1), earlier
+        rounds' survivors land now."""
         now = self.clock
-        packets = [node.make_packet(dst, now)
-                   for node in self.nodes
-                   for dst in node.acked]
-        for pkt in packets:
-            ack = self.nodes[pkt.dst].receive(pkt, now)
-            self.nodes[pkt.src].receive_ack(ack, now)
-        for alloc in self.allocators:
-            alloc.scavenge()
+        self._pump(now)
+        for src in range(self.replicas):
+            if self.crashed[src] or self.allocators[src].halted:
+                continue
+            node = self.nodes[src]
+            retired = self.stores[src].retired_mask()
+            for dst in node.acked:
+                if retired[dst]:
+                    continue               # no point gossiping to the dead
+                self.channel.send(node.make_packet(dst, now), now)
+        self._pump(now)
+        for r in range(self.replicas):
+            if not self.crashed[r]:
+                self.allocators[r].scavenge()
         self.syncs += 1
 
+    # -- crash failover -----------------------------------------------------
+
+    def crash(self, r: int) -> None:
+        """Crash-stop replica r: it stops stepping, heartbeating and
+        gossiping, and every packet addressed to it is dropped.  Recovery
+        rides the retirement protocol; see the class docstring."""
+        if self.crashed[r]:
+            return
+        self.crashed[r] = True
+        self.crash_events.append({"replica": r, "step": self.clock})
+        live = self.replicas - sum(self.crashed)
+        if live >= self.stores[0].majority:
+            self._recovery_pending = True
+
+    @staticmethod
+    def _contiguous(entries: dict[int, int]) -> list[int]:
+        """Longest gap-free run of journaled (index → value) from 0."""
+        out: list[int] = []
+        while len(out) in entries:
+            out.append(entries[len(out)])
+        return out
+
+    def _fold_journal(self, store: ReplicatedPageStore) -> dict[int, dict]:
+        """Merge the journal into per-request descriptors.  The owner is
+        the ACCEPT lane until an ADOPT supersedes it (highest retry count
+        wins — lanes are scanned in id order, not arrival order)."""
+        info: dict[int, dict] = {}
+        for lane, rid, tag, a, b in store.journal_entries():
+            d = info.setdefault(rid, {
+                "accept_lane": None, "adopt_lane": None, "retries": 0,
+                "plen": 0, "max_new": 0, "eos": None,
+                "prompt": {}, "gen": {}, "terminal": False})
+            if tag == J_ACCEPT:
+                d["accept_lane"] = lane
+                d["plen"] = a >> 16
+                d["max_new"] = a & 0xFFFF
+                d["eos"] = b - 1 if b > 0 else None
+            elif tag == J_PROMPT:
+                d["prompt"][a] = b
+            elif tag == J_GEN:
+                d["gen"][a] = b
+            elif tag == J_ADOPT:
+                if a >= d["retries"]:
+                    d["adopt_lane"], d["retries"] = lane, a
+            elif tag in (J_DONE, J_SHED, J_EXPIRED, J_FAIL):
+                d["terminal"] = True
+        for d in info.values():
+            d["owner"] = (d["adopt_lane"] if d["adopt_lane"] is not None
+                          else d["accept_lane"])
+        return info
+
+    def _recover(self) -> None:
+        """Adopt a retired replica's unfinished requests.  Runs on the
+        lowest live replica's view only (a single deterministic adopter,
+        like page re-homing), after retirement has been observed for
+        ``adopt_grace`` ticks so the crashed lane's journal entries have
+        converged across survivors."""
+        from repro.serving import engine as engine_mod
+        live = [r for r in range(self.replicas)
+                if not self.crashed[r] and not self.allocators[r].halted]
+        if not live:
+            self._recovery_pending = False
+            return
+        adopter = live[0]
+        store = self.stores[adopter]
+        retired = store.retired_mask()
+        crashed = [r for r in range(self.replicas) if self.crashed[r]]
+        if not all(retired[r] for r in crashed):
+            return                         # retirement votes still in flight
+        for r in crashed:
+            self._retired_seen.setdefault(r, self.clock)
+        if any(self.clock - self._retired_seen[r] < self.adopt_grace
+               for r in crashed):
+            return                         # journal still converging
+        engine = self.engines[adopter]
+        info = self._fold_journal(store)
+        adopted = 0
+        for rid in sorted(info):
+            d = info[rid]
+            if (d["owner"] is None or not retired[d["owner"]]
+                    or d["terminal"]):
+                continue
+            prompt = self._contiguous(d["prompt"])
+            gen = self._contiguous(d["gen"])
+            if len(prompt) != d["plen"] or d["max_new"] < 1:
+                store.journal_append(rid, J_FAIL)   # descriptor incomplete
+                self.lost_requests += 1
+                continue
+            retries = d["retries"] + 1
+            if retries > self.max_retries:
+                store.journal_append(rid, J_FAIL)
+                self.failed_requests += 1
+                continue
+            store.journal_append(rid, J_ADOPT, retries)
+            req = sched_mod.Request(rid=rid, prompt=prompt,
+                                    max_new_tokens=d["max_new"],
+                                    eos_id=d["eos"])
+            req.tokens = list(gen)
+            req.retries = retries
+            if (len(gen) >= d["max_new"]
+                    or (d["eos"] is not None and gen
+                        and gen[-1] == d["eos"])):
+                # Finished on the crashed replica; only the DONE was lost.
+                req.status = sched_mod.COMPLETED
+                store.journal_append(rid, J_DONE, len(gen))
+                self.recovered_complete += 1
+                continue
+            engine.submit(req)
+            req.retry_at = engine.stats["steps"] + \
+                engine_mod.backoff_steps(rid, retries)
+            self.recovered_requests += 1
+            adopted += 1
+        self._recovery_pending = False
+        self._adopted_this_step = adopted
+
+    # -- serve loop ---------------------------------------------------------
+
     def step(self) -> bool:
-        more = [e.step() for e in self.engines]
+        more = False
+        for r, e in enumerate(self.engines):
+            if not self.crashed[r]:
+                more = e.step() or more
         self.clock += 1
-        for alloc in self.allocators:
-            alloc.maintain(self.clock)
+        for r, alloc in enumerate(self.allocators):
+            if not self.crashed[r]:
+                alloc.maintain(self.clock)
         if self.clock % self.sync_every == 0:
             self.sync()
-        return any(more)
+        self._adopted_this_step = 0
+        if self._recovery_pending:
+            self._recover()
+        # Adoption re-enqueues work AFTER the engines stepped — the step
+        # that adopts must report progress or the serve loop would exit
+        # with the recovered requests still queued.
+        return more or self._recovery_pending or self._adopted_this_step > 0
 
     def run(self, requests: list[sched_mod.Request],
             max_steps: int = 100_000) -> list[sched_mod.Request]:
@@ -760,17 +1094,29 @@ class MultiEngineServer:
                "cross_replica_hits": sum(c.cross_replica_hits
                                          for c in self.caches),
                "published_prefix_pages": sum(c.published
-                                             for c in self.caches)}
+                                             for c in self.caches),
+               "crashes": len(self.crash_events),
+               "recovered_requests": self.recovered_requests,
+               "recovered_complete": self.recovered_complete,
+               "failed_requests": self.failed_requests,
+               "lost_requests": self.lost_requests,
+               "dup_done_suppressed": self.dup_done_suppressed}
         for key in ("admitted", "completed", "gen_tokens", "prefill_tokens",
                     "shared_pages", "cow_copies", "preemptions",
-                    "prefill_chunks", "decode_stall_steps"):
+                    "prefill_chunks", "decode_stall_steps",
+                    "shed", "expired", "retried", "preempt_fenced"):
             out[key] = sum(e.stats[key] for e in self.engines)
         return out
 
     def converged(self) -> bool:
-        """Bitwise page-table agreement across all replicas."""
-        d0 = self.stores[0].digest()
-        return all(s.digest() == d0 for s in self.stores[1:])
+        """Bitwise page-table agreement across live (non-crashed,
+        non-halted) replicas."""
+        stores = [s for r, s in enumerate(self.stores)
+                  if not self.crashed[r] and not self.allocators[r].halted]
+        if not stores:
+            return True
+        d0 = stores[0].digest()
+        return all(s.digest() == d0 for s in stores[1:])
 
 
 class ReplicatedPrefixPageMapper:

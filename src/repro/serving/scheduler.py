@@ -61,6 +61,19 @@ from repro.serving.engine import PROMPT_BUCKETS, bucket_len  # noqa: F401
 
 Params = Any
 
+# Request lifecycle states.  QUEUED -> RUNNING -> COMPLETED is the happy
+# path; PREEMPTED requests re-queue at the front and run again; SHED /
+# EXPIRED / FAILED are terminal (the request never completes here — a
+# failed-over request is *reconstructed* as a fresh QUEUED request by the
+# survivor, see serving/replicated.py).
+QUEUED = "queued"
+RUNNING = "running"
+PREEMPTED = "preempted"
+FAILED = "failed"
+SHED = "shed"
+EXPIRED = "expired"
+COMPLETED = "completed"
+
 
 class Reservation:
     """Pages earmarked for one admission candidate (already out of the free
@@ -84,6 +97,12 @@ class Reservation:
         if self._pages:
             self._allocator.free(self._pages)
             self._pages = []
+
+
+def _row_ctx(row: Optional[int]) -> str:
+    """Error-message suffix naming the engine row an allocator misuse came
+    from (allocators are row-agnostic; callers pass the context)."""
+    return "" if row is None else f" (row {row})"
 
 
 class PageAllocator:
@@ -125,10 +144,12 @@ class PageAllocator:
             return None
         return Reservation(self, pages)
 
-    def share(self, pages: list[int]) -> None:
+    def share(self, pages: list[int], row: Optional[int] = None) -> None:
         for p in pages:
             if self._ref[p] <= 0:
-                raise ValueError(f"cannot share unallocated page {p}")
+                raise ValueError(
+                    f"cannot share unallocated page {p}{_row_ctx(row)} "
+                    f"(refcount {int(self._ref[p])})")
             self._ref[p] += 1
 
     def refcount(self, page: int) -> int:
@@ -137,10 +158,12 @@ class PageAllocator:
     def generation(self, page: int) -> int:
         return int(self._gen[page])
 
-    def free(self, pages: list[int]) -> None:
+    def free(self, pages: list[int], row: Optional[int] = None) -> None:
         for p in reversed(pages):
             if self._ref[p] <= 0:
-                raise ValueError(f"double free of page {p}")
+                raise ValueError(
+                    f"double free of page {p}{_row_ctx(row)} "
+                    f"(refcount {int(self._ref[p])})")
             self._ref[p] -= 1
             if self._ref[p] == 0:
                 self._free.append(p)
@@ -271,6 +294,15 @@ class Request:
     filled: int = 0                   # prompt cursor: context tokens cached
     admit_len: int = 0                # admission target: len(context) at bind
     safe_upto: int = 0                # writes below this match shared bytes
+    # -- lifecycle / SLO ----------------------------------------------------
+    status: str = QUEUED
+    priority: int = 0                 # higher = shed later, admitted earlier
+    ttft_deadline: Optional[int] = None   # steps from submit to first token
+    deadline: Optional[int] = None        # steps from submit to completion
+    submitted_step: int = -1
+    retries: int = 0                  # failover re-admissions so far
+    max_retries: int = 2
+    retry_at: int = 0                 # earliest step admission may bind this
 
     @property
     def context(self) -> list[int]:
@@ -282,6 +314,10 @@ class Request:
     def admitting(self) -> bool:
         """Still streaming its admission context in (vs decoding)."""
         return self.filled < self.admit_len
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in (COMPLETED, SHED, EXPIRED, FAILED)
 
 
 class ContinuousBatchingEngine:
@@ -295,7 +331,9 @@ class ContinuousBatchingEngine:
                  token_budget: Optional[int] = None,
                  prefill_interleave: bool = True,
                  allocator: Optional[Any] = None,
-                 prefix_cache: Optional[Any] = None):
+                 prefix_cache: Optional[Any] = None,
+                 max_queue: Optional[int] = None,
+                 journal: Optional[Any] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -360,12 +398,20 @@ class ContinuousBatchingEngine:
         self._cow_src: list[int] = []         # COW pairs pending this step
         self._cow_dst: list[int] = []
         self._dev_memo: dict[str, tuple[np.ndarray, jax.Array]] = {}
+        self.max_queue = max_queue
+        self._journal = journal           # callable(kind, req) or None
         self.stats = {"steps": 0, "prefills": 0, "prefill_chunks": 0,
                       "admitted": 0, "completed": 0, "peak_pages": 0,
                       "gen_tokens": 0, "prefill_tokens": 0,
                       "shared_pages": 0, "cow_copies": 0, "preemptions": 0,
                       "grown_pages": 0, "admit_s": 0.0,
-                      "decode_stall_steps": 0, "stalled_lane_steps": 0}
+                      "decode_stall_steps": 0, "stalled_lane_steps": 0,
+                      # Fault-tolerance accounting: totals plus per-cause
+                      # counters (the satellite: causes are distinct).
+                      "shed": 0, "shed_queue_full": 0, "shed_capacity": 0,
+                      "expired": 0, "expired_ttft": 0, "expired_deadline": 0,
+                      "expired_queued": 0, "retried": 0,
+                      "preempt_for_pages": 0, "preempt_fenced": 0}
 
     # -- request lifecycle --------------------------------------------------
 
@@ -385,7 +431,83 @@ class ContinuousBatchingEngine:
             if worst > self.allocator.num_pages:
                 raise ValueError(f"request {req.rid} needs {worst} pages "
                                  f"> pool {self.allocator.num_pages}")
+        req.status = QUEUED
+        req.submitted_step = self.stats["steps"]
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # Bounded admission queue: shed the lowest-priority request
+            # (ties broken toward the youngest) among the queue plus the
+            # newcomer — backpressure never evicts higher-priority work.
+            idx = min(range(len(self.queue)),
+                      key=lambda i: (self.queue[i].priority, -i))
+            victim = self.queue[idx]
+            if req.priority <= victim.priority:
+                self._shed(req, "shed_queue_full")
+                return
+            del self.queue[idx]
+            self._shed(victim, "shed_queue_full")
         self.queue.append(req)
+
+    def _shed(self, req: Request, cause: str) -> None:
+        req.status = SHED
+        req.finished_step = self.stats["steps"]
+        self.stats["shed"] += 1
+        self.stats[cause] += 1
+        if self._journal is not None:
+            self._journal("shed", req)
+
+    def _expire(self, req: Request, cause: str) -> None:
+        req.status = EXPIRED
+        req.finished_step = self.stats["steps"]
+        self.stats["expired"] += 1
+        self.stats[cause] += 1
+        if self._journal is not None:
+            self._journal("expired", req)
+
+    def _check_deadlines(self) -> None:
+        """Drop queued and running requests whose TTFT / end-to-end deadline
+        (in engine steps since submission) can no longer be met."""
+        now = self.stats["steps"]
+
+        def _late(req: Request) -> Optional[str]:
+            if req.submitted_step < 0:
+                return None
+            age = now - req.submitted_step
+            if (req.ttft_deadline is not None and req.first_token_step < 0
+                    and age >= req.ttft_deadline):
+                return "expired_ttft"
+            if req.deadline is not None and age >= req.deadline:
+                return "expired_deadline"
+            return None
+
+        if self.queue and any(_late(q) for q in self.queue):
+            keep: deque[Request] = deque()
+            for q in self.queue:
+                if _late(q) is None:
+                    keep.append(q)
+                else:
+                    self._expire(q, "expired_queued")
+            self.queue = keep
+        for row in range(self.batch):
+            req = self.rows[row]
+            if req is None:
+                continue
+            cause = _late(req)
+            if cause is not None:
+                self._release_row(row)
+                self.rows[row] = None
+                self.row_pos[row] = 0
+                self._expire(req, cause)
+
+    def _shed_on_capacity_loss(self) -> None:
+        """Graceful degradation: a halted replica (retired by the majority)
+        can never admit again — shed its queue, lowest priority first, so
+        callers see SHED now instead of requests pinned forever."""
+        if not self.queue or not getattr(self.allocator, "halted", False):
+            return
+        for q in sorted(self.queue, key=lambda q: (q.priority,
+                                                   q.submitted_step)):
+            self._shed(q, "shed_capacity")
+        self.queue.clear()
 
     def _note_peak(self) -> None:
         used = self.allocator.num_pages - self.allocator.available
@@ -394,7 +516,10 @@ class ContinuousBatchingEngine:
     def _free_row(self, row: int) -> None:
         req = self.rows[row]
         req.finished_step = self.stats["steps"]
+        req.status = COMPLETED
         self.stats["completed"] += 1
+        if self._journal is not None:
+            self._journal("done", req)
         self._release_row(row)
         self.rows[row] = None
         self.row_pos[row] = 0
@@ -404,7 +529,7 @@ class ContinuousBatchingEngine:
         if self.paged:
             # req.pages is kept (now historical) — the allocator owns reuse,
             # and a preempted request's re-admission overwrites the list.
-            self.allocator.free(req.pages)
+            self.allocator.free(req.pages, row=row)
             self.host_bt[row, :] = self.trash_page
             self._bt_dirty = True
 
@@ -428,14 +553,27 @@ class ContinuousBatchingEngine:
         cursor advances.  No prefill happens here — the next mixed steps
         stream the prompt in.  Head-of-line blocking on page budget is
         deliberate: FIFO completion-time fairness.
+
+        Candidate order is priority-first (FIFO within a priority class);
+        a request in retry backoff (``retry_at`` in the future) is skipped
+        without blocking the requests behind it.
         """
         t0 = time.perf_counter()
         admitted = 0
         reset_rows: list[int] = []
+        now = self.stats["steps"]
         for row in range(self.batch):
             if self.rows[row] is not None or not self.queue:
                 continue
-            req = self.queue[0]
+            cand = None
+            for i, q in enumerate(self.queue):
+                if q.retry_at > now:
+                    continue                   # backing off: not eligible yet
+                if cand is None or q.priority > self.queue[cand].priority:
+                    cand = i
+            if cand is None:
+                break                          # every queued request backs off
+            req = self.queue[cand]
             ctx = req.context
             if self.paged:
                 first = min(self.chunk_size, len(ctx)) \
@@ -449,7 +587,7 @@ class ContinuousBatchingEngine:
                 if res is None:
                     break                      # wait for completions
                 if shared:
-                    self.allocator.share(shared)
+                    self.allocator.share(shared, row=row)
                     self.stats["shared_pages"] += len(shared)
                 req.pages = shared + res.take()
                 req.safe_upto = min(len(shared) * self.page_size, len(ctx))
@@ -467,8 +605,11 @@ class ContinuousBatchingEngine:
                     # whole prompt — only generated-token writes diverge.
                     self.prefix_cache.register(req.prompt, req.pages)
                     req.safe_upto = max(req.safe_upto, len(req.prompt))
-            self.queue.popleft()
+            del self.queue[cand]
             self.rows[row] = req
+            if req.retries and req.status == QUEUED:
+                self.stats["retried"] += 1    # a backoff re-admission bound
+            req.status = RUNNING
             req.filled = 0
             req.admit_len = len(ctx)
             req.admitted_step = self.stats["steps"]
@@ -496,13 +637,9 @@ class ContinuousBatchingEngine:
 
     # -- incremental growth / COW / preemption ------------------------------
 
-    def _preempt_for_pages(self, needy_row: int, spans: np.ndarray) -> bool:
-        """Evict the least-recently-allocating other row (recomputation)."""
-        victims = [r for r in range(self.batch)
-                   if r != needy_row and self.rows[r] is not None]
-        if not victims:
-            return False
-        victim = min(victims, key=lambda r: (self._last_alloc[r], r))
+    def _evict_row(self, victim: int, spans: np.ndarray, cause: str) -> None:
+        """Release ``victim``'s pages and re-queue it at the front
+        (preemption by recomputation); per-cause counters stay distinct."""
         req = self.rows[victim]
         # A COW copy queued this step whose destination dies with the victim
         # must be dropped: the freed page can be re-handed out in this same
@@ -515,18 +652,46 @@ class ContinuousBatchingEngine:
         self._cow_dst = [d for _, d in keep]
         self._release_row(victim)
         self.rows[victim] = None
+        req.status = PREEMPTED
         self.queue.appendleft(req)             # resumes with context intact
         self.row_pos[victim] = 0
         spans[victim] = 0                      # no span for the evicted row
         self.stats["preemptions"] += 1
+        self.stats[cause] += 1
+
+    def _preempt_for_pages(self, needy_row: int, spans: np.ndarray) -> bool:
+        """Evict the least-recently-allocating other row (recomputation)."""
+        victims = [r for r in range(self.batch)
+                   if r != needy_row and self.rows[r] is not None]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda r: (self._last_alloc[r], r))
+        self._evict_row(victim, spans, "preempt_for_pages")
         return True
 
+    def _alloc_blocked(self) -> bool:
+        """True while the allocator refuses ALL allocation for reasons no
+        preemption can fix: a replicated allocator that is fenced (a peer is
+        unheard) or halted (retired by the majority).  Preempting victims
+        then would shed work without freeing anything usable."""
+        a = self.allocator
+        if getattr(a, "halted", False):
+            return True
+        fenced = getattr(a, "fenced", None)
+        return bool(fenced is not None and fenced(getattr(a, "now", 0)))
+
     def _alloc_one(self, row: int, spans: np.ndarray) -> int:
+        """One page for ``row``, preempting other rows if needed.  Returns
+        -1 when allocation is fenced/halted shut: the needy row itself is
+        preempted (it resumes once the allocator unblocks)."""
         while True:
             pages = self.allocator.alloc(1)
             if pages is not None:
                 self._last_alloc[row] = self.stats["steps"]
                 return pages[0]
+            if self._alloc_blocked():
+                self._evict_row(row, spans, "preempt_fenced")
+                return -1
             if not self._preempt_for_pages(row, spans):
                 raise RuntimeError(
                     f"page pool exhausted ({self.allocator.num_pages} pages)"
@@ -568,7 +733,7 @@ class ContinuousBatchingEngine:
                         pg = self.prefix_cache.lookup_page(req.context,
                                                            widx)
                         if pg is not None:
-                            self.allocator.share([pg])
+                            self.allocator.share([pg], row=row)
                             self.host_bt[row, widx] = pg
                             req.pages.append(pg)
                             self._bt_dirty = True
@@ -579,6 +744,8 @@ class ContinuousBatchingEngine:
                                     len(req.context)))
                             continue
                     new = self._alloc_one(row, spans)
+                    if new < 0:
+                        break              # fenced: the row self-preempted
                     if self.rows[row] is not req:
                         self.allocator.free([new])
                         break
@@ -595,6 +762,8 @@ class ContinuousBatchingEngine:
                 elif (self.allocator.refcount(page) > 1
                         and max(lo, req.safe_upto) < hi):
                     new = self._alloc_one(row, spans)
+                    if new < 0:
+                        break              # fenced: the row self-preempted
                     if self.rows[row] is not req:
                         self.allocator.free([new])
                         break
@@ -602,7 +771,7 @@ class ContinuousBatchingEngine:
                     self._cow_dst.append(new)
                     self.host_bt[row, widx] = new
                     req.pages[req.pages.index(page)] = new
-                    self.allocator.free([page])  # drop our shared reference
+                    self.allocator.free([page], row=row)  # drop shared ref
                     self._bt_dirty = True
                     self.stats["cow_copies"] += 1
         if self._cow_src:
@@ -684,9 +853,17 @@ class ContinuousBatchingEngine:
 
     def step(self) -> bool:
         """One token-budget mixed step.  Returns False when fully drained."""
+        self._check_deadlines()
+        self._shed_on_capacity_loss()
         self.admit()
         if all(r is None for r in self.rows):
-            return bool(self.queue)
+            if self.queue:
+                # Nothing bound (every queued request backing off or blocked
+                # on pages): the step clock must still tick, or retry_at
+                # would never be reached.
+                self.stats["steps"] += 1
+                return True
+            return False
         spans = self._compose()
         if self.paged:
             self._ensure_pages(spans)
@@ -738,6 +915,8 @@ class ContinuousBatchingEngine:
             self.token[row] = int(sampled[row])
             req.tokens.append(int(sampled[row]))
             self.stats["gen_tokens"] += 1
+            if self._journal is not None:
+                self._journal("gen", req)
             if req.first_token_step < 0:
                 req.first_token_step = self.stats["steps"]
             if self._done(req):

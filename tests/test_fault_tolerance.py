@@ -1,0 +1,281 @@
+"""Fault-tolerant serving runtime: deadlines, retry backoff, load shedding,
+and crash failover (the robustness tentpole).
+
+Engine-level tests drive ``ContinuousBatchingEngine`` directly: TTFT and
+end-to-end deadlines expire queued and running requests (releasing their
+pages), bounded queues shed by priority, a halted replica sheds its queue
+on capacity loss, and retry backoff delays re-admission without blocking
+the requests behind it.
+
+System-level tests run the chaos harness (serving/chaos.py): a real
+multi-engine server over a seeded ``FaultyChannel``, one engine crashed
+mid-flight, asserting exactly-once completion, bitwise convergence, and
+per-lane refcount conservation — the acceptance gate (>= 3 seeds x >= 2
+fault schedules).
+
+Agent-level tests cover the orchestrator's map-failure backoff: a transient
+page-pool exhaustion idles one agent lane and retries with deterministic
+jitter instead of aborting the trial.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import lm
+from repro.serving import chaos
+from repro.serving.engine import backoff_steps
+from repro.serving.scheduler import (ContinuousBatchingEngine, PageAllocator,
+                                     Request, COMPLETED, EXPIRED, SHED)
+
+B, MAX_LEN, PS = 3, 32, 8
+
+
+@pytest.fixture(scope="module")
+def llm():
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=32, vocab=128)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32),
+                          lm.init(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _engine(llm, **kw):
+    cfg, params = llm
+    kw.setdefault("batch", B)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("page_size", PS)
+    kw.setdefault("chunk_size", 8)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _req(rid, plen=8, new=4, **kw):
+    rng = np.random.default_rng(rid)
+    return Request(rid=rid, prompt=[int(t) for t in rng.integers(2, 100, plen)],
+                   max_new_tokens=new, **kw)
+
+
+def _drain(engine, max_steps=500):
+    for _ in range(max_steps):
+        if not engine.step():
+            return
+    raise AssertionError("engine did not drain")
+
+
+# ---------------------------------------------------------------------------
+# Retry backoff (engine.backoff_steps)
+# ---------------------------------------------------------------------------
+
+def test_backoff_deterministic_and_capped():
+    for rid in range(5):
+        for attempt in range(1, 8):
+            d1 = backoff_steps(rid, attempt)
+            assert d1 == backoff_steps(rid, attempt), "must be pure"
+            assert 1 <= d1 < 64 + 32    # cap + max jitter (cap // 2)
+    # Exponential growth dominates jitter at low attempts.
+    assert backoff_steps(7, 4) > backoff_steps(7, 1)
+    # Distinct rids jitter apart somewhere (no thundering herd).
+    assert len({backoff_steps(r, 3) for r in range(16)}) > 1
+
+
+# ---------------------------------------------------------------------------
+# Deadlines: TTFT + end-to-end, queued + running
+# ---------------------------------------------------------------------------
+
+def test_ttft_deadline_expires_queued_request(llm):
+    eng = _engine(llm, batch=1)
+    blocker = _req(0, new=16)
+    eng.submit(blocker)
+    eng.step()                       # blocker binds the only row
+    waiter = _req(1, ttft_deadline=2)
+    eng.submit(waiter)
+    for _ in range(6):
+        eng.step()
+    assert waiter.status == EXPIRED
+    assert eng.stats["expired"] == 1
+    assert eng.stats["expired_queued"] == 1
+    assert blocker.status != EXPIRED
+
+
+def test_ttft_deadline_expires_running_request(llm):
+    # Prompt of 12 at chunk 4 needs 3 chunks to first token; TTFT 2 can
+    # never be met, so the bound request expires mid-prefill.
+    eng = _engine(llm, chunk_size=4)
+    req = _req(0, plen=12, ttft_deadline=2)
+    eng.submit(req)
+    for _ in range(6):
+        eng.step()
+    assert req.status == EXPIRED
+    assert eng.stats["expired_ttft"] == 1
+
+
+def test_e2e_deadline_expires_and_releases_pages(llm):
+    eng = _engine(llm, batch=1)
+    free0 = eng.allocator.available
+    req = _req(0, plen=8, new=20, deadline=4)
+    eng.submit(req)
+    for _ in range(10):
+        eng.step()
+    assert req.status == EXPIRED
+    assert eng.stats["expired_deadline"] == 1
+    assert len(req.tokens) < 20, "deadline must cut generation short"
+    assert eng.allocator.available == free0, "expired request leaked pages"
+    # The engine stays serviceable after the expiry.
+    ok = _req(1, new=2)
+    eng.submit(ok)
+    _drain(eng)
+    assert ok.status == COMPLETED
+
+
+# ---------------------------------------------------------------------------
+# Load shedding: bounded queue + capacity loss
+# ---------------------------------------------------------------------------
+
+def test_queue_full_sheds_lowest_priority(llm):
+    eng = _engine(llm, batch=1, max_queue=2)
+    eng.submit(_req(0, new=16))
+    eng.step()                       # occupy the row; queue now empty
+    lo, mid = _req(1, priority=0), _req(2, priority=1)
+    eng.submit(lo)
+    eng.submit(mid)                  # queue full at 2
+    hi = _req(3, priority=2)
+    eng.submit(hi)                   # evicts lo (lowest priority)
+    assert lo.status == SHED
+    assert [q.rid for q in eng.queue] == [2, 3]
+    late_lo = _req(4, priority=0)
+    eng.submit(late_lo)              # no victim outranked: newcomer shed
+    assert late_lo.status == SHED
+    assert eng.stats["shed"] == 2
+    assert eng.stats["shed_queue_full"] == 2
+    assert eng.stats["shed_capacity"] == 0
+
+
+def test_capacity_loss_sheds_queue(llm):
+    eng = _engine(llm, batch=1)
+    running = _req(0, new=16)
+    eng.submit(running)
+    eng.step()
+    stranded = [_req(1, priority=1), _req(2, priority=0)]
+    for q in stranded:
+        eng.submit(q)
+    eng.allocator.halted = True      # majority retired this replica
+    eng.step()
+    assert all(q.status == SHED for q in stranded)
+    assert not eng.queue
+    assert eng.stats["shed_capacity"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Retry backoff ordering at admission
+# ---------------------------------------------------------------------------
+
+def test_backoff_delays_readmission_without_blocking(llm):
+    eng = _engine(llm, batch=1)
+    retrying = _req(0, new=2)
+    eng.submit(retrying)
+    retrying.retries, retrying.retry_at = 1, 8   # backing off until step 8
+    fresh = _req(1, new=2)
+    eng.submit(fresh)                # behind `retrying` in FIFO order
+    eng.step()
+    assert eng.rows[0] is fresh, "backoff must not head-of-line block"
+    _drain(eng)
+    assert fresh.status == COMPLETED
+    assert retrying.status == COMPLETED
+    assert retrying.admitted_step >= 8, "re-admitted before backoff expired"
+    assert eng.stats["retried"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Allocator diagnostics (satellite: errors name page id and row)
+# ---------------------------------------------------------------------------
+
+def test_allocator_errors_name_page_and_row():
+    alloc = PageAllocator(4)
+    pages = alloc.alloc(2)
+    alloc.free(pages)
+    with pytest.raises(ValueError, match=r"double free of page \d+.*row 7"):
+        alloc.free([pages[0]], row=7)
+    with pytest.raises(ValueError, match=r"unallocated page \d+.*row 3"):
+        alloc.share([pages[1]], row=3)
+
+
+# ---------------------------------------------------------------------------
+# Chaos harness: crash failover over faulty gossip (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos_llm():
+    return chaos.tiny_model()
+
+
+@pytest.mark.parametrize("schedule", ["lossy", "reorder_delay"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_crash_failover_exactly_once(chaos_llm, schedule, seed):
+    cfg, params = chaos_llm
+    trace = chaos.run_chaos(cfg, params, schedule=schedule, seed=seed)
+    inv = trace["invariants"]
+    assert inv["exactly_once"], trace["exactly_once_detail"]
+    assert inv["converged"] and inv["drained"]
+    assert inv["lane_conservation"] and inv["no_double_free"]
+    assert trace["ok"]
+    srv = trace["server"]
+    assert srv["crashes"] == 1
+    assert srv["recovered_requests"] >= 1, "crash must orphan something"
+    assert srv["lost_requests"] == 0
+    assert srv["dup_done_suppressed"] == 0 or inv["exactly_once"]
+
+
+def test_chaos_no_crash_is_clean(chaos_llm):
+    cfg, params = chaos_llm
+    trace = chaos.run_chaos(cfg, params, schedule="lossy", seed=5,
+                            crash_replica=None)
+    assert trace["ok"]
+    assert trace["server"]["recovered_requests"] == 0
+    assert trace["server"]["failed_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator: transient page-map failure backs off instead of aborting
+# ---------------------------------------------------------------------------
+
+def test_agent_map_failure_retries_with_backoff(monkeypatch):
+    from repro.agents.orchestrator import make_sim_llm, run_task
+    from repro.agents.tasks import TASKS
+    from repro.serving import scheduler as sched
+
+    cfg, params = make_sim_llm()
+    orig = sched.PrefixPageMapper.map_row
+    calls = {"n": 0}
+
+    def flaky(self, row, tokens, horizon):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise RuntimeError("agent page pool exhausted")
+        return orig(self, row, tokens, horizon)
+
+    monkeypatch.setattr(sched.PrefixPageMapper, "map_row", flaky)
+    r = run_task(cfg, params, TASKS["pomodoro"], mode="parallel",
+                 n_agents=3, seed=1, kv="paged", prefill="chunked")
+    assert r.agent_failures == 2
+    # Both failures may land on the same agent (claim + first retry), in
+    # which case one successful re-map recovers the burst.
+    assert r.agent_retries >= 1, "failed maps must eventually recover"
+    assert r.converged and r.gen_tokens > 0
+
+
+def test_agent_map_failure_cap_propagates(monkeypatch):
+    from repro.agents.orchestrator import make_sim_llm, run_task
+    from repro.agents.tasks import TASKS
+    from repro.serving import scheduler as sched
+
+    cfg, params = make_sim_llm()
+
+    def dead(self, row, tokens, horizon):
+        raise RuntimeError("agent page pool exhausted")
+
+    monkeypatch.setattr(sched.PrefixPageMapper, "map_row", dead)
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        run_task(cfg, params, TASKS["pomodoro"], mode="parallel",
+                 n_agents=3, seed=1, kv="paged", prefill="chunked")
