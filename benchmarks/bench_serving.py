@@ -1,7 +1,9 @@
 """Serving benchmark: dense vs paged KV cache under continuous batching,
-the chunked-vs-stalled admission sweep of the token-budget mixed step, and
-the replicated page-table sweep (N engines gossiping one CRDT page table:
-sync bytes per step + cross-replica shared-prefix resolution).
+the chunked-vs-stalled admission sweep of the token-budget mixed step, the
+replicated page-table sweep (N engines gossiping one CRDT page table:
+sync bytes per step + cross-replica shared-prefix resolution), and the
+speculative-decoding sweep (off vs prompt-lookup vs CRDT-doc drafting:
+accept rate, committed tokens/step, µs/accepted-token, stream identity).
 
 Sweeps batch × context-length skew × cache layout and reports, per config:
 
@@ -357,6 +359,127 @@ def run_fault_sweep(cfg, params, *, schedules: tuple[str, ...],
     return rows
 
 
+def run_spec_decode(cfg, params, *, batch: int, max_len: int, page_size: int,
+                    n_requests: int, prompt_hi: int, max_new: int,
+                    spec_k: int = 4, chunk_size: int = 16,
+                    seed: int = 0) -> list[dict]:
+    """Speculative-decoding sweep: off vs prompt-lookup vs CRDT-doc drafting.
+
+    One shared workload of motif-repeating prompts (the code-generation
+    regime prompt lookup targets: trailing n-grams recur upstream).  The
+    ``off`` row is the greedy reference; every spec row must reproduce its
+    token streams exactly (``streams_match``) while finishing in fewer
+    steps.  The ``doc`` row seeds the drafter with the reference run's
+    converged streams — standing in for CRDT document content the system
+    already agreed on, the case where doc-lookup beats own-history n-gram.
+
+    ``us_per_accepted_token`` is the headline: median step wall time over
+    committed tokens per step (accepted draft + bonus), the spec-decode
+    analogue of µs/token.
+    """
+    from repro.serving import draft as draft_mod
+    from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for _ in range(n_requests):
+        m = 4 + int(rng.integers(0, 4))
+        motif = [int(t) for t in rng.integers(2, cfg.vocab_size, m)]
+        tail = [int(t) for t in rng.integers(2, cfg.vocab_size, m)]
+        reps = -(-prompt_hi // m)
+        prompts.append((motif * reps)[: prompt_hi - len(tail)] + tail)
+
+    def run_mode(mode: str, drafter=None):
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng = ContinuousBatchingEngine(
+            cfg, params, batch=batch, max_len=max_len, paged=True,
+            page_size=page_size, chunk_size=chunk_size,
+            spec_decode=mode, spec_k=spec_k, drafter=drafter)
+        for r in reqs:
+            eng.submit(r)
+        times = []
+        while True:
+            t0 = time.perf_counter()
+            more = eng.step()
+            times.append(time.perf_counter() - t0)
+            if not more:
+                break
+            if eng.stats["steps"] > 50_000:
+                raise RuntimeError("spec-decode bench runaway")
+        return eng, reqs, statistics.median(times)
+
+    eng0, reqs0, med0 = run_mode("off")
+    streams0 = {r.rid: list(r.tokens) for r in reqs0}
+    rows = []
+    for mode in ("off", "ngram", "doc"):
+        if mode == "off":
+            eng, reqs, med = eng0, reqs0, med0
+        else:
+            drafter = None
+            if mode == "doc":
+                drafter = draft_mod.DocDrafter()
+                drafter.set_docs([list(p) + streams0[i]
+                                  for i, p in enumerate(prompts)])
+            eng, reqs, med = run_mode(mode, drafter=drafter)
+        s = eng.stats
+        tps = s["gen_tokens"] / max(s["steps"], 1)
+        rows.append({
+            "spec": mode, "batch": batch, "spec_k": spec_k,
+            "chunk_size": chunk_size, "n_requests": n_requests,
+            "steps": s["steps"], "gen_tokens": s["gen_tokens"],
+            "draft_tokens": s["draft_tokens"],
+            "accepted_tokens": s["accepted_tokens"],
+            "rollback_tokens": s["rollback_tokens"],
+            "spec_steps": s["spec_steps"],
+            "spec_rollbacks": s["spec_rollbacks"],
+            "accept_rate": eng.spec_accept_rate,
+            "tokens_per_step": tps,
+            "us_per_step": 1e6 * med,
+            "us_per_accepted_token": 1e6 * med / max(tps, 1e-9),
+            "completed": s["completed"],
+            "streams_match": all(list(r.tokens) == streams0[r.rid]
+                                 for r in reqs),
+        })
+    return rows
+
+
+def run_spec_agents(cfg, params, *, spec_k: int = 4, max_len: int = 256,
+                    page_size: int = 16, chunk_size: int = 16,
+                    seed: int = 0) -> list[dict]:
+    """End-to-end agent trial, speculative vs baseline.
+
+    One sequential CodeCRDT task (single writer: no cross-agent
+    observation timing, so the whole-trial document digest must match the
+    non-speculative run bit-for-bit) run off vs doc-drafted.  Wall clock
+    and step count are the e2e speedup numbers; digest equality is the
+    e2e correctness gate.
+    """
+    from repro.agents.orchestrator import run_task
+    from repro.agents.tasks import TASKS
+
+    task = TASKS["tic_tac_toe"]
+    rows = []
+    base = None
+    for mode in ("off", "doc"):
+        r = run_task(cfg, params, task, mode="sequential", seed=seed,
+                     max_len=max_len, kv="paged", prefill="chunked",
+                     page_size=page_size, chunk_size=chunk_size,
+                     spec_decode=mode, spec_k=spec_k)
+        if base is None:
+            base = r
+        rows.append({
+            "spec": mode, "task": task.name, "wall_s": r.wall_s,
+            "steps": r.steps, "gen_tokens": r.gen_tokens,
+            "draft_tokens": r.draft_tokens,
+            "accepted_tokens": r.accepted_tokens,
+            "rollback_tokens": r.rollback_tokens,
+            "accept_rate": r.accept_rate,
+            "digest_match": r.digest == base.digest,
+        })
+    return rows
+
+
 def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
               emit_csv=print) -> dict:
     from repro.agents.orchestrator import make_sim_llm
@@ -416,6 +539,14 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
         schedules=("lossy",) if quick else ("lossy", "reorder_delay"),
         crash_ats=(4,) if quick else (4, 8))
 
+    # Speculative-decoding sweep: off / prompt-lookup / CRDT-doc drafting
+    # through the mixed step, plus an end-to-end agent trial (off vs doc).
+    spec_rows = run_spec_decode(
+        cfg, params, batch=batches[0], max_len=max_len, page_size=page_size,
+        n_requests=batches[0] + 2, prompt_hi=prompt_hi // 2,
+        max_new=2 * max_new, spec_k=4)
+    spec_agent_rows = run_spec_agents(cfg, params, spec_k=4)
+
     ratios = []
     for d in rows:
         if d["mode"] != "dense":
@@ -453,6 +584,22 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                 r["cross_replica_hits"] > 0 for r in repl_rows),
             "all_completed": all(r["completed"] == r["n_requests"]
                                  for r in repl_rows),
+        },
+        "spec_decode": {"engine": spec_rows, "agents": spec_agent_rows},
+        "speculation": {
+            # Acceptance: every speculative engine run reproduces the
+            # greedy reference streams token-for-token, drafts something
+            # (accept_rate > 0), and the e2e agent trial matches the
+            # baseline document digest while finishing in fewer steps.
+            "streams_match": all(r["streams_match"] for r in spec_rows),
+            "accept_rate_positive": all(
+                r["accept_rate"] > 0 for r in spec_rows
+                if r["spec"] != "off"),
+            "agents_digest_match": all(
+                r["digest_match"] for r in spec_agent_rows),
+            "agents_steps_reduced": all(
+                r["steps"] < spec_agent_rows[0]["steps"]
+                for r in spec_agent_rows if r["spec"] != "off"),
         },
         "write_bytes_ratio_dense_over_paged": min(ratios),
         "admission": {
@@ -508,6 +655,19 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                    f";goodput={r['goodput_tokens_per_step']:.3f}"
                    f";ok={int(r['ok'])}")
         emit_csv(f"{name},0.0,{derived}")
+    for r in spec_rows:
+        derived = (f"acceptRate={r['accept_rate']:.2f}"
+                   f";tokPerStep={r['tokens_per_step']:.2f}"
+                   f";usPerAccTok={r['us_per_accepted_token']:.1f}"
+                   f";draft={r['draft_tokens']};roll={r['rollback_tokens']}"
+                   f";steps={r['steps']};match={int(r['streams_match'])}")
+        emit_csv(f"serving/spec_{r['spec']},{r['us_per_step']:.1f},{derived}")
+    for r in spec_agent_rows:
+        derived = (f"steps={r['steps']};acceptRate={r['accept_rate']:.2f}"
+                   f";roll={r['rollback_tokens']}"
+                   f";digestMatch={int(r['digest_match'])}")
+        emit_csv(f"serving/spec_agents_{r['spec']},"
+                 f"{1e6 * r['wall_s']:.0f},{derived}")
     return report
 
 

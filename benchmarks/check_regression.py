@@ -12,7 +12,13 @@ Only paged rows are gated, keyed by (batch, skew), on two signal classes:
 The replicated sweep (N engines on one CRDT page table) is gated the same
 way: anti-entropy sync bytes and step counts are deterministic counters,
 plus boolean acceptance flags (bitwise replica convergence, cross-replica
-shared-prefix hits > 0, all requests completed).
+shared-prefix hits > 0, all requests completed).  The speculative-decoding
+sweep gates waste counters (steps, draft/rollback tokens) against a strict
+ceiling, acceptance counters (accept_rate, accepted_tokens, tokens/step)
+against a strict floor, µs/accepted-token normalized by the same run's
+non-speculative row, and the stream-identity / digest-match flags.  A
+gated counter missing from either report is a loud failure, and the run
+ends with a one-line-per-counter pass/fail table.
 
 * **Wall clock** — µs/token normalized by the *same run's* dense row at the
   same key (which cancels the runner-speed term; absolute interpret-mode
@@ -61,6 +67,17 @@ REPL_COUNTERS = ("sync_bytes_per_step", "sync_bytes", "steps")
 FAULT_COUNTERS = ("steps", "recovery_step_overhead", "recovered", "retried",
                   "shed", "lost", "failed")
 
+# Speculative-decoding sweep counters: drafting is a pure function of the
+# (seeded) token streams and verification is greedy, so every counter is
+# bit-identical across reruns of the same commit.  Counters where an
+# INCREASE is a regression (more steps, more wasted drafts) get the strict
+# ceiling gate; counters where a DECREASE is a regression (acceptance
+# collapsed, throughput-per-step dropped) get the strict floor gate.
+SPEC_COUNTERS = ("steps", "draft_tokens", "rollback_tokens")
+SPEC_FLOOR_COUNTERS = ("accept_rate", "accepted_tokens", "tokens_per_step")
+SPEC_AGENT_COUNTERS = ("steps", "rollback_tokens")
+SPEC_AGENT_FLOOR_COUNTERS = ("accept_rate", "accepted_tokens")
+
 
 def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
     return {(r["batch"], r["skew"]): r
@@ -81,6 +98,16 @@ def fault_rows_by_key(report: dict) -> dict[tuple, dict]:
             for r in report.get("fault", [])}
 
 
+def spec_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["spec"],): r
+            for r in report.get("spec_decode", {}).get("engine", [])}
+
+
+def spec_agent_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["spec"],): r
+            for r in report.get("spec_decode", {}).get("agents", [])}
+
+
 def timing_value(report: dict, key: tuple) -> tuple[float, str]:
     """Dense-normalized paged µs/token (absolute when dense row missing)."""
     paged = rows_by_key(report, "paged")[key]
@@ -96,17 +123,42 @@ def check(baseline: dict, current: dict, max_regression: float,
     cur = rows_by_key(current, "paged")
     ok = True
     lines = []
+    # Per-counter tally for the summary table: name -> [ok, fail, missing].
+    tally: dict[str, list[int]] = {}
 
-    def judge(label, name, bval, cval, limit):
+    def _tally(name, kind):
+        tally.setdefault(name, [0, 0, 0])[kind] += 1
+
+    def judge(label, name, bval, cval, limit, floor=False):
         nonlocal ok
         ratio = cval / max(bval, 1e-9) - 1.0
-        bad = ratio > limit and cval - bval > 1e-9
+        if floor:     # a DECREASE past the limit is the regression
+            bad = -ratio > limit and bval - cval > 1e-9
+        else:
+            bad = ratio > limit and cval - bval > 1e-9
         if bad:
             ok = False
+        _tally(name, 1 if bad else 0)
         lines.append(
             f"{label:>16} {name:>18}: baseline "
             f"{bval:12.3f}, current {cval:12.3f} ({ratio:+.1%}) "
             f"{'FAIL' if bad else 'ok'}")
+
+    def counter(label, name, brow, crow, limit, floor=False):
+        """Judge one gated counter, failing LOUDLY when either report is
+        missing it (a silently absent counter would otherwise let a broken
+        bench ship)."""
+        nonlocal ok
+        missing = [w for w, row in (("baseline", brow), ("current", crow))
+                   if name not in row]
+        if missing:
+            ok = False
+            _tally(name, 2)
+            lines.append(f"{label:>16} {name:>18}: MISSING in "
+                         f"{' and '.join(missing)} report FAIL")
+            return
+        judge(label, name, float(brow[name]), float(crow[name]), limit,
+              floor=floor)
 
     for key in sorted(base):
         if key not in cur:
@@ -115,8 +167,7 @@ def check(baseline: dict, current: dict, max_regression: float,
             continue
         label = f"paged b{key[0]} {key[1]}"
         for name in COUNTERS:
-            judge(label, name, float(base[key][name]), float(cur[key][name]),
-                  max_regression)
+            counter(label, name, base[key], cur[key], max_regression)
         bval, bkind = timing_value(baseline, key)
         cval, ckind = timing_value(current, key)
         if bkind != ckind:          # one report lacks its dense row
@@ -134,8 +185,8 @@ def check(baseline: dict, current: dict, max_regression: float,
                          "run")
             continue
         for name in CHUNK_COUNTERS:
-            judge(f"{key[0]} c{key[1]}", name, float(cbase[key][name]),
-                  float(ccur[key][name]), max_regression)
+            counter(f"{key[0]} c{key[1]}", name, cbase[key], ccur[key],
+                    max_regression)
     if cbase and "chunked_admission" in current:
         stalls_ok = current.get("admission", {}).get(
             "chunked_stalls_below_baseline", False)
@@ -151,8 +202,8 @@ def check(baseline: dict, current: dict, max_regression: float,
             lines.append(f"MISSING replicated row {key} in current run")
             continue
         for name in REPL_COUNTERS:
-            judge(f"repl r{key[0]}", name, float(rbase[key][name]),
-                  float(rcur[key][name]), max_regression)
+            counter(f"repl r{key[0]}", name, rbase[key], rcur[key],
+                    max_regression)
     if rbase and "replicated" in current:
         for flag, desc in (("all_converged",
                             "replicas bitwise converged"),
@@ -174,8 +225,7 @@ def check(baseline: dict, current: dict, max_regression: float,
         label = (f"fault {key[0]}"
                  + (" clean" if key[1] < 0 else f" c{key[1]}"))
         for name in FAULT_COUNTERS:
-            judge(label, name, float(fbase[key][name]),
-                  float(fcur[key][name]), max_regression)
+            counter(label, name, fbase[key], fcur[key], max_regression)
     if fbase and "fault" in current:
         for flag, desc in (("all_invariants_ok",
                             "chaos invariants (exactly-once, convergence, "
@@ -187,6 +237,64 @@ def check(baseline: dict, current: dict, max_regression: float,
             flag_ok = current.get("fault_tolerance", {}).get(flag, False)
             lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
             ok = ok and flag_ok
+
+    # Speculative-decoding sweep: ceiling-gate waste counters, floor-gate
+    # acceptance, and gate µs/accepted-token normalized by the SAME run's
+    # non-speculative row (cancels the runner-speed term, like paged/dense).
+    sbase = spec_rows_by_key(baseline)
+    scur = spec_rows_by_key(current)
+    for key in sorted(sbase):
+        if key not in scur:
+            ok = False
+            lines.append(f"MISSING spec-decode row {key} in current run")
+            continue
+        label = f"spec {key[0]}"
+        for name in SPEC_COUNTERS:
+            counter(label, name, sbase[key], scur[key], max_regression)
+        for name in SPEC_FLOOR_COUNTERS:
+            counter(label, name, sbase[key], scur[key], max_regression,
+                    floor=True)
+        boff, coff = sbase.get(("off",)), scur.get(("off",))
+        if key != ("off",) and boff and coff:
+            bval = (sbase[key]["us_per_accepted_token"]
+                    / max(boff["us_per_accepted_token"], 1e-9))
+            cval = (scur[key]["us_per_accepted_token"]
+                    / max(coff["us_per_accepted_token"], 1e-9))
+            judge(label, "usAccTok/off", bval, cval, timing_slack)
+    abase = spec_agent_rows_by_key(baseline)
+    acur = spec_agent_rows_by_key(current)
+    for key in sorted(abase):
+        if key not in acur:
+            ok = False
+            lines.append(f"MISSING spec-agent row {key} in current run")
+            continue
+        label = f"spec-agents {key[0]}"
+        for name in SPEC_AGENT_COUNTERS:
+            counter(label, name, abase[key], acur[key], max_regression)
+        if key != ("off",):
+            for name in SPEC_AGENT_FLOOR_COUNTERS:
+                counter(label, name, abase[key], acur[key], max_regression,
+                        floor=True)
+    if sbase and "spec_decode" in current:
+        for flag, desc in (("streams_match",
+                            "speculative streams token-identical to greedy"),
+                           ("accept_rate_positive",
+                            "every drafter accepted > 0 tokens"),
+                           ("agents_digest_match",
+                            "agent-trial document digest matches baseline"),
+                           ("agents_steps_reduced",
+                            "speculative agent trial used fewer steps")):
+            flag_ok = current.get("speculation", {}).get(flag, False)
+            lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
+            ok = ok and flag_ok
+
+    # One line per gated counter: how many keys passed / failed / were
+    # missing, so a red run names the offending counter at a glance.
+    lines.append("per-counter gate table:")
+    for name, (n_ok, n_fail, n_miss) in tally.items():
+        status = "FAIL" if (n_fail or n_miss) else "ok"
+        lines.append(f"{name:>24}: {n_ok} ok, {n_fail} fail, "
+                     f"{n_miss} missing  {status}")
     return ok, lines
 
 

@@ -33,8 +33,10 @@ from repro.core import doc as doc_mod
 from repro.core import merge as merge_mod
 from repro.core import observe, protocol, todo
 from repro.core.clock import Lamport
+from repro.models import cache as cache_mod
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.serving import draft as draft_mod
 from repro.serving import engine as engine_mod
 
 IDLE, PREFILL, GEN, HALT = "idle", "prefill", "gen", "halt"
@@ -58,6 +60,8 @@ class AgentState:
     failures: int = 0                   # consecutive page-map failures
     needs_map: bool = False             # row unmapped; waiting to retry
     retry_at: int = 0                   # step at which to retry the map
+    hist: list = field(default_factory=list)  # raw prompt+generated tokens
+                                        # (speculative drafting context)
 
 
 @dataclass
@@ -87,6 +91,14 @@ class RunResult:
     page_sync_bytes: int = 0        # page-table anti-entropy wire bytes
     agent_failures: int = 0         # page-map failures hit by agent loops
     agent_retries: int = 0          # successful backoff re-maps after failure
+    spec_decode: str = "off"        # off | ngram | doc drafting source
+    draft_tokens: int = 0           # speculative tokens proposed
+    accepted_tokens: int = 0        # draft tokens the verifier accepted
+    rollback_tokens: int = 0        # rejected-tail tokens rolled back
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted_tokens / max(1, self.draft_tokens)
 
     @property
     def tokens_per_s(self) -> float:
@@ -164,6 +176,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
              merge: str = "allgather", delta_capacity: int = 64,
              kv: str = "dense", prefill: str = "replay",
              page_size: int = 64, chunk_size: int = 32, replicas: int = 1,
+             spec_decode: str = "off", spec_k: int = 4,
              time_fn=time.perf_counter) -> RunResult:
     """``kv="paged"`` backs the agents with the paged KV cache.
 
@@ -183,6 +196,13 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                          "(the replicated page table replicates page "
                          "metadata, not a dense per-row cache)")
     chunked = prefill in ("ragged", "chunked")
+    if spec_decode not in ("off", "ngram", "doc"):
+        raise ValueError(f"spec_decode must be off/ngram/doc, got "
+                         f"{spec_decode!r}")
+    if spec_decode != "off" and not chunked:
+        raise ValueError("--spec-decode rides the mixed serve step: "
+                         "use --prefill chunked (verify widens decode "
+                         "spans, which the replay baseline cannot express)")
     if mode == "sequential":
         n_agents = 1
     rng = np.random.default_rng(seed)
@@ -292,6 +312,40 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     if chunked:
         mixed_fn = jax.jit(engine_mod.make_mixed_step_fn(cfg))
 
+    # Speculative decoding through the mixed step: a host-side drafter
+    # widens GEN rows from span 1 to 1+k, one verify call scores the whole
+    # batch (non-drafted lanes read preds at their last span position —
+    # identical to greedy sampling), and rejected tails roll back bitwise
+    # from a pre-verify snapshot.  The PrefixPageMapper pre-maps each row's
+    # full generation horizon, so speculative writes always land in already
+    # mapped pages and rollback never frees pages here.
+    drafter = None
+    verify_fn = snap_jit = restore_jit = None
+    spec_k = max(1, int(spec_k))
+    wclamp = chunk_size
+    has_state = any(
+        cache_mod.layout_for(k, cfg, paged=False) == "state"
+        for k in tuple(cfg.block_pattern) + tuple(cfg.tail_blocks))
+    if spec_decode != "off":
+        drafter = draft_mod.make_drafter(spec_decode)
+        wclamp = max(chunk_size, 1 + spec_k)
+        verify_fn = jax.jit(engine_mod.make_verify_step_fn(cfg))
+
+        def _snap_fn(c, start, width):
+            out = {"spans": cache_mod.snapshot_span(c, start, width)}
+            if has_state:
+                out["state"] = lm.snapshot_state_rows(cfg, c)
+            return out
+
+        def _restore_fn(c, snap, start, lo, hi, smask):
+            c = cache_mod.restore_span(c, snap["spans"], start, lo, hi)
+            if has_state:
+                c = lm.restore_state_rows(cfg, c, snap["state"], smask)
+            return c
+
+        snap_jit = jax.jit(_snap_fn, static_argnums=(2,))
+        restore_jit = jax.jit(_restore_fn)
+
     # Warmup: compile every helper shape outside the timed region (the claim
     # helper has one shape per idle-agent count).
     _ = step_fn(params, cache, token, pos, key)
@@ -303,6 +357,17 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                                 jnp.zeros((n_agents, wb), jnp.int32),
                                 jnp.zeros((n_agents,), jnp.int32),
                                 jnp.zeros((n_agents,), jnp.int32), key)
+    if verify_fn is not None:
+        # Verify + snapshot/restore per width bucket; zero spans and empty
+        # rollback windows leave the cache bit-for-bit untouched.
+        z = jnp.zeros((n_agents,), jnp.int32)
+        for wb in engine_mod.mixed_width_buckets(wclamp):
+            _, _, cache = verify_fn(params, cache,
+                                    jnp.zeros((n_agents, wb), jnp.int32),
+                                    z, z)
+            s0 = snap_jit(cache, z, wb)
+            cache = restore_jit(cache, s0, z, z, z,
+                                jnp.zeros((n_agents,), bool))
     warm_board = todo.post(todo.empty(k_todos), 0,
                            jnp.zeros((k_todos,), bool), jnp.int32(1),
                            jnp.int32(100))
@@ -333,7 +398,8 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                            * (task.par_inflation if mode == "parallel"
                               else 1.0)))
     stats = dict(gen=0, replay=0, steps=0, inval=0, collide=0, observe=0,
-                 syncs=0, sync_bytes=0, agent_fail=0, agent_retry=0)
+                 syncs=0, sync_bytes=0, agent_fail=0, agent_retry=0,
+                 draft=0, accepted=0, rollback=0)
     merge_perm_seed = 0
 
     # Host-side mirrors: CRDT appends are buffered per agent and flushed at
@@ -343,6 +409,13 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     host_len = np.zeros((k_todos,), np.int64)          # merged view lengths
     buffers: list[list[int]] = [[] for _ in range(n_agents)]
     buf_slot = [-1] * n_agents
+    # Per-slot mirrors of flushed (committed) document content: the doc
+    # drafter reads these LIVE lists, so anything one agent has flushed is
+    # immediately draftable for every other agent — the CodeCRDT case
+    # where the shared document predicts a row's continuation.
+    slot_toks: list[list[int]] = [[] for _ in range(k_todos)]
+    if drafter is not None and hasattr(drafter, "set_docs"):
+        drafter.set_docs(slot_toks)
     done_count = 0
     board_dirty = True
     run_buf_cap = 128
@@ -359,6 +432,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
             docs[i] = append_run_fn(docs[i], jnp.int32(buf_slot[i]),
                                     jnp.asarray(arr), jnp.int32(len(chunk)))
         host_len[buf_slot[i]] += len(toks)
+        slot_toks[buf_slot[i]].extend(toks)
         buffers[i] = []
 
     def sync_replicas():
@@ -414,6 +488,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                     a.phase = PREFILL
                     a.reprefills = 0
                     a.queue = _prompt_tokens(task, a.todo_id, docs, vocab, rng)
+                    a.hist = list(a.queue)
                     a.tokens_left = gen_budget
                     snap_len[a.client] = host_len.copy()
                     buf_slot[a.row] = a.todo_id
@@ -463,8 +538,25 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                     spans[a.row] = 1
                 elif a.phase == GEN:
                     spans[a.row] = 1
+            drafts: dict[int, list[int]] = {}
+            if drafter is not None:
+                # Widen decode lanes with drafter proposals.  The cap keeps
+                # every speculative write inside the row's pre-mapped page
+                # horizon AND guarantees the accepted run fits the agent's
+                # remaining budget.
+                for a in agents:
+                    if a.phase != GEN or spans[a.row] != 1:
+                        continue
+                    cap = min(spec_k, a.tokens_left - 1,
+                              max_len - int(pos_h[a.row]) - 1)
+                    if cap <= 0:
+                        continue
+                    d = drafter.propose(a.hist, cap)[:cap]
+                    if d:
+                        drafts[a.row] = d
+                        spans[a.row] = 1 + len(d)
             width = engine_mod.width_bucket(int(max(spans.max(), 1)),
-                                            chunk_size)
+                                            wclamp)
             toks = np.zeros((n_agents, width), np.int64)
             for a in agents:
                 if spans[a.row] == 0:
@@ -476,16 +568,62 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                     stats["replay"] += len(seg)
                 else:
                     toks[a.row, 0] = tok_h[a.row]
+                    d = drafts.get(a.row)
+                    if d:
+                        toks[a.row, 1:1 + len(d)] = d
             push_tables()
             key, sub = jax.random.split(key)
-            nxt, cache = mixed_fn(params, cache,
-                                  jnp.asarray(toks, jnp.int32),
-                                  jnp.asarray(pos_h, jnp.int32),
-                                  jnp.asarray(spans, jnp.int32), sub)
+            start_h = jnp.asarray(pos_h, jnp.int32)   # pre-step positions
+            if drafter is not None:
+                snap = snap_jit(cache, start_h, width) if drafts else None
+                preds_d, acc_d, cache = verify_fn(
+                    params, cache, jnp.asarray(toks, jnp.int32), start_h,
+                    jnp.asarray(spans, jnp.int32))
+                preds = np.asarray(preds_d)
+                acc = np.asarray(acc_d)
+                sampled = preds[np.arange(n_agents),
+                                np.clip(spans - 1, 0, width - 1)]
+            else:
+                nxt, cache = mixed_fn(params, cache,
+                                      jnp.asarray(toks, jnp.int32),
+                                      start_h,
+                                      jnp.asarray(spans, jnp.int32), sub)
+                sampled = np.asarray(nxt)
             stats["steps"] += 1
-            sampled = np.asarray(nxt)
+            roll_lo = np.zeros((n_agents,), np.int64)
+            roll_hi = np.zeros((n_agents,), np.int64)
+            replay_spans = np.zeros((n_agents,), np.int64)
+            rolled = False
             for a in agents:
                 if spans[a.row] == 0:
+                    continue
+                d = drafts.get(a.row)
+                if d is not None:
+                    # Speculative lane: commit the longest accepted prefix
+                    # plus the verifier's bonus token; mark the rejected
+                    # tail for bitwise rollback.
+                    pos0 = int(pos_h[a.row])
+                    appended, a_dev = draft_mod.accept_tokens(
+                        d, acc[a.row], preds[a.row], a.tokens_left, None)
+                    n_app = len(appended)
+                    stats["draft"] += len(d)
+                    stats["accepted"] += min(n_app, a_dev)
+                    n_roll = int(spans[a.row]) - n_app
+                    pos_h[a.row] += n_app
+                    for t in appended:
+                        buffers[a.row].append(int(t) % vocab)
+                        a.hist.append(int(t))
+                    tok_h[a.row] = int(appended[-1])
+                    stats["gen"] += n_app
+                    a.tokens_left -= n_app
+                    if n_roll > 0:
+                        stats["rollback"] += n_roll
+                        roll_lo[a.row] = pos0 + n_app
+                        roll_hi[a.row] = pos0 + int(spans[a.row])
+                        replay_spans[a.row] = n_app
+                        rolled = True
+                    if a.tokens_left <= 0:
+                        finishing.append(a)
                     continue
                 pos_h[a.row] += int(spans[a.row])
                 if a.phase == PREFILL:
@@ -494,10 +632,29 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                     a.phase = GEN           # chunk's last logits = 1st token
                 tok_h[a.row] = int(sampled[a.row])
                 buffers[a.row].append(int(sampled[a.row]) % vocab)
+                if drafter is not None:
+                    a.hist.append(int(sampled[a.row]))
                 stats["gen"] += 1
                 a.tokens_left -= 1
                 if a.tokens_left <= 0:
                     finishing.append(a)
+            if rolled:
+                # Rejected-tail slots restored bitwise from the pre-verify
+                # snapshot; recurrent state (if any) is restored to its
+                # pre-verify value and re-advanced by replaying exactly the
+                # committed tokens (attention re-writes are overwrites of
+                # the same tokens at the same positions).
+                cache = restore_jit(cache, snap, start_h,
+                                    jnp.asarray(roll_lo.astype(np.int32)),
+                                    jnp.asarray(roll_hi.astype(np.int32)),
+                                    jnp.asarray(replay_spans > 0))
+                if has_state and replay_spans.any():
+                    w2 = engine_mod.width_bucket(int(replay_spans.max()),
+                                                 wclamp)
+                    _, _, cache = verify_fn(
+                        params, cache,
+                        jnp.asarray(toks[:, :w2], jnp.int32), start_h,
+                        jnp.asarray(replay_spans, jnp.int32))
             for a in finishing:
                 finish_agent(a)
         else:
@@ -549,6 +706,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                         stats["inval"] += 1
                         a.queue = _prompt_tokens(task, a.todo_id, docs,
                                                  vocab, rng)
+                        a.hist = list(a.queue)
                         a.phase = PREFILL
                         pos_h[a.row] = 0
                         if mixed_fn is None:
@@ -597,6 +755,10 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         page_sync_bytes=getattr(mapper, "sync_bytes", 0),
         agent_failures=stats["agent_fail"],
         agent_retries=stats["agent_retry"],
+        spec_decode=spec_decode,
+        draft_tokens=stats["draft"],
+        accepted_tokens=stats["accepted"],
+        rollback_tokens=stats["rollback"],
     )
 
 
@@ -645,6 +807,15 @@ def main() -> None:
                          "--kv paged): agents are partitioned round-robin "
                          "and the run reports cross-replica prefix hits "
                          "plus page-table anti-entropy bytes")
+    ap.add_argument("--spec-decode", default="off",
+                    choices=["off", "ngram", "doc"],
+                    help="speculative decoding through the mixed step: "
+                         "'ngram' drafts from each agent's own "
+                         "prompt+generated history (prompt lookup), 'doc' "
+                         "drafts from the shared CRDT document content "
+                         "with n-gram fallback (requires --prefill chunked)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens proposed per agent per step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -653,7 +824,8 @@ def main() -> None:
                  n_agents=args.agents, seed=args.seed, merge=args.merge,
                  delta_capacity=args.delta_capacity, kv=args.kv,
                  prefill=args.prefill, page_size=args.page_size,
-                 chunk_size=args.chunk_size, replicas=args.replicas)
+                 chunk_size=args.chunk_size, replicas=args.replicas,
+                 spec_decode=args.spec_decode, spec_k=args.spec_k)
     for k, v in sorted(vars(r).items()):
         print(f"{k}: {v}")
 

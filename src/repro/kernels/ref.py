@@ -345,3 +345,85 @@ def rglru(x: jax.Array, input_gate: jax.Array, rec_gate: jax.Array,
     b_t = jnp.sqrt(jnp.clip(1.0 - a_t ** 2, 1e-9)) * gated_x
     hs = linear_scan(a_t, b_t, h0)
     return hs.astype(x.dtype), hs[:, -1].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Speculative-decoding verify path (span acceptance + rollback oracles)
+# ---------------------------------------------------------------------------
+
+def speculative_accept(preds: jax.Array, tokens: jax.Array,
+                       span: jax.Array) -> jax.Array:
+    """Greedy longest-accepted-prefix count per row.
+
+    preds: i32[B, C] argmax at every span position (verify-mode mixed
+    step); tokens: i32[B, C] the span that was fed, ``tokens[b] =
+    [last_committed, d_1 .. d_m, pad]``; span: i32[B] = 1 + m.
+
+    Draft token d_{j+1} is accepted iff every earlier draft was and the
+    verifier's argmax after span position j reproduces it:
+    ``preds[b, j] == tokens[b, j+1]``.  Returned count is in [0, m];
+    rows with span <= 1 (plain decode / admission / idle) count 0.
+    The *bonus* token ``preds[b, accepted[b]]`` is by construction the
+    token non-speculative greedy decode would emit next, so acceptance
+    plus bonus is token-identical to unspeculated decoding.
+    """
+    b, c = tokens.shape
+    if c == 1:
+        return jnp.zeros((b,), jnp.int32)
+    ok = (preds[:, :-1] == tokens[:, 1:]) \
+        & (jnp.arange(c - 1, dtype=jnp.int32)[None, :] < span[:, None] - 1)
+    return jnp.where(ok.all(axis=1), c - 1,
+                     jnp.argmin(ok, axis=1)).astype(jnp.int32)
+
+
+def paged_span_gather(pool: jax.Array, block_tables: jax.Array,
+                      start: jax.Array, width: int) -> jax.Array:
+    """Snapshot the pool slots a mixed-step write window covers.
+
+    ``out[b, w] = pool[block_tables[b, (start[b]+w) // ps], ...,
+    (start[b]+w) % ps, ...]`` — the pre-verify bytes of every slot a span
+    write at [start, start+width) could touch.  pool: [P, Hkv, ps, D]
+    (MHA K/V, slot axis 2) or [P, ps, Dp] (MLA latent, slot axis 1).
+    Positions past the table / unallocated (-1) entries are clamped; their
+    lanes hold garbage and are masked out by ``paged_span_restore``.
+    """
+    ps = pool.shape[2] if pool.ndim == 4 else pool.shape[1]
+    maxp = block_tables.shape[-1]
+    tpos = start[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    pg = jnp.take_along_axis(block_tables,
+                             jnp.clip(tpos // ps, 0, maxp - 1), axis=1)
+    pg = jnp.clip(pg, 0, pool.shape[0] - 1)
+    slot = tpos % ps
+    if pool.ndim == 4:
+        return pool[pg, :, slot, :]          # [B, W, Hkv, D]
+    return pool[pg, slot]                    # [B, W, Dp]
+
+
+def paged_span_restore(pool: jax.Array, snap: jax.Array,
+                       block_tables: jax.Array, start: jax.Array,
+                       lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Rejected-tail rollback: scatter ``snap`` (from paged_span_gather,
+    same ``start``) back for positions in [lo[b], hi[b]).
+
+    Lanes outside the per-row window — accepted positions, rows that
+    drafted nothing (lo == hi), positions past the table, unallocated
+    entries — are routed out of bounds and dropped, so committed slots
+    keep the verify step's writes bit-for-bit while the rejected tail
+    reverts to its pre-verify bytes.
+    """
+    ps = pool.shape[2] if pool.ndim == 4 else pool.shape[1]
+    maxp = block_tables.shape[-1]
+    width = snap.shape[1]
+    tpos = start[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    keep = (tpos >= lo[:, None]) & (tpos < hi[:, None])
+    keep &= tpos // ps < maxp
+    pg = jnp.take_along_axis(block_tables,
+                             jnp.clip(tpos // ps, 0, maxp - 1), axis=1)
+    keep &= pg >= 0
+    tgt = jnp.where(keep, jnp.clip(pg, 0, pool.shape[0] - 1),
+                    pool.shape[0])
+    slot = tpos % ps
+    if pool.ndim == 4:
+        return pool.at[tgt, :, slot, :].set(snap.astype(pool.dtype),
+                                            mode="drop")
+    return pool.at[tgt, slot].set(snap.astype(pool.dtype), mode="drop")

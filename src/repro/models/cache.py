@@ -375,3 +375,142 @@ def copy_pages(cache: Params, src: jax.Array, dst: jax.Array) -> Params:
         return out
 
     return map_layers(cache, cp, layouts=PAGED_LAYOUTS)
+
+
+# ---------------------------------------------------------------------------
+# Span snapshot / restore (speculative-decoding rollback)
+# ---------------------------------------------------------------------------
+
+def snapshot_span(cache: Params, start: jax.Array, width: int) -> Params:
+    """Copy every cache slot a mixed step writing positions
+    [start[b], start[b]+width) could touch — the rollback snapshot taken
+    before a speculative verify step (after page growth, so the block
+    tables already map the window).
+
+    Dense layouts gather along the sequence axis; paged layouts walk the
+    block tables via the ``kernels.ref`` span oracles.  The returned tree
+    mirrors the cache's nesting but keeps only attention slots: recurrent
+    state carries are whole-row, not per-slot — snapshot those with
+    ``lm.snapshot_state_rows``.  xattn layers (not mixed-step servable)
+    and unrecognized leaves are pruned so the snapshot never aliases a
+    buffer that a later donated verify call would invalidate.
+    """
+    from repro.kernels import ref as kref
+
+    start = jnp.asarray(start, jnp.int32)
+    batch = start.shape[0]
+    tpos = start[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    bidx = jnp.broadcast_to(jnp.arange(batch, dtype=jnp.int32)[:, None],
+                            (batch, width))
+
+    def snap_layer(layout, layer):
+        out = {}
+        if layout in PAGED_LAYOUTS:
+            bt = layer["block_tables"]
+            bt2 = bt[0] if bt.ndim == 3 else bt
+            for name in pool_leaves(layer, layout):
+                pool = layer[name]
+                core = 4 if layout == "paged_mha" else 3
+                if pool.ndim == core + 1:                 # leading [G]
+                    out[name] = jax.vmap(
+                        lambda p: kref.paged_span_gather(p, bt2, start,
+                                                         width))(pool)
+                else:
+                    out[name] = kref.paged_span_gather(pool, bt2, start,
+                                                       width)
+            return out
+        # dense / dense_mla: sequence axis is -2
+        for name, arr in layer.items():
+            core = 4 if layout == "dense" else 3
+            stacked = arr.ndim == core + 1
+            seq = arr.shape[-2]
+            spos = jnp.clip(tpos, 0, seq - 1)
+            if layout == "dense":
+                out[name] = (arr[:, bidx, :, spos, :] if stacked
+                             else arr[bidx, :, spos, :])
+            else:
+                out[name] = (arr[:, bidx, spos] if stacked
+                             else arr[bidx, spos])
+        return out
+
+    def rec(tree):
+        if not isinstance(tree, dict):
+            return None                                   # prune raw leaves
+        layout = layout_of(tree)
+        if layout is not None:
+            return snap_layer(layout, tree) if layout != "xattn" else {}
+        out = {k: rec(v) for k, v in tree.items()}
+        return {k: v for k, v in out.items() if v is not None}
+
+    return rec(cache)
+
+
+def restore_span(cache: Params, snap: Params, start: jax.Array,
+                 lo: jax.Array, hi: jax.Array) -> Params:
+    """Scatter ``snap`` (from :func:`snapshot_span`, same ``start``) back
+    for positions in [lo[b], hi[b)) — the rejected-tail rollback.
+
+    Must run against the SAME block tables the snapshot saw (i.e. before
+    the host frees the tail's grown pages).  Lanes outside the window are
+    routed out of bounds and dropped, so accepted positions keep the
+    verify step's writes bit-for-bit.  Rows with lo == hi are untouched.
+    """
+    from repro.kernels import ref as kref
+
+    start = jnp.asarray(start, jnp.int32)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    batch = start.shape[0]
+
+    def restore_layer(layout, layer, s):
+        out = dict(layer)
+        if layout in PAGED_LAYOUTS:
+            bt = layer["block_tables"]
+            bt2 = bt[0] if bt.ndim == 3 else bt
+            for name in pool_leaves(layer, layout):
+                pool = layer[name]
+                core = 4 if layout == "paged_mha" else 3
+                if pool.ndim == core + 1:
+                    out[name] = jax.vmap(
+                        lambda p, sn: kref.paged_span_restore(
+                            p, sn, bt2, start, lo, hi))(pool, s[name])
+                else:
+                    out[name] = kref.paged_span_restore(
+                        pool, s[name], bt2, start, lo, hi)
+            return out
+        for name, arr in layer.items():
+            core = 4 if layout == "dense" else 3
+            stacked = arr.ndim == core + 1
+            seq = arr.shape[-2]
+            # snapshot leaf layout: dense gathers have non-adjacent advanced
+            # indices so [B, W, ...] always; dense_mla's are adjacent, which
+            # keeps the leading [G] in place — [G, B, W, r] when stacked.
+            w = s[name].shape[2 if layout != "dense" and stacked else 1]
+            tpos = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+            keep = (tpos >= lo[:, None]) & (tpos < hi[:, None]) \
+                & (tpos < seq)
+            sidx = jnp.where(keep, jnp.clip(tpos, 0, seq - 1), seq)
+            bidx = jnp.broadcast_to(
+                jnp.arange(batch, dtype=jnp.int32)[:, None], (batch, w))
+            if layout == "dense":
+                out[name] = (arr.at[:, bidx, :, sidx, :]
+                             .set(s[name], mode="drop") if stacked
+                             else arr.at[bidx, :, sidx, :]
+                             .set(s[name], mode="drop"))
+            else:
+                out[name] = (arr.at[:, bidx, sidx]
+                             .set(s[name], mode="drop") if stacked
+                             else arr.at[bidx, sidx]
+                             .set(s[name], mode="drop"))
+        return out
+
+    def rec(tree, s):
+        if not isinstance(tree, dict) or not isinstance(s, dict) or not s:
+            return tree
+        layout = layout_of(tree)
+        if layout is not None:
+            return (restore_layer(layout, tree, s)
+                    if layout != "xattn" else tree)
+        return {k: rec(v, s.get(k)) for k, v in tree.items()}
+
+    return rec(cache, snap)

@@ -366,8 +366,8 @@ MIXED_OK = {"attn", "local", "moe", "mla", "mla_moe",
 
 
 def mixed_step(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
-               start: jax.Array, span: jax.Array, impl: str = "ref"
-               ) -> tuple[jax.Array, Params]:
+               start: jax.Array, span: jax.Array, impl: str = "ref",
+               all_logits: bool = False) -> tuple[jax.Array, Params]:
     """Token-budget mixed step: per-row query spans in one batched call.
 
     tokens: i32[B, C] right-padded span tokens; start: i32[B] tokens already
@@ -376,6 +376,10 @@ def mixed_step(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
     span 1 decodes one token, span C admits one prompt chunk, span 0 leaves
     the row's cache bit-for-bit untouched.  Returns (logits [B, V] at each
     row's last valid span position, cache); span-0 rows' logits are garbage.
+    With ``all_logits`` (the speculative-decoding verify mode) the head runs
+    at EVERY span position and logits are [B, C, V] — position j's logits
+    predict the token after span token j, so a drafted continuation can be
+    verified wholesale in this one call (positions >= span[b] are garbage).
 
     Because every layer writes the span into the cache before attending,
     a query's math depends only on (its position, the cached prefix) —
@@ -401,11 +405,39 @@ def mixed_step(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
     ctx = BlockCtx(positions=positions, mask_full=None, mask_local=None,
                    mode="mixed", pos=start, impl=impl, lengths=span)
     x, cache, _ = _run_blocks(p, cfg, x, ctx, cache)
+    if all_logits:
+        x = common.apply_norm(p["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        return _head(p, cfg, x), cache
     last = jnp.clip(span - 1, 0)[:, None, None]
     x = jnp.take_along_axis(
         x, jnp.broadcast_to(last, (b, 1, x.shape[2])), axis=1)
     x = common.apply_norm(p["final_norm"], x, cfg.norm_type, cfg.norm_eps)
     return _head(p, cfg, x)[:, 0], cache
+
+
+def verify_step(p: Params, cfg: ModelConfig, tokens: jax.Array, cache: Params,
+                start: jax.Array, span: jax.Array, impl: str = "ref"
+                ) -> tuple[jax.Array, jax.Array, Params]:
+    """Speculative-decoding verify: one all-logits mixed step plus per-row
+    greedy accept counts.
+
+    ``tokens[b] = [last_committed, d_1 .. d_m, pad]`` with ``span = 1 + m``
+    (plain decode/admission rows ride along with their usual spans and
+    count 0).  Returns (preds i32[B, C] — argmax after every span
+    position, accepted i32[B] — longest accepted draft prefix per
+    ``kernels.ref.speculative_accept``, cache).  The cache afterwards
+    holds the whole span's writes; the caller commits positions up to its
+    accept point and rolls the rejected tail back bitwise via
+    ``cache.snapshot_span`` / ``restore_span`` (+ ``restore_state_rows``
+    and a committed-span replay for recurrent architectures).
+    """
+    from repro.kernels import ref as kref
+    logits, cache = mixed_step(p, cfg, tokens, cache, start, span, impl=impl,
+                               all_logits=True)
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    accepted = kref.speculative_accept(
+        preds, jnp.asarray(tokens, jnp.int32), jnp.asarray(span, jnp.int32))
+    return preds, accepted, cache
 
 
 def reset_state_rows(cfg: ModelConfig, cache: Params, mask: jax.Array
@@ -439,5 +471,64 @@ def reset_state_rows(cfg: ModelConfig, cache: Params, mask: jax.Array
         for i, kind in enumerate(cfg.tail_blocks):
             if cache_mod.layout_for(kind, cfg, paged=False) == "state":
                 out["tail"][str(i)] = blend(kind, cache["tail"][str(i)],
+                                            stacked=False)
+    return dict(cache, **out)
+
+
+def snapshot_state_rows(cfg: ModelConfig, cache: Params) -> Params:
+    """Copy the recurrent (state-layout) carries — the whole-row half of a
+    speculative-decoding rollback snapshot (attention slots are per-span,
+    see ``cache.snapshot_span``).  ``jnp.copy`` forces fresh buffers so the
+    snapshot survives the verify call donating the live cache."""
+    out: dict[str, Any] = {"groups": {}}
+    for i, kind in enumerate(cfg.block_pattern):
+        if cache_mod.layout_for(kind, cfg, paged=False) == "state":
+            out["groups"][str(i)] = jax.tree.map(jnp.copy,
+                                                 cache["groups"][str(i)])
+    if "tail" in cache:
+        tail = {}
+        for i, kind in enumerate(cfg.tail_blocks):
+            if cache_mod.layout_for(kind, cfg, paged=False) == "state":
+                tail[str(i)] = jax.tree.map(jnp.copy, cache["tail"][str(i)])
+        if tail:
+            out["tail"] = tail
+    return out
+
+
+def restore_state_rows(cfg: ModelConfig, cache: Params, snap: Params,
+                       mask: jax.Array) -> Params:
+    """Blend ``snap`` (from :func:`snapshot_state_rows`) back into rows
+    where ``mask`` is True — rejected-draft rollback for recurrent layers.
+
+    Unlike attention slots, a recurrent carry folds every span token
+    irreversibly, so a partial rejection restores the PRE-VERIFY carry and
+    the caller then replays the committed prefix (a second mixed step over
+    just the accepted tokens) to advance it; the replay's attention writes
+    are bitwise idempotent with the verify step's, so only the state moves.
+    """
+    mask = jnp.asarray(mask, bool)
+    batch = int(mask.shape[0])
+
+    def blend(snap_layer, layer, stacked):
+        def one(s, o):
+            nd = o.ndim - 1 - (1 if stacked else 0)
+            m = mask.reshape(((1,) if stacked else ()) + (batch,)
+                             + (1,) * nd)
+            return jnp.where(m, s, o)
+
+        return jax.tree.map(one, snap_layer, layer)
+
+    out: dict[str, Any] = {"groups": dict(cache["groups"])}
+    for i, kind in enumerate(cfg.block_pattern):
+        if cache_mod.layout_for(kind, cfg, paged=False) == "state":
+            out["groups"][str(i)] = blend(snap["groups"][str(i)],
+                                          cache["groups"][str(i)],
+                                          stacked=True)
+    if "tail" in cache:
+        out["tail"] = dict(cache["tail"])
+        for i, kind in enumerate(cfg.tail_blocks):
+            if cache_mod.layout_for(kind, cfg, paged=False) == "state":
+                out["tail"][str(i)] = blend(snap["tail"][str(i)],
+                                            cache["tail"][str(i)],
                                             stacked=False)
     return dict(cache, **out)

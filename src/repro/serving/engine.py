@@ -115,6 +115,24 @@ def make_mixed_step_fn(cfg: ModelConfig, *, impl: str = "ref",
     return mixed_step
 
 
+def make_verify_step_fn(cfg: ModelConfig, *, impl: str = "ref"):
+    """(params, cache, tokens [B, C], start [B], span [B])
+    -> (preds [B, C], accepted [B], cache).
+
+    The speculative-decoding verify step (greedy only — acceptance
+    compares argmax streams, so there is no rng): one all-logits mixed
+    step over each row's [last_committed, draft...] span plus the per-row
+    longest-accepted-prefix count.  ``preds[b, j]`` is the greedy token
+    after span position j — non-drafting rows decode normally by reading
+    ``preds[b, span[b]-1]``, so one compiled fn serves every lane.
+    """
+    def verify_step(params, cache, tokens, start, span):
+        return lm.verify_step(params, cfg, tokens, cache, start, span,
+                              impl=impl)
+
+    return verify_step
+
+
 def width_bucket(n: int, chunk: int) -> int:
     """Smallest power-of-two >= n, clamped to ``chunk`` — the mixed step
     compiles once per bucketed span width instead of once per width."""

@@ -56,6 +56,7 @@ import numpy as np
 from repro.models import cache as cache_mod
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.serving import draft as draft_mod
 from repro.serving import engine as engine_mod
 from repro.serving.engine import PROMPT_BUCKETS, bucket_len  # noqa: F401
 
@@ -333,7 +334,9 @@ class ContinuousBatchingEngine:
                  allocator: Optional[Any] = None,
                  prefix_cache: Optional[Any] = None,
                  max_queue: Optional[int] = None,
-                 journal: Optional[Any] = None):
+                 journal: Optional[Any] = None,
+                 spec_decode: str = "off", spec_k: int = 4,
+                 drafter: Optional[Any] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -384,6 +387,45 @@ class ContinuousBatchingEngine:
             self._reset_state = jax.jit(
                 lambda c, m: lm.reset_state_rows(cfg, c, m),
                 donate_argnums=(0,))
+        if spec_decode not in ("off", "ngram", "doc"):
+            raise ValueError(f"spec_decode must be off/ngram/doc, got "
+                             f"{spec_decode!r}")
+        if spec_decode != "off" and temperature > 0.0:
+            raise ValueError(
+                "speculative decoding requires greedy decoding "
+                "(temperature 0): acceptance compares argmax streams")
+        self.spec_decode = spec_decode
+        self.spec_k = max(1, int(spec_k))
+        self.drafter = None
+        if spec_decode != "off":
+            self.drafter = (drafter if drafter is not None
+                            else draft_mod.make_drafter(spec_decode))
+            # Verify serves EVERY lane when speculation is on (non-drafting
+            # rows read preds at their last span position), so only one
+            # compiled step runs per width either way.
+            self._verify = jax.jit(
+                engine_mod.make_verify_step_fn(cfg, impl=impl),
+                donate_argnums=(1,))
+            has_state = self._has_state
+
+            def snap_fn(cache, start, width):
+                out = {"spans": cache_mod.snapshot_span(cache, start, width)}
+                if has_state:
+                    out["state"] = lm.snapshot_state_rows(cfg, cache)
+                return out
+
+            def restore_fn(cache, snap, start, lo, hi, smask):
+                cache = cache_mod.restore_span(cache, snap["spans"], start,
+                                               lo, hi)
+                if has_state:
+                    cache = lm.restore_state_rows(cfg, cache, snap["state"],
+                                                  smask)
+                return cache
+
+            # Snapshot is jitted WITHOUT donation: its outputs are fresh
+            # buffers that survive the verify call donating the live cache.
+            self._snap = jax.jit(snap_fn, static_argnums=(2,))
+            self._restore = jax.jit(restore_fn, donate_argnums=(0,))
         self.rng = jax.random.PRNGKey(seed)
         # Positions are host-owned: the mixed step takes (start, span) as
         # inputs and never returns pos, so there is no per-step host→device
@@ -411,7 +453,13 @@ class ContinuousBatchingEngine:
                       "shed": 0, "shed_queue_full": 0, "shed_capacity": 0,
                       "expired": 0, "expired_ttft": 0, "expired_deadline": 0,
                       "expired_queued": 0, "retried": 0,
-                      "preempt_for_pages": 0, "preempt_fenced": 0}
+                      "preempt_for_pages": 0, "preempt_fenced": 0,
+                      # Speculative decoding: drafts proposed, drafts
+                      # accepted, cache writes rolled back, steps that
+                      # carried >= 1 draft, steps that rolled anything back.
+                      "draft_tokens": 0, "accepted_tokens": 0,
+                      "rollback_tokens": 0, "spec_steps": 0,
+                      "spec_rollbacks": 0}
 
     # -- request lifecycle --------------------------------------------------
 
@@ -838,6 +886,66 @@ class ContinuousBatchingEngine:
             budget -= take
         return spans
 
+    def _fund_drafts(self, spans: np.ndarray) -> dict[int, list[int]]:
+        """Widen decode rows with drafter proposals from whatever token
+        budget decode + admission left over — drafts are funded LAST, so
+        speculation never displaces guaranteed work.  Mutates ``spans``
+        (row span 1 -> 1 + len(draft)) and returns {row: draft tokens}.
+
+        The per-row cap keeps every invariant the non-speculative path
+        holds: committed tokens never exceed the request's remaining
+        generation budget (the +1 bonus makes the cap ``remaining - 1``),
+        and writes never pass ``max_len - 1`` (the final sampled token is
+        never written, exactly as in plain decode).
+        """
+        drafts: dict[int, list[int]] = {}
+        if self.drafter is None:
+            return drafts
+        budget = (self.token_budget if self.token_budget is not None
+                  else self.batch * self.chunk_size) - int(spans.sum())
+        if budget <= 0:
+            return drafts
+        rot = self.stats["steps"] % self.batch
+        for r in sorted(range(self.batch),
+                        key=lambda r: (r - rot) % self.batch):
+            if budget <= 0:
+                break
+            req = self.rows[r]
+            if req is None or spans[r] != 1 or req.admitting:
+                continue
+            cap = min(self.spec_k, budget,
+                      req.max_new_tokens - len(req.tokens) - 1,
+                      self.max_len - int(self.row_pos[r]) - 1)
+            if cap <= 0:
+                continue
+            d = self.drafter.propose(req.context, cap)[:cap]
+            if not d:
+                continue
+            drafts[r] = [int(t) for t in d]
+            spans[r] = 1 + len(d)
+            budget -= len(d)
+        return drafts
+
+    def _rollback_tail_pages(self, row: int, keep_pos: int,
+                             end_pos: int) -> None:
+        """Free the pages a rejected draft tail grew: every page wholly
+        beyond the committed cursor inside the step's write window.  Safe
+        by construction — drafting rows are past admission, so window
+        pages beyond the pre-step fill were grown (or COW'd) this step
+        with refcount 1, and the committed t0 write keeps its own page
+        (n_app >= 1) so a COW'd boundary page is never freed."""
+        ps = self.page_size
+        req = self.rows[row]
+        for widx in range(-(-keep_pos // ps), min(self.maxp,
+                                                  -(-end_pos // ps))):
+            page = int(self.host_bt[row, widx])
+            if page == self.trash_page:
+                continue
+            self.allocator.free([page], row=row)
+            req.pages.remove(page)
+            self.host_bt[row, widx] = self.trash_page
+            self._bt_dirty = True
+
     def _to_dev(self, name: str, arr: np.ndarray) -> jax.Array:
         """Upload ``arr`` unless it is unchanged since the last step — the
         drained/idle steady state then reuses the resident device buffer
@@ -865,16 +973,22 @@ class ContinuousBatchingEngine:
                 return True
             return False
         spans = self._compose()
+        drafts = self._fund_drafts(spans) if self.drafter is not None else {}
         if self.paged:
             self._ensure_pages(spans)
+        # A mid-walk eviction zeroes the victim's span; drop its draft.
+        drafts = {r: d for r, d in drafts.items()
+                  if self.rows[r] is not None and spans[r] == 1 + len(d)}
         if not spans.any():
             # Budget 0 with live rows cannot make progress — treat as a
             # stall-only bookkeeping step.
             self.stats["steps"] += 1
             return True
-        width = engine_mod.width_bucket(
-            int(spans.max()), max(self.chunk_size, 1)
-            if self.prefill_interleave else self.max_len)
+        clamp = (max(self.chunk_size, 1) if self.prefill_interleave
+                 else self.max_len)
+        if self.drafter is not None:
+            clamp = max(clamp, 1 + self.spec_k)
+        width = engine_mod.width_bucket(int(spans.max()), clamp)
         toks = np.zeros((self.batch, width), np.int64)
         for row in range(self.batch):
             req = self.rows[row]
@@ -885,19 +999,70 @@ class ContinuousBatchingEngine:
                 toks[row, :len(seg)] = seg
             else:
                 toks[row, 0] = self.token[row]
-        self.rng, sub = jax.random.split(self.rng)
-        nxt, self.cache = self._mixed(
-            self.params, self.cache,
-            self._to_dev(f"tok{width}", toks.astype(np.int32)),
-            self._to_dev("start", self.row_pos.astype(np.int32)),
-            self._to_dev(f"span{width}", spans.astype(np.int32)), sub)
+                d = drafts.get(row)
+                if d:
+                    toks[row, 1:1 + len(d)] = d
+        toks_dev = self._to_dev(f"tok{width}", toks.astype(np.int32))
+        start_dev = self._to_dev("start", self.row_pos.astype(np.int32))
+        span_dev = self._to_dev(f"span{width}", spans.astype(np.int32))
+        if self.drafter is not None:
+            snap = (self._snap(self.cache, start_dev, width)
+                    if drafts else None)
+            preds_d, acc_d, self.cache = self._verify(
+                self.params, self.cache, toks_dev, start_dev, span_dev)
+            preds = np.asarray(preds_d)        # [B, width]
+            acc = np.asarray(acc_d)
+            sampled = preds[np.arange(self.batch),
+                            np.clip(spans - 1, 0, width - 1)]
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, self.cache = self._mixed(self.params, self.cache, toks_dev,
+                                          start_dev, span_dev, sub)
+            sampled = np.asarray(nxt)          # the one per-step sync
         self.stats["steps"] += 1
-        sampled = np.asarray(nxt)              # the one per-step sync
         chunks = 0
         freed = False
+        roll_lo = np.zeros((self.batch,), np.int64)
+        roll_hi = np.zeros((self.batch,), np.int64)   # lo == hi: no-op row
+        replay_spans = np.zeros((self.batch,), np.int64)
+        rolled = False
         for row in range(self.batch):
             req = self.rows[row]
             if req is None or spans[row] == 0:
+                continue
+            d = drafts.get(row)
+            if d is not None:
+                # Speculative lane: commit the longest accepted prefix plus
+                # the verifier's bonus token, roll the rejected tail back.
+                pos0 = int(self.row_pos[row])
+                appended, a_dev = draft_mod.accept_tokens(
+                    d, acc[row], preds[row],
+                    req.max_new_tokens - len(req.tokens), req.eos_id)
+                n_app = len(appended)
+                self.stats["draft_tokens"] += len(d)
+                self.stats["accepted_tokens"] += min(n_app, a_dev)
+                n_roll = int(spans[row]) - n_app
+                self.row_pos[row] += n_app
+                for t in appended:
+                    req.tokens.append(int(t))
+                    if self._journal is not None:
+                        self._journal("gen", req)
+                self.stats["gen_tokens"] += n_app
+                self.token[row] = int(appended[-1])
+                if req.first_token_step < 0:
+                    req.first_token_step = self.stats["steps"]
+                if n_roll > 0:
+                    self.stats["rollback_tokens"] += n_roll
+                    roll_lo[row] = pos0 + n_app
+                    roll_hi[row] = pos0 + int(spans[row])
+                    replay_spans[row] = n_app
+                    rolled = True
+                    if self.paged:
+                        self._rollback_tail_pages(row, pos0 + n_app,
+                                                  pos0 + int(spans[row]))
+                if self._done(req):
+                    self._free_row(row)
+                    freed = True
                 continue
             self.row_pos[row] += int(spans[row])
             if req.admitting:
@@ -922,6 +1087,35 @@ class ContinuousBatchingEngine:
             if self._done(req):
                 self._free_row(row)
                 freed = True
+        if drafts:
+            self.stats["spec_steps"] += 1
+        if rolled:
+            # Restore rejected-tail slots bitwise from the pre-verify
+            # snapshot.  The scatter walks the block tables INSIDE the
+            # device cache, which still hold the pre-rollback mapping (the
+            # host-side page frees above only touch host_bt; _push_tables
+            # runs before the next verify) — so tail bytes land in exactly
+            # the pages they were snapshotted from.
+            self.stats["spec_rollbacks"] += 1
+            self.cache = self._restore(
+                self.cache, snap, start_dev,
+                jnp.asarray(roll_lo.astype(np.int32)),
+                jnp.asarray(roll_hi.astype(np.int32)),
+                jnp.asarray(replay_spans > 0))
+            if self._has_state and replay_spans.any():
+                # Recurrent carries fold every span token irreversibly, so
+                # a partial rejection restored the PRE-verify state above;
+                # replay just the committed tokens to advance it.  The
+                # replay's attention writes are writes of the same tokens
+                # at the same positions — harmless overwrites.
+                w2 = engine_mod.width_bucket(int(replay_spans.max()), clamp)
+                _, _, self.cache = self._verify(
+                    self.params, self.cache,
+                    self._to_dev(f"rtok{w2}",
+                                 toks[:, :w2].astype(np.int32)),
+                    start_dev,
+                    self._to_dev(f"rspan{w2}",
+                                 replay_spans.astype(np.int32)))
         if chunks:
             self.stats["prefill_chunks"] += chunks
             self.stats["prefills"] += 1        # steps that carried a chunk
@@ -939,6 +1133,12 @@ class ContinuousBatchingEngine:
         else:
             raise RuntimeError("scheduler hit max_steps with work remaining")
         return requests
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Accepted drafts / proposed drafts (0.0 before any speculation)."""
+        return (self.stats["accepted_tokens"]
+                / max(1, self.stats["draft_tokens"]))
 
     @property
     def live_tokens(self) -> int:

@@ -27,6 +27,19 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _bounded_compile_cache():
+    # XLA's CPU backend keeps every compiled executable's JIT'd code alive
+    # for the life of the process; past several hundred distinct compiles
+    # the ORC JIT can segfault inside backend_compile (observed when the
+    # whole suite runs single-process under ``pytest -x``).  Dropping the
+    # trace/compile caches at module boundaries frees each module's
+    # executables once its fixtures die, bounding resident JIT state at
+    # the cost of a handful of recompiles per module.
+    yield
+    jax.clear_caches()
+
+
 def pytest_configure(config):
     if not HAVE_HYPOTHESIS:
         return
