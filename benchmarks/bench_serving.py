@@ -3,7 +3,10 @@ the chunked-vs-stalled admission sweep of the token-budget mixed step, the
 replicated page-table sweep (N engines gossiping one CRDT page table:
 sync bytes per step + cross-replica shared-prefix resolution), and the
 speculative-decoding sweep (off vs prompt-lookup vs CRDT-doc drafting:
-accept rate, committed tokens/step, µs/accepted-token, stream identity).
+accept rate, committed tokens/step, µs/accepted-token, stream identity),
+the quantized page-pool sweep (off vs int8 vs fp8: resident-capacity gain,
+analytic read bytes/step, logit-error report, greedy-stream identity), and
+the tiered-memory sweep (host-swap preemption vs recompute-from-scratch).
 
 Sweeps batch × context-length skew × cache layout and reports, per config:
 
@@ -39,29 +42,56 @@ from pathlib import Path
 import numpy as np
 
 
-def _dtype_bytes(dtype_str: str = "bfloat16") -> int:
-    return 2 if "16" in dtype_str else 4
+def _abstract_cache(cfg, *, batch: int, max_len: int, page_size: int,
+                    paged: bool, kv_quant: str = "off"):
+    """Shape-only cache tree (no allocation) for byte accounting."""
+    import jax
+
+    from repro.models import lm
+
+    return jax.eval_shape(lambda: lm.init_cache(
+        cfg, batch, max_len, paged=paged, page_size=page_size,
+        kv_quant=kv_quant))
 
 
 def analytic_step_bytes(cfg, *, batch: int, max_len: int, page_size: int,
                         live_lens: list[int], paged: bool,
-                        dtype_bytes: int = 2) -> tuple[int, int]:
+                        kv_quant: str = "off") -> tuple[int, int]:
     """(write_bytes, read_bytes) of KV-cache traffic for ONE decode step.
 
     Dense: the one-hot masked select produces a full new cache value per
     attention layer (write = |cache|) after streaming the old one (read =
     |cache|).  Paged: one slot write per row; reads walk only live pages.
+
+    ONE code path for dense / paged / quantized: every byte count is
+    derived from the cache tree's own leaf shapes+dtypes via the same
+    helpers roofline.py uses (kv_slot_bytes / kv_page_bytes /
+    dense_kv_bytes), so a quantized pool automatically counts its int8/fp8
+    payload plus the f32 per-row scale leaves, and the bench agrees with
+    the roofline model by construction.
     """
-    n_attn = sum(1 for k in (list(cfg.block_pattern) * cfg.pattern_groups)
-                 + list(cfg.tail_blocks) if k in ("attn", "moe"))
-    row_bytes = cfg.num_kv_heads * cfg.head_dim * dtype_bytes * 2   # K + V
+    from benchmarks import roofline
+
+    cache = _abstract_cache(cfg, batch=batch, max_len=max_len,
+                            page_size=page_size, paged=paged,
+                            kv_quant=kv_quant)
     if not paged:
-        cache = batch * max_len * row_bytes
-        return n_attn * cache, n_attn * cache
-    write = batch * row_bytes
-    read = sum(-(-(l + 1) // page_size) * page_size for l in live_lens) \
-        * row_bytes
-    return n_attn * write, n_attn * read
+        total = roofline.dense_kv_bytes(cache)
+        return total, total
+    write = batch * roofline.kv_slot_bytes(cache)
+    read = sum(-(-(l + 1) // page_size) for l in live_lens) \
+        * roofline.kv_page_bytes(cache)
+    return write, read
+
+
+def analytic_slot_bytes(cfg, *, batch: int, max_len: int, page_size: int,
+                        kv_quant: str = "off") -> int:
+    """Bytes one cached token pins across all paged layers (pool + scales)."""
+    from benchmarks import roofline
+
+    return roofline.kv_slot_bytes(_abstract_cache(
+        cfg, batch=batch, max_len=max_len, page_size=page_size, paged=True,
+        kv_quant=kv_quant))
 
 
 def _quantile(xs: list[float], q: float) -> float:
@@ -75,7 +105,8 @@ def _quantile(xs: list[float], q: float) -> float:
 def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
                skew: str, paged: bool, n_requests: int, prompt_hi: int,
                max_new: int, seed: int = 0, chunk_size: int = 32,
-               interleave: bool = True, stagger: bool = False) -> dict:
+               interleave: bool = True, stagger: bool = False,
+               kv_quant: str = "off") -> dict:
     from repro.serving.scheduler import ContinuousBatchingEngine, Request
 
     rng = np.random.default_rng(seed)
@@ -98,7 +129,8 @@ def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
     eng = ContinuousBatchingEngine(cfg, params, batch=batch, max_len=max_len,
                                    paged=paged, page_size=page_size,
                                    chunk_size=chunk_size,
-                                   prefill_interleave=interleave)
+                                   prefill_interleave=interleave,
+                                   kv_quant=kv_quant)
     for r in requests:
         eng.submit(r)
     step_times: list[float] = []
@@ -136,7 +168,7 @@ def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
         if live_len_samples else []
     wb, rb = analytic_step_bytes(cfg, batch=batch, max_len=max_len,
                                  page_size=page_size, live_lens=mid_lens,
-                                 paged=paged)
+                                 paged=paged, kv_quant=kv_quant)
     admitted_mid_flight = sum(1 for r in requests if r.admitted_step > 0)
     # TTFT in steps is deterministic (greedy, fixed seeds); wall TTFT rides
     # the step timestamps.  Inter-token latency pools per-request diffs.
@@ -149,6 +181,7 @@ def run_config(cfg, params, *, batch: int, max_len: int, page_size: int,
            for a, b in zip(stamps, stamps[1:])]
     return {
         "batch": batch, "skew": skew, "mode": "paged" if paged else "dense",
+        "kv_quant": kv_quant,
         "max_len": max_len, "page_size": page_size,
         "chunk_size": chunk_size, "interleave": interleave,
         "n_requests": n_requests, "gen_tokens": eng.stats["gen_tokens"],
@@ -480,8 +513,231 @@ def run_spec_agents(cfg, params, *, spec_k: int = 4, max_len: int = 256,
     return rows
 
 
+# Documented quant-error budget (model-level logit error vs the bf16-pool
+# reference, teacher-forced): int8 per-page-row scales bound element error
+# by scale/2 ≈ amax/254; fp8 e4m3 has ~3 mantissa bits, so its budget is
+# looser.  Greedy argmax must survive either way.
+QUANT_LOGIT_TOL = {"int8": 0.25, "fp8": 0.5}
+
+
+def _quant_modes():
+    from repro.models import cache as cache_mod
+
+    return tuple(m for m in cache_mod.KV_QUANT_MODES
+                 if m != "fp8" or cache_mod.FP8_DTYPE is not None)
+
+
+def run_quant_sweep(cfg, params, *, batch: int, max_len: int, page_size: int,
+                    n_requests: int, prompt_hi: int, max_new: int,
+                    chunk_size: int = 16, seed: int = 0) -> list[dict]:
+    """Quantized page-pool sweep: off vs int8 (vs fp8 when the jax build
+    has ``float8_e4m3fn``).
+
+    One shared ragged workload through the full engine per mode.  The
+    ``off`` row is the bf16-pool reference; the ``int8`` row must
+    reproduce its greedy token streams exactly (``streams_match`` — fp8's
+    ~3 mantissa bits may flip near-tie argmaxes, so fp8 is held to the
+    logit-error budget instead) while reading fewer analytic bytes per
+    step and pinning fewer resident MB at the live-token watermark.  ``resident_capacity_gain`` is the headline:
+    bytes one cached token pins under bf16 over the same under the quant
+    layout (pool + scale leaves) — how many MORE tokens the same pool MB
+    can hold.
+    """
+    from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+    rng = np.random.default_rng(seed)
+    plens = [int(x) for x in np.exp(rng.uniform(
+        np.log(4), np.log(prompt_hi), n_requests)).astype(int)]
+    prompts = [[int(t) for t in rng.integers(2, cfg.vocab_size, p)]
+               for p in plens]
+    base_slot = analytic_slot_bytes(cfg, batch=batch, max_len=max_len,
+                                    page_size=page_size, kv_quant="off")
+    rows: list[dict] = []
+    streams0 = None
+    for mode in _quant_modes():
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng = ContinuousBatchingEngine(cfg, params, batch=batch,
+                                       max_len=max_len, paged=True,
+                                       page_size=page_size,
+                                       chunk_size=chunk_size, kv_quant=mode)
+        for r in reqs:
+            eng.submit(r)
+        times: list[float] = []
+        active: list[int] = []
+        live_samples: list[list[int]] = []
+        resident_peak = 0
+        while True:
+            live = [len(r.prompt) + len(r.tokens)
+                    for r in eng.rows if r is not None]
+            t0 = time.perf_counter()
+            more = eng.step()
+            times.append(time.perf_counter() - t0)
+            if live:
+                active.append(len(live))
+                live_samples.append(live)
+            resident_peak = max(resident_peak, eng.resident_cache_bytes())
+            if not more:
+                break
+            if eng.stats["steps"] > 50_000:
+                raise RuntimeError("quant bench runaway")
+        streams = {r.rid: list(r.tokens) for r in reqs}
+        if streams0 is None:
+            streams0 = streams
+        mid = live_samples[len(live_samples) // 2] if live_samples else []
+        wb, rb = analytic_step_bytes(cfg, batch=batch, max_len=max_len,
+                                     page_size=page_size, live_lens=mid,
+                                     paged=True, kv_quant=mode)
+        slot = analytic_slot_bytes(cfg, batch=batch, max_len=max_len,
+                                   page_size=page_size, kv_quant=mode)
+        med = statistics.median(times)
+        mean_active = statistics.fmean(active) if active else 0.0
+        rows.append({
+            "kv_quant": mode, "batch": batch, "page_size": page_size,
+            "n_requests": n_requests, "steps": eng.stats["steps"],
+            "gen_tokens": eng.stats["gen_tokens"],
+            "completed": eng.stats["completed"],
+            "us_per_token": 1e6 * med / max(mean_active, 1e-9),
+            "us_per_step": 1e6 * med,
+            "write_bytes_per_step": wb,
+            "read_bytes_per_step": rb,
+            "resident_cache_mb": resident_peak / 2**20,
+            "slot_bytes": slot,
+            "resident_capacity_gain": base_slot / slot,
+            "streams_match": streams == streams0,
+        })
+    return rows
+
+
+def quant_error_report(cfg, params, *, max_len: int = 64, page_size: int = 8,
+                       prompt_len: int = 12, decode_steps: int = 12,
+                       seed: int = 0) -> dict:
+    """Model-level logit-error report for quantized KV pools (CI artifact).
+
+    Teacher-forces the bf16-pool greedy stream through each quant mode so
+    per-step logits are directly comparable, then reports logit MSE,
+    max-abs error, and whether the quant run's own greedy argmax matches
+    the reference at every step.  Gated against QUANT_LOGIT_TOL.
+    """
+    import jax.numpy as jnp
+
+    from repro.models import lm
+
+    rng = np.random.default_rng(seed)
+    batch = 2
+    tokens = jnp.asarray(rng.integers(2, cfg.vocab_size,
+                                      (batch, prompt_len)), jnp.int32)
+    maxp = -(-max_len // page_size)
+    bt = jnp.arange(batch * maxp, dtype=jnp.int32).reshape(batch, maxp)
+
+    def run(mode: str, inputs=None):
+        cache = lm.init_cache(cfg, batch, max_len, paged=True,
+                              page_size=page_size, kv_quant=mode)
+        cache = lm.set_block_tables(cache, bt)
+        logits, cache = lm.prefill(params, cfg, tokens, cache)
+        outs = [np.asarray(logits, np.float32)]
+        fed = []
+        for t in range(decode_steps):
+            nxt = (jnp.asarray(np.argmax(outs[-1], -1), jnp.int32)
+                   if inputs is None else inputs[t])
+            fed.append(nxt)
+            pos = jnp.full((batch,), prompt_len + t, jnp.int32)
+            logits, cache = lm.decode_step(params, cfg, nxt, cache, pos)
+            outs.append(np.asarray(logits, np.float32))
+        return outs, fed
+
+    ref_outs, ref_inputs = run("off")
+    modes = {}
+    for mode in _quant_modes():
+        if mode == "off":
+            continue
+        outs, _ = run(mode, inputs=ref_inputs)
+        diffs = [q - r for q, r in zip(outs, ref_outs)]
+        max_abs = float(max(np.max(np.abs(d)) for d in diffs))
+        greedy = all(np.array_equal(np.argmax(q, -1), np.argmax(r, -1))
+                     for q, r in zip(outs, ref_outs))
+        modes[mode] = {
+            "logit_mse": float(np.mean([np.mean(d ** 2) for d in diffs])),
+            "logit_max_abs": max_abs,
+            "greedy_match": bool(greedy),
+            "tolerance": QUANT_LOGIT_TOL[mode],
+            "within_tol": bool(max_abs <= QUANT_LOGIT_TOL[mode]),
+        }
+    return {
+        "batch": batch, "prompt_len": prompt_len,
+        "decode_steps": decode_steps, "page_size": page_size,
+        "modes": modes,
+        # Greedy identity is an int8 guarantee: fp8 e4m3 (~3 mantissa bits)
+        # may legitimately flip near-tie argmaxes and is held only to the
+        # logit-error budget.
+        "greedy_match_int8": modes["int8"]["greedy_match"],
+        "all_within_tol": all(m["within_tol"] for m in modes.values()),
+    }
+
+
+def run_swap_sweep(cfg, params, *, max_len: int = 64, page_size: int = 8,
+                   num_pages: int = 6, chunk_size: int = 8,
+                   prompt_lens: tuple[int, ...] = (24, 6), max_new: int = 16,
+                   swap_tier_pages: int = 8, kv_quant: str = "off",
+                   seed: int = 0) -> list[dict]:
+    """Tiered host-swap page memory vs recompute-from-scratch preemption.
+
+    A deliberately undersized pool (``num_pages`` < both rows' peak) forces
+    LRU preemption of the long-context row mid-decode.  The ``recompute``
+    reference (swap tier disabled) re-admits the victim by re-prefilling
+    its whole context in chunk-size slices; the ``swap`` run copies the
+    victim's private pages to a host swap pool at eviction and streams
+    them back on re-admission, so only the context *tail* re-prefills.
+    Gate: same token streams, strictly fewer steps, and the swap run's
+    swap/preempt counters prove the tier actually engaged.
+    """
+    from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+    rng = np.random.default_rng(seed)
+    prompts = [[int(t) for t in rng.integers(2, cfg.vocab_size, p)]
+               for p in prompt_lens]
+    rows: list[dict] = []
+    streams0 = None
+    for tier in (0, swap_tier_pages):
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng = ContinuousBatchingEngine(
+            cfg, params, batch=len(prompts), max_len=max_len, paged=True,
+            page_size=page_size, num_pages=num_pages, chunk_size=chunk_size,
+            kv_quant=kv_quant, swap_tier_pages=tier,
+            swap_min_tokens=2 * page_size)
+        for r in reqs:
+            eng.submit(r)
+        times: list[float] = []
+        while True:
+            t0 = time.perf_counter()
+            more = eng.step()
+            times.append(time.perf_counter() - t0)
+            if not more:
+                break
+            if eng.stats["steps"] > 50_000:
+                raise RuntimeError("swap bench runaway")
+        streams = {r.rid: list(r.tokens) for r in reqs}
+        if streams0 is None:
+            streams0 = streams
+        s = eng.stats
+        rows.append({
+            "tier": "swap" if tier else "recompute",
+            "swap_tier_pages": tier, "num_pages": num_pages,
+            "page_size": page_size, "kv_quant": kv_quant,
+            "steps": s["steps"], "completed": s["completed"],
+            "gen_tokens": s["gen_tokens"],
+            "preempt_swap": s["preempt_swap"],
+            "preempt_recompute": s["preempt_recompute"],
+            "swap_outs": s["swap_outs"], "swap_ins": s["swap_ins"],
+            "us_per_step": 1e6 * statistics.median(times),
+            "streams_match": streams == streams0,
+        })
+    return rows
+
+
 def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
-              emit_csv=print) -> dict:
+              emit_csv=print, swap_tier_pages: int = 8) -> dict:
     from repro.agents.orchestrator import make_sim_llm
 
     cfg, params = make_sim_llm()
@@ -547,6 +803,26 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
         max_new=2 * max_new, spec_k=4)
     spec_agent_rows = run_spec_agents(cfg, params, spec_k=4)
 
+    # Quantized page-pool sweep on a dedicated head_dim=64 single-head
+    # config: the capacity gain is head_dim-bound (scales amortize over the
+    # feature axis — bf16→int8 gain is 2D/(D+4)), and the sim-llm's 16-wide
+    # heads would cap it at 1.6× regardless of how good the layout is.
+    import jax
+
+    from repro.models import lm
+
+    qcfg = cfg.replace(num_heads=1, num_kv_heads=1, head_dim=64)
+    qparams = lm.init(jax.random.PRNGKey(0), qcfg)
+    quant_rows = run_quant_sweep(
+        qcfg, qparams, batch=batches[0], max_len=max_len,
+        page_size=page_size, n_requests=batches[0] + 2,
+        prompt_hi=prompt_hi // 2, max_new=max_new)
+    quant_err = quant_error_report(qcfg, qparams)
+
+    # Tiered-memory sweep: host-swap preemption vs recompute on an
+    # undersized pool (see run_swap_sweep).
+    swap_rows = run_swap_sweep(cfg, params, swap_tier_pages=swap_tier_pages)
+
     ratios = []
     for d in rows:
         if d["mode"] != "dense":
@@ -586,6 +862,50 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                                  for r in repl_rows),
         },
         "spec_decode": {"engine": spec_rows, "agents": spec_agent_rows},
+        "quant": quant_rows,
+        "quant_error": quant_err,
+        "swap": swap_rows,
+        "quantization": {
+            # Acceptance: int8 greedy streams are bit-identical to the
+            # bf16-pool reference (fp8 is held only to the logit-error
+            # budget — ~3 mantissa bits may flip near-tie argmaxes), one
+            # cached token pins ≥1.8× fewer bytes (pool + scales, analytic
+            # from the CacheSpec leaves), and each quant step reads fewer
+            # bytes and pins fewer resident MB than bf16 paged.
+            "streams_match_int8": all(
+                r["streams_match"] for r in quant_rows
+                if r["kv_quant"] != "fp8"),
+            "resident_capacity_gain_ok": all(
+                r["resident_capacity_gain"] >= 1.8 for r in quant_rows
+                if r["kv_quant"] != "off"),
+            "read_bytes_below_fp32": all(
+                r["read_bytes_per_step"] < quant_rows[0][
+                    "read_bytes_per_step"]
+                for r in quant_rows if r["kv_quant"] != "off"),
+            "resident_mb_below_fp32": all(
+                r["resident_cache_mb"] < quant_rows[0]["resident_cache_mb"]
+                for r in quant_rows if r["kv_quant"] != "off"),
+            "greedy_match_int8": quant_err["greedy_match_int8"],
+            "error_within_tol": quant_err["all_within_tol"],
+        },
+        "memory_tiers": {
+            # Acceptance: the swap tier recovers the preempted long-context
+            # victim in strictly fewer steps than recompute-from-scratch,
+            # with identical token streams, and its counters prove pages
+            # actually moved through the host tier (while the recompute
+            # reference never swapped).
+            "swap_beats_recompute": (
+                swap_rows[1]["steps"] < swap_rows[0]["steps"]),
+            "streams_match": all(r["streams_match"] for r in swap_rows),
+            "swap_counters_positive": (
+                swap_rows[1]["swap_outs"] > 0
+                and swap_rows[1]["swap_ins"] > 0
+                and swap_rows[1]["preempt_swap"] > 0),
+            "recompute_reference_unswapped": (
+                swap_rows[0]["swap_outs"] == 0
+                and swap_rows[0]["preempt_swap"] == 0),
+            "all_completed": all(r["completed"] == 2 for r in swap_rows),
+        },
         "speculation": {
             # Acceptance: every speculative engine run reproduces the
             # greedy reference streams token-for-token, drafts something
@@ -615,6 +935,10 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
         },
     }
     Path(out).write_text(json.dumps(report, indent=2))
+    # Quant-error report doubles as a standalone CI artifact next to the
+    # main report (uploaded by the bench-smoke job).
+    Path(out).with_name("BENCH_quant_error.json").write_text(
+        json.dumps(quant_err, indent=2))
     for r in rows:
         name = f"serving/{r['mode']}_b{r['batch']}_{r['skew']}"
         derived = (f"writeB/step={r['write_bytes_per_step']}"
@@ -668,6 +992,27 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                    f";digestMatch={int(r['digest_match'])}")
         emit_csv(f"serving/spec_agents_{r['spec']},"
                  f"{1e6 * r['wall_s']:.0f},{derived}")
+    for r in quant_rows:
+        derived = (f"readB/step={r['read_bytes_per_step']}"
+                   f";residentMB={r['resident_cache_mb']:.3f}"
+                   f";slotB={r['slot_bytes']}"
+                   f";capGain={r['resident_capacity_gain']:.2f}"
+                   f";match={int(r['streams_match'])}")
+        emit_csv(f"serving/quant_{r['kv_quant']},"
+                 f"{r['us_per_token']:.1f},{derived}")
+    for mode, e in quant_err["modes"].items():
+        emit_csv(f"serving/quant_err_{mode},0.0,"
+                 f"mse={e['logit_mse']:.2e}"
+                 f";maxAbs={e['logit_max_abs']:.4f}"
+                 f";greedy={int(e['greedy_match'])}"
+                 f";withinTol={int(e['within_tol'])}")
+    for r in swap_rows:
+        derived = (f"steps={r['steps']};swapOuts={r['swap_outs']}"
+                   f";swapIns={r['swap_ins']}"
+                   f";preemptSwap={r['preempt_swap']}"
+                   f";preemptRecompute={r['preempt_recompute']}"
+                   f";match={int(r['streams_match'])}")
+        emit_csv(f"serving/swap_{r['tier']},{r['us_per_step']:.1f},{derived}")
     return report
 
 
@@ -675,9 +1020,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--swap-tier-pages", type=int, default=8,
+                    help="host swap-pool slots for the memory-tier sweep "
+                         "(0 disables the swap row's tier)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run_bench(quick=args.quick, out=args.out)
+    run_bench(quick=args.quick, out=args.out,
+              swap_tier_pages=args.swap_tier_pages)
 
 
 if __name__ == "__main__":

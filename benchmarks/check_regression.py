@@ -16,7 +16,12 @@ shared-prefix hits > 0, all requests completed).  The speculative-decoding
 sweep gates waste counters (steps, draft/rollback tokens) against a strict
 ceiling, acceptance counters (accept_rate, accepted_tokens, tokens/step)
 against a strict floor, µs/accepted-token normalized by the same run's
-non-speculative row, and the stream-identity / digest-match flags.  A
+non-speculative row, and the stream-identity / digest-match flags.  The
+quantized page-pool sweep ceiling-gates analytic traffic, floor-gates the
+resident-capacity gain (>=1.8x is an acceptance flag), and checks the int8
+greedy-identity + logit-error-budget flags; the tiered-memory sweep gates
+the swap counters both ways (an increase is thrashing, a decrease means
+the tier quietly disengaged) plus the swap-beats-recompute flags.  A
 gated counter missing from either report is a loud failure, and the run
 ends with a one-line-per-counter pass/fail table.
 
@@ -78,6 +83,26 @@ SPEC_FLOOR_COUNTERS = ("accept_rate", "accepted_tokens", "tokens_per_step")
 SPEC_AGENT_COUNTERS = ("steps", "rollback_tokens")
 SPEC_AGENT_FLOOR_COUNTERS = ("accept_rate", "accepted_tokens")
 
+# Quantized page-pool sweep counters: analytic bytes / slot sizes are pure
+# functions of the CacheSpec leaves and decoding is greedy, so every
+# counter is bit-identical across reruns.  Ceiling-gate the traffic and
+# step counters; floor-gate ``resident_capacity_gain`` (a drop means the
+# quant layout got fatter — wider scales or payload) and the completion
+# counters.
+QUANT_COUNTERS = ("write_bytes_per_step", "read_bytes_per_step",
+                  "slot_bytes", "steps")
+QUANT_FLOOR_COUNTERS = ("resident_capacity_gain", "gen_tokens", "completed")
+
+# Tiered-memory sweep counters: the preemption schedule is deterministic
+# (greedy decode, fixed seeds), so swap traffic is bit-identical across
+# reruns.  ``steps`` / ``preempt_recompute`` are waste (ceiling);
+# ``completed`` / ``gen_tokens`` are floors; the swap-tier counters are
+# gated BOTH ways — an increase is thrashing, a decrease means the tier
+# quietly disengaged.
+SWAP_COUNTERS = ("steps", "preempt_recompute")
+SWAP_FLOOR_COUNTERS = ("completed", "gen_tokens")
+SWAP_BIDIR_COUNTERS = ("swap_outs", "swap_ins", "preempt_swap")
+
 
 def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
     return {(r["batch"], r["skew"]): r
@@ -106,6 +131,14 @@ def spec_rows_by_key(report: dict) -> dict[tuple, dict]:
 def spec_agent_rows_by_key(report: dict) -> dict[tuple, dict]:
     return {(r["spec"],): r
             for r in report.get("spec_decode", {}).get("agents", [])}
+
+
+def quant_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["kv_quant"],): r for r in report.get("quant", [])}
+
+
+def swap_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["tier"],): r for r in report.get("swap", [])}
 
 
 def timing_value(report: dict, key: tuple) -> tuple[float, str]:
@@ -285,6 +318,82 @@ def check(baseline: dict, current: dict, max_regression: float,
                            ("agents_steps_reduced",
                             "speculative agent trial used fewer steps")):
             flag_ok = current.get("speculation", {}).get(flag, False)
+            lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
+            ok = ok and flag_ok
+
+    # Quantized page-pool sweep: ceiling-gate traffic, floor-gate the
+    # resident-capacity gain, and gate µs/token normalized by the SAME
+    # run's kv_quant=off row (cancels the runner-speed term).
+    qbase = quant_rows_by_key(baseline)
+    qcur = quant_rows_by_key(current)
+    for key in sorted(qbase):
+        if key not in qcur:
+            ok = False
+            lines.append(f"MISSING quant row {key} in current run")
+            continue
+        label = f"quant {key[0]}"
+        for name in QUANT_COUNTERS:
+            counter(label, name, qbase[key], qcur[key], max_regression)
+        for name in QUANT_FLOOR_COUNTERS:
+            counter(label, name, qbase[key], qcur[key], max_regression,
+                    floor=True)
+        boff, coff = qbase.get(("off",)), qcur.get(("off",))
+        if key != ("off",) and boff and coff:
+            bval = (qbase[key]["us_per_token"]
+                    / max(boff["us_per_token"], 1e-9))
+            cval = (qcur[key]["us_per_token"]
+                    / max(coff["us_per_token"], 1e-9))
+            judge(label, "usTok/off", bval, cval, timing_slack)
+    if qbase and "quant" in current:
+        for flag, desc in (("streams_match_int8",
+                            "int8 greedy streams identical to bf16 pools"),
+                           ("resident_capacity_gain_ok",
+                            "quant slot pins >= 1.8x fewer bytes"),
+                           ("read_bytes_below_fp32",
+                            "quant step reads fewer bytes than bf16 paged"),
+                           ("resident_mb_below_fp32",
+                            "quant run pins fewer resident MB"),
+                           ("greedy_match_int8",
+                            "int8 teacher-forced argmax matches reference"),
+                           ("error_within_tol",
+                            "quant logit error inside documented budget")):
+            flag_ok = current.get("quantization", {}).get(flag, False)
+            lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
+            ok = ok and flag_ok
+
+    # Tiered-memory sweep: swap-tier counters are gated both ways (see the
+    # SWAP_* comment) plus the swap-beats-recompute acceptance flags.
+    wbase = swap_rows_by_key(baseline)
+    wcur = swap_rows_by_key(current)
+    for key in sorted(wbase):
+        if key not in wcur:
+            ok = False
+            lines.append(f"MISSING swap row {key} in current run")
+            continue
+        label = f"swap {key[0]}"
+        for name in SWAP_COUNTERS:
+            counter(label, name, wbase[key], wcur[key], max_regression)
+        for name in SWAP_FLOOR_COUNTERS:
+            counter(label, name, wbase[key], wcur[key], max_regression,
+                    floor=True)
+        for name in SWAP_BIDIR_COUNTERS:
+            counter(label, name, wbase[key], wcur[key], max_regression)
+            counter(label, name, wbase[key], wcur[key], max_regression,
+                    floor=True)
+    if wbase and "swap" in current:
+        for flag, desc in (("swap_beats_recompute",
+                            "swap re-admission uses fewer steps than "
+                            "recompute"),
+                           ("streams_match",
+                            "swap/recompute token streams identical"),
+                           ("swap_counters_positive",
+                            "swap tier actually engaged (outs/ins/preempts "
+                            "> 0)"),
+                           ("recompute_reference_unswapped",
+                            "recompute reference never swapped"),
+                           ("all_completed",
+                            "memory-tier sweep completed all requests")):
+            flag_ok = current.get("memory_tiers", {}).get(flag, False)
             lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
             ok = ok and flag_ok
 

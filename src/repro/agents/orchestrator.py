@@ -177,6 +177,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
              kv: str = "dense", prefill: str = "replay",
              page_size: int = 64, chunk_size: int = 32, replicas: int = 1,
              spec_decode: str = "off", spec_k: int = 4,
+             kv_quant: str = "off",
              time_fn=time.perf_counter) -> RunResult:
     """``kv="paged"`` backs the agents with the paged KV cache.
 
@@ -195,6 +196,9 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         raise ValueError("--replicas > 1 requires the paged KV cache "
                          "(the replicated page table replicates page "
                          "metadata, not a dense per-row cache)")
+    if kv_quant != "off" and kv != "paged":
+        raise ValueError("--kv-quant requires --kv paged (quantized "
+                         "layouts are page-pool layouts)")
     chunked = prefill in ("ragged", "chunked")
     if spec_decode not in ("off", "ngram", "doc"):
         raise ValueError(f"spec_decode must be off/ngram/doc, got "
@@ -260,7 +264,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
                                       num_pages=pool_pages)
         cache = lm.init_cache(cfg, n_agents, max_len, paged=True,
                               page_size=page_size,
-                              num_pages=pool_pages + 1)
+                              num_pages=pool_pages + 1, kv_quant=kv_quant)
         cache = mapper.install(cache)
     else:
         cache = lm.init_cache(cfg, n_agents, max_len)
@@ -816,6 +820,11 @@ def main() -> None:
                          "with n-gram fallback (requires --prefill chunked)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max draft tokens proposed per agent per step")
+    ap.add_argument("--kv-quant", default="off",
+                    choices=["off", "int8", "fp8"],
+                    help="quantized page pools (requires --kv paged): pools "
+                         "store int8/fp8 values plus per-row f32 scales and "
+                         "decode dequantizes inside the fused page walk")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -825,7 +834,8 @@ def main() -> None:
                  delta_capacity=args.delta_capacity, kv=args.kv,
                  prefill=args.prefill, page_size=args.page_size,
                  chunk_size=args.chunk_size, replicas=args.replicas,
-                 spec_decode=args.spec_decode, spec_k=args.spec_k)
+                 spec_decode=args.spec_decode, spec_k=args.spec_k,
+                 kv_quant=args.kv_quant)
     for k, v in sorted(vars(r).items()):
         print(f"{k}: {v}")
 

@@ -34,6 +34,37 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Minimum sublane count per pool dtype (second-to-last dim of the TPU tile;
+# the lane dim is always 128).  f32 default 8; narrow dtypes pack more rows.
+_SUBLANE = {jnp.dtype(jnp.bfloat16): 16, jnp.dtype(jnp.int8): 32}
+_FP8 = getattr(jnp, "float8_e4m3fn", None)
+if _FP8 is not None:
+    _SUBLANE[jnp.dtype(_FP8)] = 32
+
+
+def _check_tileable(kernel: str, dtype, **dims) -> None:
+    """Shared TPU tileability guard for the paged kernels (the pool is
+    deliberately never padded per step, so it must be tileable at init).
+
+    ``dims`` maps dimension names to (size, multiple); pass the pool's
+    ``page_size`` with multiple=None to check it against the dtype's
+    sublane count, and lane dims (head_dim / pool width) with multiple=128.
+    Raises naming the offending kernel and dimension.
+    """
+    sublane = _SUBLANE.get(jnp.dtype(dtype), 8)
+    bad = []
+    for name, (size, mult) in dims.items():
+        mult = sublane if mult is None else mult
+        if size % mult:
+            bad.append(f"{name}={size} must be a multiple of {mult}")
+    if bad:
+        raise ValueError(
+            f"{kernel}: paged cache layout is not TPU-tileable for "
+            f"{jnp.dtype(dtype).name} pools: " + "; ".join(bad) + ". "
+            "Pick aligned shapes at init_cache time — the pool is "
+            "deliberately never padded per step.")
+
+
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     size = x.shape[axis]
     pad = (-size) % mult
@@ -156,18 +187,54 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     on_tpu = _on_tpu()
     if on_tpu:
-        sublane = 16 if k_pages.dtype == jnp.bfloat16 else 8
-        if ps % sublane or d % 128:
-            raise ValueError(
-                f"paged cache layout (page_size={ps}, head_dim={d}, "
-                f"{k_pages.dtype}) is not TPU-tileable: page_size must be a "
-                f"multiple of {sublane} and head_dim a multiple of 128. "
-                "Pick an aligned page_size/head_dim at init_cache time — the "
-                "pool is deliberately never padded per step.")
+        _check_tileable("paged_decode_attention", k_pages.dtype,
+                        page_size=(ps, None), head_dim=(d, 128))
     return _pdec.paged_decode_attention(
         q, k_pages, v_pages, block_tables.astype(jnp.int32),
         pos.astype(jnp.int32), k_new.astype(k_pages.dtype),
         v_new.astype(v_pages.dtype), scale=scale, window=window,
+        interpret=not on_tpu)
+
+
+def _quant_qmax(dtype) -> float:
+    """Symmetric-quant max magnitude for a quantized pool dtype."""
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        return 127.0
+    if _FP8 is not None and jnp.dtype(dtype) == jnp.dtype(_FP8):
+        return 448.0            # e4m3 finite max
+    raise ValueError(f"not a quantized pool dtype: {jnp.dtype(dtype).name}")
+
+
+def paged_decode_attention_quant(q, k_pages, k_scales, v_pages, v_scales,
+                                 block_tables, pos, k_new, v_new, *,
+                                 scale: float | None = None,
+                                 window: int | None = None,
+                                 use_pallas: bool = True):
+    """Quantized-pool fused write-attend decode.
+
+    Same contract as ``paged_decode_attention`` with int8/fp8 pools and
+    per-row f32 scale pools (k/v_scales: [P, Hkv, ps]) riding alongside;
+    k/v_new arrive FLOAT and quantize inside the kernel's fused write.
+    Returns (out, k_pages, v_pages, k_scales, v_scales).
+    """
+    ps = k_pages.shape[2]
+    pos = jnp.minimum(pos, block_tables.shape[1] * ps - 1)
+    if not use_pallas:
+        return ref.paged_decode_attention_quant(
+            q, k_pages, k_scales, v_pages, v_scales, block_tables, pos,
+            k_new, v_new, scale=scale, window=window)
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        _check_tileable("paged_decode_attention_quant", k_pages.dtype,
+                        page_size=(ps, None), head_dim=(d, 128))
+    return _pdec.paged_decode_attention_quant(
+        q, k_pages, k_scales.astype(jnp.float32), v_pages,
+        v_scales.astype(jnp.float32), block_tables.astype(jnp.int32),
+        pos.astype(jnp.int32), k_new.astype(jnp.float32),
+        v_new.astype(jnp.float32), scale=scale,
+        qmax=_quant_qmax(k_pages.dtype), window=window,
         interpret=not on_tpu)
 
 
@@ -201,19 +268,48 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, start, span,
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     on_tpu = _on_tpu()
     if on_tpu:
-        sublane = 16 if k_pages.dtype == jnp.bfloat16 else 8
-        if ps % sublane or d % 128:
-            raise ValueError(
-                f"paged cache layout (page_size={ps}, head_dim={d}, "
-                f"{k_pages.dtype}) is not TPU-tileable: page_size must be a "
-                f"multiple of {sublane} and head_dim a multiple of 128. "
-                "Pick an aligned page_size/head_dim at init_cache time — the "
-                "pool is deliberately never padded per step.")
+        _check_tileable("paged_chunk_attention", k_pages.dtype,
+                        page_size=(ps, None), head_dim=(d, 128))
     return _pchunk.paged_chunk_attention(
         q, k_pages, v_pages, block_tables.astype(jnp.int32),
         start.astype(jnp.int32), span.astype(jnp.int32),
         k_new.astype(k_pages.dtype), v_new.astype(v_pages.dtype),
         scale=scale, window=window, interpret=not on_tpu)
+
+
+def paged_chunk_attention_quant(q, k_pages, k_scales, v_pages, v_scales,
+                                block_tables, start, span, k_new, v_new, *,
+                                scale: float | None = None,
+                                window: int | None = None,
+                                use_pallas: bool = True):
+    """Quantized-pool chunked mixed-step attention.
+
+    Same contract as ``paged_chunk_attention`` with int8/fp8 pools and
+    per-row f32 scale pools; k/v_new arrive FLOAT [B, Hkv, C, D] and
+    quantize inside the kernel's fused multi-slot write.  Returns
+    (out, k_pages, v_pages, k_scales, v_scales).
+    """
+    ps = k_pages.shape[2]
+    maxp = block_tables.shape[1]
+    start = jnp.minimum(start, maxp * ps - 1)
+    span = jnp.clip(span, 0, q.shape[2])
+    if not use_pallas:
+        return ref.paged_chunk_attention_quant(
+            q, k_pages, k_scales, v_pages, v_scales, block_tables, start,
+            span, k_new, v_new, scale=scale, window=window)
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        _check_tileable("paged_chunk_attention_quant", k_pages.dtype,
+                        page_size=(ps, None), head_dim=(d, 128))
+    return _pchunk.paged_chunk_attention_quant(
+        q, k_pages, k_scales.astype(jnp.float32), v_pages,
+        v_scales.astype(jnp.float32), block_tables.astype(jnp.int32),
+        start.astype(jnp.int32), span.astype(jnp.int32),
+        k_new.astype(jnp.float32), v_new.astype(jnp.float32),
+        scale=scale, qmax=_quant_qmax(k_pages.dtype), window=window,
+        interpret=not on_tpu)
 
 
 def paged_mla_chunk(q_abs, q_rope, latent_pages, block_tables, start, span,
@@ -241,19 +337,52 @@ def paged_mla_chunk(q_abs, q_rope, latent_pages, block_tables, start, span,
                                    r=r, scale=scale)
     on_tpu = _on_tpu()
     if on_tpu:
-        sublane = 16 if latent_pages.dtype == jnp.bfloat16 else 8
-        if ps % sublane or dp % 128:
-            raise ValueError(
-                f"paged MLA layout (page_size={ps}, width={dp}, "
-                f"{latent_pages.dtype}) is not TPU-tileable: page_size must "
-                f"be a multiple of {sublane} and the pool width a multiple "
-                f"of 128 (init_cache pads it — was this pool built by hand?)")
+        _check_tileable("paged_mla_chunk", latent_pages.dtype,
+                        page_size=(ps, None), latent_width=(dp, 128))
     qc = jnp.concatenate([q_abs.astype(jnp.float32),
                           q_rope.astype(jnp.float32)], axis=-1)
     return _pchunk.paged_mla_chunk(
         qc, latent_pages, block_tables.astype(jnp.int32),
         start.astype(jnp.int32), span.astype(jnp.int32),
         latent_new.astype(latent_pages.dtype), r=r, scale=scale,
+        interpret=not on_tpu)
+
+
+def paged_mla_chunk_quant(q_abs, q_rope, latent_pages, latent_scales,
+                          block_tables, start, span, latent_new, *,
+                          scale: float, use_pallas: bool = True):
+    """Quantized-pool chunked MLA decode.
+
+    Same contract as ``paged_mla_chunk`` with an int8/fp8 latent pool and
+    a per-row f32 scale pool (latent_scales: [P, ps]); latent_new arrives
+    FLOAT [B, C, Dp] and quantizes inside the kernel's fused write.
+    Returns (ctx, latent_pages, latent_scales).
+    """
+    r = q_abs.shape[-1]
+    rd = q_rope.shape[-1]
+    ps = latent_pages.shape[1]
+    dp = latent_pages.shape[2]
+    maxp = block_tables.shape[1]
+    if dp < r + rd:
+        raise ValueError(f"latent pool width {dp} < kv_lora_rank + rope_dim "
+                         f"= {r + rd}")
+    start = jnp.minimum(start, maxp * ps - 1)
+    span = jnp.clip(span, 0, q_abs.shape[2])
+    if not use_pallas:
+        return ref.paged_mla_chunk_quant(
+            q_abs, q_rope, latent_pages, latent_scales, block_tables,
+            start, span, latent_new, r=r, scale=scale)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        _check_tileable("paged_mla_chunk_quant", latent_pages.dtype,
+                        page_size=(ps, None), latent_width=(dp, 128))
+    qc = jnp.concatenate([q_abs.astype(jnp.float32),
+                          q_rope.astype(jnp.float32)], axis=-1)
+    return _pchunk.paged_mla_chunk_quant(
+        qc, latent_pages, latent_scales.astype(jnp.float32),
+        block_tables.astype(jnp.int32), start.astype(jnp.int32),
+        span.astype(jnp.int32), latent_new.astype(jnp.float32),
+        r=r, scale=scale, qmax=_quant_qmax(latent_pages.dtype),
         interpret=not on_tpu)
 
 
@@ -289,19 +418,49 @@ def paged_mla_decode(q_abs, q_rope, latent_pages, block_tables, pos,
                                     r=r, scale=scale)
     on_tpu = _on_tpu()
     if on_tpu:
-        sublane = 16 if latent_pages.dtype == jnp.bfloat16 else 8
-        if ps % sublane or dp % 128:
-            raise ValueError(
-                f"paged MLA layout (page_size={ps}, width={dp}, "
-                f"{latent_pages.dtype}) is not TPU-tileable: page_size must "
-                f"be a multiple of {sublane} and the pool width a multiple "
-                f"of 128 (init_cache pads it — was this pool built by hand?)")
+        _check_tileable("paged_mla_decode", latent_pages.dtype,
+                        page_size=(ps, None), latent_width=(dp, 128))
     qc = jnp.concatenate([q_abs.astype(jnp.float32),
                           q_rope.astype(jnp.float32)], axis=-1)
     return _pmla.paged_mla_decode(
         qc, latent_pages, block_tables.astype(jnp.int32),
         pos.astype(jnp.int32), latent_new.astype(latent_pages.dtype),
         r=r, scale=scale, interpret=not on_tpu)
+
+
+def paged_mla_decode_quant(q_abs, q_rope, latent_pages, latent_scales,
+                           block_tables, pos, latent_new, *,
+                           scale: float, use_pallas: bool = True):
+    """Quantized-pool fused write-attend MLA decode.
+
+    Same contract as ``paged_mla_decode`` with an int8/fp8 latent pool and
+    a per-row f32 scale pool (latent_scales: [P, ps]); latent_new arrives
+    FLOAT [B, Dp] and quantizes inside the kernel's fused write.  Returns
+    (ctx, latent_pages, latent_scales).
+    """
+    r = q_abs.shape[-1]
+    rd = q_rope.shape[-1]
+    ps = latent_pages.shape[1]
+    dp = latent_pages.shape[2]
+    if dp < r + rd:
+        raise ValueError(f"latent pool width {dp} < kv_lora_rank + rope_dim "
+                         f"= {r + rd}")
+    pos = jnp.minimum(pos, block_tables.shape[1] * ps - 1)
+    if not use_pallas:
+        return ref.paged_mla_decode_quant(
+            q_abs, q_rope, latent_pages, latent_scales, block_tables, pos,
+            latent_new, r=r, scale=scale)
+    on_tpu = _on_tpu()
+    if on_tpu:
+        _check_tileable("paged_mla_decode_quant", latent_pages.dtype,
+                        page_size=(ps, None), latent_width=(dp, 128))
+    qc = jnp.concatenate([q_abs.astype(jnp.float32),
+                          q_rope.astype(jnp.float32)], axis=-1)
+    return _pmla.paged_mla_decode_quant(
+        qc, latent_pages, latent_scales.astype(jnp.float32),
+        block_tables.astype(jnp.int32), pos.astype(jnp.int32),
+        latent_new.astype(jnp.float32), r=r, scale=scale,
+        qmax=_quant_qmax(latent_pages.dtype), interpret=not on_tpu)
 
 
 def linear_scan(a, b, h0, *, block_t: int = 128, use_pallas: bool = True):

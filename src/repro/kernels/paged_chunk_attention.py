@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.paged_decode_attention import _quantize_rows
+
 NEG_INF = -1e30
 
 
@@ -205,6 +207,202 @@ def paged_chunk_attention(q: jax.Array, k_pages: jax.Array,
     )(block_tables, start, span, q, k_new, v_new, k_pages, v_pages)
 
 
+def _mha_kernel_quant(bt_ref, start_ref, span_ref, q_ref, kn_ref, vn_ref,
+                      kp_in, vp_in, ks_in, vs_in, o_ref, kp, vp, ks, vs,
+                      kbuf, vbuf, ksbuf, vsbuf, tokk, tokv, tokks, tokvs,
+                      ksem, vsem, kssem, vssem, wksem, wvsem, wkssem, wvssem,
+                      *, ps: int, c: int, scale: float, window: int | None,
+                      qmax: float, qdtype):
+    """Quantized twin of ``_mha_kernel``: the span's K/V rows quantize
+    in-kernel (one scale per token per KV head), values and scales land in
+    the same fused multi-slot write phase, and the walk dequantizes each
+    page with its DMA'd scale row."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    start = start_ref[b]
+    span = span_ref[b]
+    kv_len = start + span
+    maxp = bt_ref.shape[1]
+    n_pages = jnp.minimum((jnp.maximum(kv_len, 1) + ps - 1) // ps, maxp)
+
+    # -- fused multi-slot write: quantize span rows, stage values + scales --
+    kq, kscales = _quantize_rows(kn_ref[0, 0].astype(jnp.float32),
+                                 qdtype, qmax)               # [C, D], [C]
+    vq, vscales = _quantize_rows(vn_ref[0, 0].astype(jnp.float32),
+                                 qdtype, qmax)
+    tokk[:, 0, 0, :] = kq
+    tokv[:, 0, 0, :] = vq
+    tokks[:, 0, 0] = kscales
+    tokvs[:, 0, 0] = vscales
+
+    def _copies(j):
+        pos = start + j
+        page_raw = bt_ref[b, jnp.minimum(pos // ps, maxp - 1)]
+        page_w = jnp.maximum(page_raw, 0)
+        slot_w = pos % ps
+        dst = (pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1))
+        return page_raw, pos, (
+            pltpu.make_async_copy(
+                tokk.at[pl.ds(j, 1)], kp.at[dst + (slice(None),)],
+                wksem.at[j]),
+            pltpu.make_async_copy(
+                tokv.at[pl.ds(j, 1)], vp.at[dst + (slice(None),)],
+                wvsem.at[j]),
+            pltpu.make_async_copy(
+                tokks.at[pl.ds(j, 1)], ks.at[dst], wkssem.at[j]),
+            pltpu.make_async_copy(
+                tokvs.at[pl.ds(j, 1)], vs.at[dst], wvssem.at[j]),
+        )
+
+    def _start_write(j, _):
+        page_raw, pos, copies = _copies(j)
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            for cp in copies:
+                cp.start()
+        return 0
+
+    def _wait_write(j, _):
+        page_raw, pos, copies = _copies(j)
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            for cp in copies:
+                cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, c, _start_write, 0)
+    jax.lax.fori_loop(0, c, _wait_write, 0)
+
+    # -- split-K online softmax, dequant fused into the walk ----------------
+    def page_dma(pool, buf, sem, i, slot):
+        pg = jnp.maximum(bt_ref[b, i], 0)
+        return pltpu.make_async_copy(
+            pool.at[pl.ds(pg, 1), pl.ds(h, 1)], buf.at[pl.ds(slot, 1)],
+            sem.at[slot])
+
+    page_dma(kp, kbuf, ksem, 0, 0).start()
+    page_dma(vp, vbuf, vsem, 0, 0).start()
+    page_dma(ks, ksbuf, kssem, 0, 0).start()
+    page_dma(vs, vsbuf, vssem, 0, 0).start()
+
+    q = q_ref[0].astype(jnp.float32)                   # [group, C, D]
+    group, _, d = q.shape
+    qf = q.reshape(group * c, d)
+    qpos = start + jax.lax.broadcasted_iota(jnp.int32, (group * c, ps), 0) % c
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < n_pages)
+        def _prefetch():
+            page_dma(kp, kbuf, ksem, i + 1, nxt).start()
+            page_dma(vp, vbuf, vsem, i + 1, nxt).start()
+            page_dma(ks, ksbuf, kssem, i + 1, nxt).start()
+            page_dma(vs, vsbuf, vssem, i + 1, nxt).start()
+
+        page_dma(kp, kbuf, ksem, i, slot).wait()
+        page_dma(vp, vbuf, vsem, i, slot).wait()
+        page_dma(ks, ksbuf, kssem, i, slot).wait()
+        page_dma(vs, vsbuf, vssem, i, slot).wait()
+        k = kbuf[slot, 0].astype(jnp.float32) * ksbuf[slot, 0][:, None]
+        v = vbuf[slot, 0].astype(jnp.float32) * vsbuf[slot, 0][:, None]
+        s = jax.lax.dot_general(
+            qf, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [group*C, ps]
+        cols = i * ps + jax.lax.broadcasted_iota(jnp.int32, (group * c, ps), 1)
+        valid = cols <= qpos
+        if window is not None:
+            valid &= cols > qpos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((group * c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group * c,), jnp.float32)
+    a0 = jnp.zeros((group * c, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.reshape(group, c, d).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "qmax", "interpret"))
+def paged_chunk_attention_quant(q: jax.Array, k_pages: jax.Array,
+                                k_scales: jax.Array, v_pages: jax.Array,
+                                v_scales: jax.Array,
+                                block_tables: jax.Array, start: jax.Array,
+                                span: jax.Array, k_new: jax.Array,
+                                v_new: jax.Array, *, scale: float,
+                                qmax: float, window: int | None = None,
+                                interpret: bool = False):
+    """Quantized-pool chunked attention: k/v_pages [P, Hkv, ps, D] int8/fp8
+    with k/v_scales [P, Hkv, ps] f32; k/v_new arrive FLOAT [B, Hkv, C, D]
+    and quantize in-kernel.  Returns (out, k_pages, v_pages, k_scales,
+    v_scales) — pools + scales updated in place via aliasing."""
+    b, hq, c, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    group = hq // hkv
+    grid = (b, hkv)
+
+    q_spec = pl.BlockSpec((1, group, c, d), lambda i, j, *_: (i, j, 0, 0))
+    tok_spec = pl.BlockSpec((1, 1, c, d), lambda i, j, *_: (i, j, 0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # block_tables, start, span
+        grid=grid,
+        in_specs=[q_spec, tok_spec, tok_spec,
+                  any_spec, any_spec, any_spec, any_spec],
+        out_specs=[q_spec, any_spec, any_spec, any_spec, any_spec],
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, ps, d), k_pages.dtype),   # quantized pages
+            pltpu.VMEM((2, 1, ps, d), v_pages.dtype),
+            pltpu.VMEM((2, 1, ps), jnp.float32),        # page scale rows
+            pltpu.VMEM((2, 1, ps), jnp.float32),
+            pltpu.VMEM((c, 1, 1, d), k_pages.dtype),    # staged span writes
+            pltpu.VMEM((c, 1, 1, d), v_pages.dtype),
+            pltpu.VMEM((c, 1, 1), jnp.float32),         # staged span scales
+            pltpu.VMEM((c, 1, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((c,)),
+            pltpu.SemaphoreType.DMA((c,)),
+            pltpu.SemaphoreType.DMA((c,)),
+            pltpu.SemaphoreType.DMA((c,)),
+        ],
+    )
+    kernel = functools.partial(_mha_kernel_quant, ps=ps, c=c, scale=scale,
+                               window=window, qmax=qmax,
+                               qdtype=k_pages.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+            jax.ShapeDtypeStruct(k_scales.shape, k_scales.dtype),
+            jax.ShapeDtypeStruct(v_scales.shape, v_scales.dtype),
+        ],
+        # Input indices count the scalar-prefetch operands (0, 1, 2).
+        input_output_aliases={6: 1, 7: 2, 8: 3, 9: 4},
+        interpret=interpret,
+    )(block_tables, start, span, q, k_new, v_new,
+      k_pages, v_pages, k_scales, v_scales)
+
+
 def _mla_kernel(bt_ref, start_ref, span_ref, q_ref, ln_ref, lp_in,
                 o_ref, lp, buf, tok, dsem, wsem, *, ps: int, c: int,
                 r: int, width: int, scale: float):
@@ -341,3 +539,169 @@ def paged_mla_chunk(q: jax.Array, latent_pages: jax.Array,
         input_output_aliases={5: 1},
         interpret=interpret,
     )(block_tables, start, span, q, latent_new, latent_pages)
+
+
+def _mla_kernel_quant(bt_ref, start_ref, span_ref, q_ref, ln_ref, lp_in,
+                      ls_in, o_ref, lp, ls, buf, sbuf, tok, toks,
+                      dsem, ssem, wsem, wssem, *, ps: int, c: int,
+                      r: int, width: int, scale: float, qmax: float, qdtype):
+    """Quantized twin of ``_mla_kernel``: span latent rows quantize
+    in-kernel (one scale per token), write fused with their scales, and the
+    walk dequantizes each page with its DMA'd scale row."""
+    b = pl.program_id(0)
+    start = start_ref[b]
+    span = span_ref[b]
+    kv_len = start + span
+    maxp = bt_ref.shape[1]
+    n_pages = jnp.minimum((jnp.maximum(kv_len, 1) + ps - 1) // ps, maxp)
+
+    # -- fused multi-slot write: quantize span rows, stage values + scales --
+    lq, lscales = _quantize_rows(ln_ref[0].astype(jnp.float32),
+                                 qdtype, qmax)               # [C, Dp], [C]
+    tok[:, 0, :] = lq
+    toks[:, 0] = lscales
+
+    def _copies(j):
+        pos = start + j
+        page_raw = bt_ref[b, jnp.minimum(pos // ps, maxp - 1)]
+        page_w = jnp.maximum(page_raw, 0)
+        slot_w = pos % ps
+        return page_raw, pos, (
+            pltpu.make_async_copy(
+                tok.at[pl.ds(j, 1)],
+                lp.at[pl.ds(page_w, 1), pl.ds(slot_w, 1), :],
+                wsem.at[j]),
+            pltpu.make_async_copy(
+                toks.at[pl.ds(j, 1)],
+                ls.at[pl.ds(page_w, 1), pl.ds(slot_w, 1)],
+                wssem.at[j]),
+        )
+
+    def _start_write(j, _):
+        page_raw, pos, copies = _copies(j)
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            for cp in copies:
+                cp.start()
+        return 0
+
+    def _wait_write(j, _):
+        page_raw, pos, copies = _copies(j)
+
+        @pl.when((j < span) & (page_raw >= 0) & (pos < maxp * ps))
+        def _():
+            for cp in copies:
+                cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, c, _start_write, 0)
+    jax.lax.fori_loop(0, c, _wait_write, 0)
+
+    # -- split-K online softmax, dequant fused into the walk ----------------
+    def page_dma(i, slot):
+        pg = jnp.maximum(bt_ref[b, i], 0)
+        return pltpu.make_async_copy(
+            lp.at[pl.ds(pg, 1)], buf.at[pl.ds(slot, 1)], dsem.at[slot])
+
+    def scale_dma(i, slot):
+        pg = jnp.maximum(bt_ref[b, i], 0)
+        return pltpu.make_async_copy(
+            ls.at[pl.ds(pg, 1)], sbuf.at[pl.ds(slot, 1)], ssem.at[slot])
+
+    page_dma(0, 0).start()
+    scale_dma(0, 0).start()
+
+    q = q_ref[0].astype(jnp.float32)                   # [H, C, width]
+    h = q.shape[0]
+    qf = q.reshape(h * c, width)
+    qpos = start + jax.lax.broadcasted_iota(jnp.int32, (h * c, ps), 0) % c
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < n_pages)
+        def _prefetch():
+            page_dma(i + 1, nxt).start()
+            scale_dma(i + 1, nxt).start()
+
+        page_dma(i, slot).wait()
+        scale_dma(i, slot).wait()
+        lat = buf[slot].astype(jnp.float32) * sbuf[slot][:, None]
+        s = jax.lax.dot_general(
+            qf, lat[:, :width], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [H*C, ps]
+        cols = i * ps + jax.lax.broadcasted_iota(jnp.int32, (h * c, ps), 1)
+        s = jnp.where(cols <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, lat[:, :r], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [H*C, r]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((h * c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((h * c,), jnp.float32)
+    a0 = jnp.zeros((h * c, r), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.reshape(h, c, r).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r", "scale", "qmax", "interpret"))
+def paged_mla_chunk_quant(q: jax.Array, latent_pages: jax.Array,
+                          latent_scales: jax.Array,
+                          block_tables: jax.Array, start: jax.Array,
+                          span: jax.Array, latent_new: jax.Array, *,
+                          r: int, scale: float, qmax: float,
+                          interpret: bool = False):
+    """Quantized-pool chunked MLA: latent_pages [P, ps, Dp] int8/fp8 with
+    latent_scales [P, ps] f32; latent_new arrives FLOAT [B, C, Dp] and
+    quantizes in-kernel.  Returns (ctx [B, H, C, r] f32, latent_pages,
+    latent_scales) — pool + scales updated in place via aliasing."""
+    b, h, c, width = q.shape
+    _, ps, dp = latent_pages.shape
+    grid = (b,)
+
+    q_spec = pl.BlockSpec((1, h, c, width), lambda i, *_: (i, 0, 0, 0))
+    tok_spec = pl.BlockSpec((1, c, dp), lambda i, *_: (i, 0, 0))
+    out_spec = pl.BlockSpec((1, h, c, r), lambda i, *_: (i, 0, 0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # block_tables, start, span
+        grid=grid,
+        in_specs=[q_spec, tok_spec, any_spec, any_spec],
+        out_specs=[out_spec, any_spec, any_spec],
+        scratch_shapes=[
+            pltpu.VMEM((2, ps, dp), latent_pages.dtype),     # double buffer
+            pltpu.VMEM((2, ps), jnp.float32),                # page scales
+            pltpu.VMEM((c, 1, dp), latent_pages.dtype),      # staged writes
+            pltpu.VMEM((c, 1), jnp.float32),                 # staged scales
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((c,)),
+            pltpu.SemaphoreType.DMA((c,)),
+        ],
+    )
+    kernel = functools.partial(_mla_kernel_quant, ps=ps, c=c, r=r,
+                               width=width, scale=scale, qmax=qmax,
+                               qdtype=latent_pages.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, c, r), jnp.float32),
+            jax.ShapeDtypeStruct(latent_pages.shape, latent_pages.dtype),
+            jax.ShapeDtypeStruct(latent_scales.shape, latent_scales.dtype),
+        ],
+        # Input indices count the scalar-prefetch operands (0, 1, 2).
+        input_output_aliases={5: 1, 6: 2},
+        interpret=interpret,
+    )(block_tables, start, span, q, latent_new,
+      latent_pages, latent_scales)

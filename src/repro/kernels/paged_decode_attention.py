@@ -29,10 +29,28 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def _quantize_rows(x, qdtype, qmax):
+    """Per-row symmetric quantization — the in-kernel twin of
+    ``kernels.ref.quantize_rows`` (identical ops, so the pool bytes the
+    kernel writes match the oracle's bit for bit)."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    # Multiply by the reciprocal EXPLICITLY: XLA rewrites division by a
+    # constant into it anyway, but only in some compilation paths — an
+    # explicit multiply keeps kernel and oracle scales bit-identical.
+    scale = jnp.where(amax > 0, amax * np.float32(1.0 / qmax), 1.0)
+    scaled = x / scale[..., None]
+    if qdtype == jnp.int8:
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = scaled.astype(qdtype)
+    return q, scale.astype(jnp.float32)
 
 
 def _kernel(bt_ref, pos_ref, q_ref, kn_ref, vn_ref, kp_in, vp_in,
@@ -170,3 +188,182 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         input_output_aliases={5: 1, 6: 2},
         interpret=interpret,
     )(block_tables, pos, q, k_new, v_new, k_pages, v_pages)
+
+
+def _kernel_quant(bt_ref, pos_ref, q_ref, kn_ref, vn_ref, kp_in, vp_in,
+                  ks_in, vs_in, o_ref, kp, vp, ks, vs,
+                  kbuf, vbuf, ksbuf, vsbuf, tokk, tokv, tokks, tokvs,
+                  ksem, vsem, kssem, vssem, wsem,
+                  *, ps: int, scale: float, window: int | None,
+                  qmax: float, qdtype):
+    """Quantized twin of ``_kernel``: pools hold int8/fp8 rows + a per-row
+    f32 scale pool riding alongside.  The current token is quantized
+    in-kernel and its value row AND scale land in the same fused write
+    phase; the page walk DMAs the scale block with its page and dequant is
+    a single multiply after the VMEM load — the HBM bytes/step are the
+    quantized page plus ps floats of scale."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    pos = pos_ref[b]
+    kv_len = pos + 1
+    n_pages = (kv_len + ps - 1) // ps
+
+    # -- fused write: quantize the token, stage value row + scale -----------
+    page_raw = bt_ref[b, pos // ps]
+    page_w = jnp.maximum(page_raw, 0)
+    slot_w = pos % ps
+    kq, kscale = _quantize_rows(kn_ref[0, 0].astype(jnp.float32),
+                                qdtype, qmax)
+    vq, vscale = _quantize_rows(vn_ref[0, 0].astype(jnp.float32),
+                                qdtype, qmax)
+    tokk[0, 0, 0, :] = kq
+    tokv[0, 0, 0, :] = vq
+    tokks[0, 0, 0] = kscale
+    tokvs[0, 0, 0] = vscale
+
+    @pl.when(page_raw >= 0)
+    def _write():
+        copies = (
+            pltpu.make_async_copy(
+                tokk,
+                kp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+                wsem.at[0]),
+            pltpu.make_async_copy(
+                tokv,
+                vp.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1), :],
+                wsem.at[1]),
+            pltpu.make_async_copy(
+                tokks,
+                ks.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1)],
+                wsem.at[2]),
+            pltpu.make_async_copy(
+                tokvs,
+                vs.at[pl.ds(page_w, 1), pl.ds(h, 1), pl.ds(slot_w, 1)],
+                wsem.at[3]),
+        )
+        for cp in copies:
+            cp.start()
+        for cp in copies:
+            cp.wait()
+
+    # -- split-K online softmax, dequant fused into the walk ----------------
+    def page_dma(pool, buf, sem, i, slot):
+        pg = jnp.maximum(bt_ref[b, i], 0)
+        return pltpu.make_async_copy(
+            pool.at[pl.ds(pg, 1), pl.ds(h, 1)], buf.at[pl.ds(slot, 1)],
+            sem.at[slot])
+
+    page_dma(kp, kbuf, ksem, 0, 0).start()
+    page_dma(vp, vbuf, vsem, 0, 0).start()
+    page_dma(ks, ksbuf, kssem, 0, 0).start()
+    page_dma(vs, vsbuf, vssem, 0, 0).start()
+
+    q = q_ref[0].astype(jnp.float32)                       # [group, D]
+    group, d = q.shape
+
+    def body(i, carry):
+        m, l, acc = carry
+        slot = jax.lax.rem(i, 2)
+        nxt = jax.lax.rem(i + 1, 2)
+
+        @pl.when(i + 1 < n_pages)
+        def _prefetch():
+            page_dma(kp, kbuf, ksem, i + 1, nxt).start()
+            page_dma(vp, vbuf, vsem, i + 1, nxt).start()
+            page_dma(ks, ksbuf, kssem, i + 1, nxt).start()
+            page_dma(vs, vsbuf, vssem, i + 1, nxt).start()
+
+        page_dma(kp, kbuf, ksem, i, slot).wait()
+        page_dma(vp, vbuf, vsem, i, slot).wait()
+        page_dma(ks, ksbuf, kssem, i, slot).wait()
+        page_dma(vs, vsbuf, vssem, i, slot).wait()
+        k = kbuf[slot, 0].astype(jnp.float32) * ksbuf[slot, 0][:, None]
+        v = vbuf[slot, 0].astype(jnp.float32) * vsbuf[slot, 0][:, None]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [group, ps]
+        cols = i * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        valid = cols < kv_len
+        if window is not None:
+            valid &= cols > pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((group,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group,), jnp.float32)
+    a0 = jnp.zeros((group, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "qmax", "interpret"))
+def paged_decode_attention_quant(q: jax.Array, k_pages: jax.Array,
+                                 k_scales: jax.Array, v_pages: jax.Array,
+                                 v_scales: jax.Array,
+                                 block_tables: jax.Array, pos: jax.Array,
+                                 k_new: jax.Array, v_new: jax.Array, *,
+                                 scale: float, qmax: float,
+                                 window: int | None = None,
+                                 interpret: bool = False):
+    """Quantized-pool decode: k/v_pages [P, Hkv, ps, D] int8/fp8 with
+    k/v_scales [P, Hkv, ps] f32; k/v_new arrive FLOAT and are quantized
+    in-kernel.  Returns (out, k_pages, v_pages, k_scales, v_scales) with
+    pools + scales updated in place via aliasing."""
+    b, hq, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    group = hq // hkv
+    grid = (b, hkv)
+    qdtype = k_pages.dtype
+
+    q_spec = pl.BlockSpec((1, group, d), lambda i, j, *_: (i, j, 0))
+    tok_spec = pl.BlockSpec((1, 1, d), lambda i, j, *_: (i, j, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block_tables, pos
+        grid=grid,
+        in_specs=[q_spec, tok_spec, tok_spec,
+                  any_spec, any_spec, any_spec, any_spec],
+        out_specs=[q_spec, any_spec, any_spec, any_spec, any_spec],
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, ps, d), k_pages.dtype),   # quantized pages
+            pltpu.VMEM((2, 1, ps, d), v_pages.dtype),
+            pltpu.VMEM((2, 1, ps), jnp.float32),        # page scale rows
+            pltpu.VMEM((2, 1, ps), jnp.float32),
+            pltpu.VMEM((1, 1, 1, d), k_pages.dtype),    # staged token write
+            pltpu.VMEM((1, 1, 1, d), v_pages.dtype),
+            pltpu.VMEM((1, 1, 1), jnp.float32),         # staged token scale
+            pltpu.VMEM((1, 1, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((4,)),
+        ],
+    )
+    kernel = functools.partial(_kernel_quant, ps=ps, scale=scale,
+                               window=window, qmax=qmax, qdtype=qdtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+            jax.ShapeDtypeStruct(k_scales.shape, k_scales.dtype),
+            jax.ShapeDtypeStruct(v_scales.shape, v_scales.dtype),
+        ],
+        # Input indices count the scalar-prefetch operands (0, 1).
+        input_output_aliases={5: 1, 6: 2, 7: 3, 8: 4},
+        interpret=interpret,
+    )(block_tables, pos, q, k_new, v_new,
+      k_pages, v_pages, k_scales, v_scales)

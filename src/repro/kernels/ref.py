@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +51,62 @@ def delta_apply(key: jax.Array, payload: jax.Array, d_idx: jax.Array,
     out_payload = payload.at[tgt].set(d_payload.astype(payload.dtype),
                                       mode="drop")
     return out_key, out_payload
+
+
+# ---------------------------------------------------------------------------
+# Per-page-row KV quantization (the quantized-pool contract)
+# ---------------------------------------------------------------------------
+#
+# Quantized page pools store one scale per pool row within each page (MHA:
+# per (page, head, slot); MLA latent: per (page, slot)), symmetric over the
+# feature axis.  Writing a row quantizes it against its own abs-max; the
+# kernels dequantize inside the block-table walk by multiplying each page's
+# rows by its scale block.  Guarantees the property suite pins down:
+#
+#   * the scale is never zero (an all-zero row takes scale 1.0);
+#   * int8 round-to-nearest keeps the worst-case abs error <= scale / 2;
+#   * dequantize(quantize(x)) is deterministic, so snapshot/restore of the
+#     (values, scales) pair is bitwise.
+
+INT8_QMAX = 127.0
+FP8_QMAX = 448.0                    # e4m3 finite max
+_FP8 = getattr(jnp, "float8_e4m3fn", None)
+
+
+def quant_qmax(dtype) -> float:
+    """Symmetric representable max the row scale maps abs-max onto."""
+    if dtype == jnp.int8:
+        return INT8_QMAX
+    if _FP8 is not None and dtype == _FP8:
+        return FP8_QMAX
+    raise ValueError(f"unsupported quantized pool dtype {dtype}")
+
+
+def quantize_rows(x: jax.Array, dtype) -> tuple[jax.Array, jax.Array]:
+    """Quantize rows of ``x`` ([..., D] float) along the last axis.
+
+    Returns ``(q [..., D] dtype, scale [...] f32)`` with
+    ``x ~= q * scale[..., None]``.  Scale = abs-max / qmax (1.0 for all-zero
+    rows, so it is never zero); int8 rounds to nearest.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    qmax = quant_qmax(dtype)
+    # Multiply by the reciprocal EXPLICITLY (not amax / qmax): XLA rewrites
+    # constant division into it in some compilation paths but not others;
+    # the explicit form keeps oracle and Pallas-kernel scales bit-identical.
+    scale = jnp.where(amax > 0, amax * np.float32(1.0 / qmax), 1.0)
+    scaled = xf / scale[..., None]
+    if dtype == jnp.int8:
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = scaled.astype(dtype)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_rows`: ``q [..., D] * scale [...]`` -> f32."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
 
 
 # ---------------------------------------------------------------------------
@@ -312,6 +369,117 @@ def paged_mla_decode(q_abs: jax.Array, q_rope: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Quantized paged attention oracles
+# ---------------------------------------------------------------------------
+#
+# Each quantized oracle is its fp32 oracle with the write quantized and the
+# gather dequantized: the token/span rows are quantized per row
+# (quantize_rows), the int8/fp8 values and their scales land in the pools,
+# and the attend runs the IDENTICAL fp32 math over the dequantized pools.
+# Tolerance vs the fp32 path is therefore exactly the per-row quantization
+# error (<= scale/2 per element for int8), never a different softmax.
+
+def paged_decode_attention_quant(q, k_pages, k_scales, v_pages, v_scales,
+                                 block_tables, pos, k_new, v_new, *,
+                                 scale=None, window=None):
+    """Quantized ``paged_decode_attention``: pools [P, Hkv, ps, D] int8/fp8
+    + scales [P, Hkv, ps]; k/v_new arrive float and are quantized into slot
+    ``pos``.  Returns (out, k_pages, v_pages, k_scales, v_scales)."""
+    ps = k_pages.shape[2]
+    kq, ks = quantize_rows(k_new, k_pages.dtype)         # [B,Hkv,D],[B,Hkv]
+    vq, vs = quantize_rows(v_new, v_pages.dtype)
+    pg_w = jnp.take_along_axis(block_tables, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    pg_w = jnp.where(pg_w < 0, k_pages.shape[0], pg_w)
+    slot_w = pos % ps
+    k_pages = k_pages.at[pg_w, :, slot_w, :].set(kq, mode="drop")
+    v_pages = v_pages.at[pg_w, :, slot_w, :].set(vq, mode="drop")
+    k_scales = k_scales.at[pg_w, :, slot_w].set(ks, mode="drop")
+    v_scales = v_scales.at[pg_w, :, slot_w].set(vs, mode="drop")
+    out, _, _ = paged_decode_attention(
+        q, dequantize_rows(k_pages, k_scales),
+        dequantize_rows(v_pages, v_scales), block_tables, pos,
+        dequantize_rows(kq, ks), dequantize_rows(vq, vs),
+        scale=scale, window=window)
+    return out, k_pages, v_pages, k_scales, v_scales
+
+
+def paged_chunk_attention_quant(q, k_pages, k_scales, v_pages, v_scales,
+                                block_tables, start, span, k_new, v_new, *,
+                                scale=None, window=None):
+    """Quantized ``paged_chunk_attention``: the span's K/V rows quantize per
+    (row, token, head); returns (out, k_pages, v_pages, k_scales,
+    v_scales)."""
+    c = q.shape[2]
+    num_pages, _, ps, _ = k_pages.shape
+    maxp = block_tables.shape[1]
+    kq, ks = quantize_rows(k_new.transpose(0, 2, 1, 3), k_pages.dtype)
+    vq, vs = quantize_rows(v_new.transpose(0, 2, 1, 3), v_pages.dtype)
+    tpos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    pg = jnp.take_along_axis(block_tables,
+                             jnp.clip(tpos // ps, 0, maxp - 1), axis=1)
+    pg = jnp.where(pg < 0, num_pages, pg)
+    pg = jnp.where(tpos < maxp * ps, pg, num_pages)
+    pg = jnp.where(jnp.arange(c)[None, :] < span[:, None], pg, num_pages)
+    slot = tpos % ps
+    k_pages = k_pages.at[pg, :, slot, :].set(kq, mode="drop")
+    v_pages = v_pages.at[pg, :, slot, :].set(vq, mode="drop")
+    k_scales = k_scales.at[pg, :, slot].set(ks, mode="drop")
+    v_scales = v_scales.at[pg, :, slot].set(vs, mode="drop")
+    out, _, _ = paged_chunk_attention(
+        q, dequantize_rows(k_pages, k_scales),
+        dequantize_rows(v_pages, v_scales), block_tables, start, span,
+        dequantize_rows(kq, ks).transpose(0, 2, 1, 3),
+        dequantize_rows(vq, vs).transpose(0, 2, 1, 3),
+        scale=scale, window=window)
+    return out, k_pages, v_pages, k_scales, v_scales
+
+
+def paged_mla_chunk_quant(q_abs, q_rope, latent_pages, latent_scales,
+                          block_tables, start, span, latent_new, *,
+                          r: int, scale: float):
+    """Quantized ``paged_mla_chunk``: latent pool [P, ps, Dp] int8/fp8 +
+    scales [P, ps]; returns (ctx, latent_pages, latent_scales)."""
+    c = latent_new.shape[1]
+    num_pages, ps, _ = latent_pages.shape
+    maxp = block_tables.shape[1]
+    lq, ls = quantize_rows(latent_new, latent_pages.dtype)   # [B,C,Dp],[B,C]
+    tpos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    pg = jnp.take_along_axis(block_tables,
+                             jnp.clip(tpos // ps, 0, maxp - 1), axis=1)
+    pg = jnp.where(pg < 0, num_pages, pg)
+    pg = jnp.where(tpos < maxp * ps, pg, num_pages)
+    pg = jnp.where(jnp.arange(c)[None, :] < span[:, None], pg, num_pages)
+    slot = tpos % ps
+    latent_pages = latent_pages.at[pg, slot, :].set(lq, mode="drop")
+    latent_scales = latent_scales.at[pg, slot].set(ls, mode="drop")
+    ctx, _ = paged_mla_chunk(
+        q_abs, q_rope, dequantize_rows(latent_pages, latent_scales),
+        block_tables, start, span, dequantize_rows(lq, ls),
+        r=r, scale=scale)
+    return ctx, latent_pages, latent_scales
+
+
+def paged_mla_decode_quant(q_abs, q_rope, latent_pages, latent_scales,
+                           block_tables, pos, latent_new, *,
+                           r: int, scale: float):
+    """Quantized ``paged_mla_decode``: the token's latent row quantizes into
+    slot ``pos``; returns (ctx, latent_pages, latent_scales)."""
+    ps = latent_pages.shape[1]
+    lq, ls = quantize_rows(latent_new, latent_pages.dtype)   # [B,Dp],[B]
+    pg_w = jnp.take_along_axis(block_tables, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    pg_w = jnp.where(pg_w < 0, latent_pages.shape[0], pg_w)
+    slot_w = pos % ps
+    latent_pages = latent_pages.at[pg_w, slot_w, :].set(lq, mode="drop")
+    latent_scales = latent_scales.at[pg_w, slot_w].set(ls, mode="drop")
+    ctx, _ = paged_mla_decode(
+        q_abs, q_rope, dequantize_rows(latent_pages, latent_scales),
+        block_tables, pos, dequantize_rows(lq, ls), r=r, scale=scale)
+    return ctx, latent_pages, latent_scales
+
+
+# ---------------------------------------------------------------------------
 # Diagonal gated linear recurrence (RG-LRU / generic h_t = a_t h_{t-1} + b_t)
 # ---------------------------------------------------------------------------
 
@@ -377,31 +545,38 @@ def speculative_accept(preds: jax.Array, tokens: jax.Array,
 
 
 def paged_span_gather(pool: jax.Array, block_tables: jax.Array,
-                      start: jax.Array, width: int) -> jax.Array:
+                      start: jax.Array, width: int,
+                      slot_axis: int | None = None) -> jax.Array:
     """Snapshot the pool slots a mixed-step write window covers.
 
     ``out[b, w] = pool[block_tables[b, (start[b]+w) // ps], ...,
     (start[b]+w) % ps, ...]`` — the pre-verify bytes of every slot a span
     write at [start, start+width) could touch.  pool: [P, Hkv, ps, D]
     (MHA K/V, slot axis 2) or [P, ps, Dp] (MLA latent, slot axis 1).
+    Quantized scale leaves drop the trailing feature axis but keep the
+    slot axis: [P, Hkv, ps] (MHA scales, slot axis 2) or [P, ps] (MLA
+    scales, slot axis 1) — pass ``slot_axis`` explicitly for those.
     Positions past the table / unallocated (-1) entries are clamped; their
     lanes hold garbage and are masked out by ``paged_span_restore``.
     """
-    ps = pool.shape[2] if pool.ndim == 4 else pool.shape[1]
+    if slot_axis is None:
+        slot_axis = 2 if pool.ndim == 4 else 1
+    ps = pool.shape[slot_axis]
     maxp = block_tables.shape[-1]
     tpos = start[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
     pg = jnp.take_along_axis(block_tables,
                              jnp.clip(tpos // ps, 0, maxp - 1), axis=1)
     pg = jnp.clip(pg, 0, pool.shape[0] - 1)
     slot = tpos % ps
-    if pool.ndim == 4:
-        return pool[pg, :, slot, :]          # [B, W, Hkv, D]
-    return pool[pg, slot]                    # [B, W, Dp]
+    if slot_axis == 2:
+        return pool[pg, :, slot]             # [B, W, Hkv, (D)]
+    return pool[pg, slot]                    # [B, W, (Dp)]
 
 
 def paged_span_restore(pool: jax.Array, snap: jax.Array,
                        block_tables: jax.Array, start: jax.Array,
-                       lo: jax.Array, hi: jax.Array) -> jax.Array:
+                       lo: jax.Array, hi: jax.Array,
+                       slot_axis: int | None = None) -> jax.Array:
     """Rejected-tail rollback: scatter ``snap`` (from paged_span_gather,
     same ``start``) back for positions in [lo[b], hi[b]).
 
@@ -409,9 +584,12 @@ def paged_span_restore(pool: jax.Array, snap: jax.Array,
     drafted nothing (lo == hi), positions past the table, unallocated
     entries — are routed out of bounds and dropped, so committed slots
     keep the verify step's writes bit-for-bit while the rejected tail
-    reverts to its pre-verify bytes.
+    reverts to its pre-verify bytes.  ``slot_axis`` as in
+    ``paged_span_gather`` (pass explicitly for scale leaves).
     """
-    ps = pool.shape[2] if pool.ndim == 4 else pool.shape[1]
+    if slot_axis is None:
+        slot_axis = 2 if pool.ndim == 4 else 1
+    ps = pool.shape[slot_axis]
     maxp = block_tables.shape[-1]
     width = snap.shape[1]
     tpos = start[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
@@ -423,7 +601,7 @@ def paged_span_restore(pool: jax.Array, snap: jax.Array,
     tgt = jnp.where(keep, jnp.clip(pg, 0, pool.shape[0] - 1),
                     pool.shape[0])
     slot = tpos % ps
-    if pool.ndim == 4:
-        return pool.at[tgt, :, slot, :].set(snap.astype(pool.dtype),
-                                            mode="drop")
+    if slot_axis == 2:
+        return pool.at[tgt, :, slot].set(snap.astype(pool.dtype),
+                                         mode="drop")
     return pool.at[tgt, slot].set(snap.astype(pool.dtype), mode="drop")

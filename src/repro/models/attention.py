@@ -13,11 +13,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.models import cache as cache_mod
 from repro.models import common
 from repro.models.config import ModelConfig
 
 Params = Any
+
+# Every paged-MHA layout this module serves; the _q8/_fp8 variants carry
+# int8/fp8 pools plus per-row f32 scale pools and route to the *_quant
+# kernels (dequant fused into the block-table walk).
+_PAGED_MHA = ("paged_mha", "paged_mha_q8", "paged_mha_fp8")
 
 
 def init(key, cfg: ModelConfig, d_model: int | None = None) -> Params:
@@ -167,7 +173,8 @@ def forward(p: Params, cfg: ModelConfig, x: jax.Array,
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
-               page_size: int = 64, num_pages: int | None = None) -> Params:
+               page_size: int = 64, num_pages: int | None = None,
+               kv_quant: str = "off") -> Params:
     """Dense cache [B, Hkv, S, D], or a paged pool + per-row block tables.
 
     Paged mode: K/V live in a shared pool ``[P, Hkv, page_size, D]`` and each
@@ -184,7 +191,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     """
     return cache_mod.spec_for("attn", cfg, batch, max_len, dtype,
                               paged=paged, page_size=page_size,
-                              num_pages=num_pages).init()
+                              num_pages=num_pages, kv_quant=kv_quant).init()
 
 
 def default_block_tables(batch: int, max_len: int, page_size: int
@@ -221,6 +228,20 @@ def _paged_prefill_write(cache: Params, k: jax.Array, v: jax.Array,
     if lengths is not None:
         pg = jnp.where(tpos[None, :] < lengths[:, None], pg, num_pages)
     slot = jnp.broadcast_to(tpos % ps, (b, t))
+    if "k_scales" in cache:
+        # Quantized pool: per-row scales ride alongside the values, written
+        # through the exact same drop-routing so the pages/scales of
+        # untouched rows stay bit-for-bit.
+        kq, ks = kref.quantize_rows(k.transpose(0, 2, 1, 3),
+                                    cache["k_pages"].dtype)
+        vq, vs = kref.quantize_rows(v.transpose(0, 2, 1, 3),
+                                    cache["v_pages"].dtype)
+        return dict(
+            cache,
+            k_pages=cache["k_pages"].at[pg, :, slot, :].set(kq, mode="drop"),
+            v_pages=cache["v_pages"].at[pg, :, slot, :].set(vq, mode="drop"),
+            k_scales=cache["k_scales"].at[pg, :, slot].set(ks, mode="drop"),
+            v_scales=cache["v_scales"].at[pg, :, slot].set(vs, mode="drop"))
     k_bt = k.transpose(0, 2, 1, 3).astype(cache["k_pages"].dtype)
     v_bt = v.transpose(0, 2, 1, 3).astype(cache["v_pages"].dtype)
     return dict(cache,
@@ -247,7 +268,7 @@ def prefill(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     out = _sdpa(q, k, v, mask, scale, impl, window=cfg.window,
                 chunked=chunked, prefix_len=prefix_len)
     proj = common.dense(p["wo"], _merge_heads(out))
-    if cache_mod.layout_of(cache) == "paged_mha":
+    if cache_mod.layout_of(cache) in _PAGED_MHA:
         return proj, _paged_prefill_write(cache, k, v, lengths)
     t = x.shape[1]
     s = cache["k"].shape[2]
@@ -295,7 +316,18 @@ def mixed_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     b, c, _ = x.shape
     q, k, v = _qkv(p, cfg, x, positions)
     scale = cfg.head_dim ** -0.5
-    if cache_mod.layout_of(cache) == "paged_mha":
+    layout = cache_mod.layout_of(cache)
+    if layout in _PAGED_MHA:
+        if layout != "paged_mha":
+            out, k_pages, v_pages, k_scales, v_scales = (
+                kops.paged_chunk_attention_quant(
+                    q, cache["k_pages"], cache["k_scales"],
+                    cache["v_pages"], cache["v_scales"],
+                    cache["block_tables"], start, span, k, v, scale=scale,
+                    window=cfg.window, use_pallas=(impl == "pallas")))
+            return (common.dense(p["wo"], _merge_heads(out).astype(x.dtype)),
+                    dict(cache, k_pages=k_pages, v_pages=v_pages,
+                         k_scales=k_scales, v_scales=v_scales))
         out, k_pages, v_pages = kops.paged_chunk_attention(
             q, cache["k_pages"], cache["v_pages"], cache["block_tables"],
             start, span, k, v, scale=scale, window=cfg.window,
@@ -342,7 +374,22 @@ def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     """One-token step.  x: [B, 1, D]; pos: i32[B] tokens already cached."""
     b = x.shape[0]
     q, k, v = _qkv(p, cfg, x, pos[:, None])
-    if cache_mod.layout_of(cache) == "paged_mha":
+    layout = cache_mod.layout_of(cache)
+    if layout in _PAGED_MHA and layout != "paged_mha":
+        scale = cfg.head_dim ** -0.5
+        cap = cache["block_tables"].shape[-1] * cache["k_pages"].shape[-2]
+        out, k_pages, v_pages, k_scales, v_scales = (
+            kops.paged_decode_attention_quant(
+                q[:, :, 0], cache["k_pages"], cache["k_scales"],
+                cache["v_pages"], cache["v_scales"], cache["block_tables"],
+                jnp.minimum(pos, cap - 1), k[:, :, 0], v[:, :, 0],
+                scale=scale, window=cfg.window,
+                use_pallas=(impl == "pallas")))
+        out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+        return (common.dense(p["wo"], out),
+                dict(cache, k_pages=k_pages, v_pages=v_pages,
+                     k_scales=k_scales, v_scales=v_scales))
+    if layout == "paged_mha":
         # Paged cache: O(page) write + block-table walk — no one-hot rewrite
         # of [B, Hkv, S, D].  The write is fused into the Pallas kernel; the
         # ref path is the gather oracle (kernels/ref.py).  pos is clamped to

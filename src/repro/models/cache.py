@@ -9,17 +9,25 @@ tables and pools live, how a pool leaf shards) are answered HERE instead of
 by duck-typing dict keys at trace time.
 
 Layouts:
-  dense       [B, Hkv, S, D] K/V (ring when S == window < max_len)
-  paged_mha   shared K/V pools [P, Hkv, ps, D] + block_tables [B, maxp]
-  dense_mla   compressed latent stream [B, S, r] + shared RoPE key [B, S, rd]
-  paged_mla   latent pool [P, ps, pad128(r + rd)] + block_tables [B, maxp]
-  state       recurrent carries (rglru/xLSTM) — opaque, never paged
-  xattn       dense self-KV + once-filled cross-KV
+  dense          [B, Hkv, S, D] K/V (ring when S == window < max_len)
+  paged_mha      shared K/V pools [P, Hkv, ps, D] + block_tables [B, maxp]
+  paged_mha_q8   int8 pools [P, Hkv, ps, D] + f32 scales [P, Hkv, ps]
+  paged_mha_fp8  fp8 (e4m3) pools + the same scale leaves (dtype-gated)
+  dense_mla      compressed latent stream [B, S, r] + RoPE key [B, S, rd]
+  paged_mla      latent pool [P, ps, pad128(r + rd)] + block_tables [B, maxp]
+  paged_mla_q8   int8 latent pool + f32 latent_scales [P, ps]
+  paged_mla_fp8  fp8 latent pool + the same scale leaf (dtype-gated)
+  state          recurrent carries (rglru/xLSTM) — opaque, never paged
+  xattn          dense self-KV + once-filled cross-KV
 
 Leaf roles drive the generic machinery:
   kv      per-row cache body (dense layouts)
   pool    shared page pool — resident memory unit, shards over heads or the
           latent-feature axis, COW page copies operate on dim 0
+  scale   per-page quantization scales riding alongside a quantized pool —
+          page-indexed like the pool (one f32 scale per pool row within
+          each page), copied/snapshotted/restored WITH their pages so COW,
+          speculative rollback and replication stay exact
   table   per-row block table — replicated, host-managed, validated shape
   state   recurrent carry
 
@@ -34,13 +42,28 @@ from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Params = Any
 
 ROLE_KV = "kv"
 ROLE_POOL = "pool"
+ROLE_SCALE = "scale"
 ROLE_TABLE = "table"
 ROLE_STATE = "state"
+
+# fp8 support is gated on the dtype existing in the installed jax; int8 is
+# always available.  Quantization maxima are the symmetric representable
+# ranges the kernels/oracles scale into.
+FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+INT8_QMAX = 127.0
+FP8_QMAX = 448.0                 # e4m3 finite max
+
+KV_QUANT_MODES = ("off", "int8", "fp8")
+
+# pool leaf -> its scale leaf (quantized layouts only)
+SCALE_LEAF = {"k_pages": "k_scales", "v_pages": "v_scales",
+              "latent_pages": "latent_scales"}
 
 
 def pad128(n: int) -> int:
@@ -158,6 +181,55 @@ def _paged_mla(kind, cfg, batch, max_len, dtype, *, page_size=64,
     ), page_size=page_size, num_pages=num_pages, latent_width=width)
 
 
+def _quantized(base: str, layout: str, qdtype, kind, cfg, batch, max_len,
+               dtype, **kw) -> CacheSpec:
+    """Derive a quantized layout from its fp layout: pool leaves store the
+    quantized dtype and each gains an f32 scale leaf of the pool shape minus
+    the feature axis (one scale per pool row within each page).  Scales init
+    to 1.0 — a scale is never zero, even for untouched pages."""
+    spec = _LAYOUTS[base](kind, cfg, batch, max_len, dtype, **kw)
+    leaves: list[Leaf] = []
+    for l in spec.leaves:
+        if l.role != ROLE_POOL:
+            leaves.append(l)
+            continue
+        leaves.append(Leaf(l.name, l.shape, qdtype, ROLE_POOL))
+        leaves.append(Leaf(SCALE_LEAF[l.name], l.shape[:-1], jnp.float32,
+                           ROLE_SCALE, fill=1.0))
+    return CacheSpec(kind, layout, tuple(leaves), page_size=spec.page_size,
+                     num_pages=spec.num_pages, latent_width=spec.latent_width)
+
+
+@register_layout("paged_mha_q8")
+def _paged_mha_q8(kind, cfg, batch, max_len, dtype, **kw) -> CacheSpec:
+    return _quantized("paged_mha", "paged_mha_q8", jnp.int8, kind, cfg,
+                      batch, max_len, dtype, **kw)
+
+
+@register_layout("paged_mla_q8")
+def _paged_mla_q8(kind, cfg, batch, max_len, dtype, **kw) -> CacheSpec:
+    return _quantized("paged_mla", "paged_mla_q8", jnp.int8, kind, cfg,
+                      batch, max_len, dtype, **kw)
+
+
+@register_layout("paged_mha_fp8")
+def _paged_mha_fp8(kind, cfg, batch, max_len, dtype, **kw) -> CacheSpec:
+    if FP8_DTYPE is None:
+        raise ValueError("kv_quant='fp8' needs jnp.float8_e4m3fn, which "
+                         "this jax build lacks — use kv_quant='int8'")
+    return _quantized("paged_mha", "paged_mha_fp8", FP8_DTYPE, kind, cfg,
+                      batch, max_len, dtype, **kw)
+
+
+@register_layout("paged_mla_fp8")
+def _paged_mla_fp8(kind, cfg, batch, max_len, dtype, **kw) -> CacheSpec:
+    if FP8_DTYPE is None:
+        raise ValueError("kv_quant='fp8' needs jnp.float8_e4m3fn, which "
+                         "this jax build lacks — use kv_quant='int8'")
+    return _quantized("paged_mla", "paged_mla_fp8", FP8_DTYPE, kind, cfg,
+                      batch, max_len, dtype, **kw)
+
+
 @register_layout("xattn")
 def _xattn(kind, cfg, batch, max_len, dtype, **_) -> CacheSpec:
     shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
@@ -211,10 +283,25 @@ def layout_for(kind: str, cfg, *, paged: bool) -> str:
     raise ValueError(f"unknown block kind {kind}")
 
 
+def quant_layout(layout: str, kv_quant: str) -> str:
+    """Quantized variant of a paged layout (identity for 'off' / non-paged:
+    dense layouts rewrite whole rows per step, so quantizing them would
+    re-quantize history every token — only page pools quantize)."""
+    if kv_quant in (None, "", "off"):
+        return layout
+    if kv_quant not in KV_QUANT_MODES:
+        raise ValueError(f"unknown kv_quant {kv_quant!r}: pick one of "
+                         f"{KV_QUANT_MODES}")
+    if layout not in ("paged_mha", "paged_mla"):
+        return layout
+    return layout + ("_q8" if kv_quant == "int8" else "_fp8")
+
+
 def spec_for(kind: str, cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
              *, paged: bool = False, page_size: int = 64,
-             num_pages: int | None = None) -> CacheSpec:
-    layout = layout_for(kind, cfg, paged=paged)
+             num_pages: int | None = None,
+             kv_quant: str = "off") -> CacheSpec:
+    layout = quant_layout(layout_for(kind, cfg, paged=paged), kv_quant)
     if kind == "local" and cfg.ring_local_cache and cfg.window:
         max_len = min(max_len, cfg.window)
     return _LAYOUTS[layout](kind, cfg, batch, max_len, dtype,
@@ -223,7 +310,8 @@ def spec_for(kind: str, cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 def model_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
                       *, paged: bool = False, page_size: int = 64,
-                      num_pages: int | None = None) -> dict[str, Any]:
+                      num_pages: int | None = None,
+                      kv_quant: str = "off") -> dict[str, Any]:
     """The full registry for one model: {"groups": {i: spec}, "tail": ...}.
 
     Group specs describe ONE group's leaves; the stacked cache carries a
@@ -231,10 +319,12 @@ def model_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
     """
     specs: dict[str, Any] = {"groups": {
         str(i): spec_for(kind, cfg, batch, max_len, dtype, paged=paged,
-                         page_size=page_size, num_pages=num_pages)
+                         page_size=page_size, num_pages=num_pages,
+                         kv_quant=kv_quant)
         for i, kind in enumerate(cfg.block_pattern)}}
     tail = {str(i): spec_for(kind, cfg, batch, max_len, dtype, paged=paged,
-                             page_size=page_size, num_pages=num_pages)
+                             page_size=page_size, num_pages=num_pages,
+                             kv_quant=kv_quant)
             for i, kind in enumerate(cfg.tail_blocks)}
     if tail:
         specs["tail"] = tail
@@ -255,6 +345,11 @@ _LEAFSETS: dict[frozenset, str] = {
     frozenset({"ckv", "krope"}): "dense_mla",
     frozenset({"latent_pages", "block_tables"}): "paged_mla",
     frozenset({"k", "v", "xk", "xv"}): "xattn",
+    # int8 and fp8 share leaf names; layout_of disambiguates by pool dtype.
+    frozenset({"k_pages", "v_pages", "k_scales", "v_scales",
+               "block_tables"}): "paged_mha_q8",
+    frozenset({"latent_pages", "latent_scales",
+               "block_tables"}): "paged_mla_q8",
 }
 
 
@@ -262,7 +357,13 @@ def layout_of(layer_cache: dict) -> str | None:
     """Layout name of one layer's cache dict (None if not a layer dict)."""
     if not isinstance(layer_cache, dict):
         return None
-    return _LEAFSETS.get(frozenset(layer_cache.keys()))
+    name = _LEAFSETS.get(frozenset(layer_cache.keys()))
+    if name in ("paged_mha_q8", "paged_mla_q8") and FP8_DTYPE is not None:
+        pool = layer_cache["k_pages" if "k_pages" in layer_cache
+                           else "latent_pages"]
+        if pool.dtype == FP8_DTYPE:
+            return name[:-len("_q8")] + "_fp8"
+    return name
 
 
 def iter_layers(cache: Params, path: tuple[str, ...] = ()
@@ -295,12 +396,33 @@ def map_layers(cache: Params, fn, *, layouts: tuple[str, ...] | None = None
     return rec(cache, ())
 
 
-PAGED_LAYOUTS = ("paged_mha", "paged_mla")
+# Per paged layout: every leaf that travels with its pages (pools AND their
+# scale leaves) -> that leaf's unstacked ndim.  The generic page machinery
+# (copy_pages / snapshot_span / restore_span / swap) iterates this, so scales
+# ride along with zero special-casing at the call sites.
+_POOL_LEAF_NDIM: dict[str, dict[str, int]] = {
+    "paged_mha": {"k_pages": 4, "v_pages": 4},
+    "paged_mha_q8": {"k_pages": 4, "v_pages": 4, "k_scales": 3,
+                     "v_scales": 3},
+    "paged_mha_fp8": {"k_pages": 4, "v_pages": 4, "k_scales": 3,
+                      "v_scales": 3},
+    "paged_mla": {"latent_pages": 3},
+    "paged_mla_q8": {"latent_pages": 3, "latent_scales": 2},
+    "paged_mla_fp8": {"latent_pages": 3, "latent_scales": 2},
+}
+
+PAGED_LAYOUTS = tuple(_POOL_LEAF_NDIM)
+QUANT_LAYOUTS = tuple(l for l in PAGED_LAYOUTS if "_q8" in l or "_fp8" in l)
+
+# Slot axis of every pool/scale leaf within one paged layer: MHA-family
+# leaves are [P, Hkv, ps, ...] (slot axis 2), MLA-family [P, ps, ...]
+# (slot axis 1) — scale leaves just drop the trailing feature axis.
+_SPAN_SLOT_AXIS = {l: (2 if l.startswith("paged_mha") else 1)
+                   for l in PAGED_LAYOUTS}
 
 
 def pool_leaves(layer: dict, layout: str) -> list[str]:
-    return (["k_pages", "v_pages"] if layout == "paged_mha"
-            else ["latent_pages"] if layout == "paged_mla" else [])
+    return list(_POOL_LEAF_NDIM.get(layout, {}))
 
 
 # ---------------------------------------------------------------------------
@@ -356,13 +478,11 @@ def copy_pages(cache: Params, src: jax.Array, dst: jax.Array) -> Params:
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
 
-    core_ndim = {"paged_mha": 4, "paged_mla": 3}
-
     def cp(path, layout, layer):
         out = dict(layer)
         for name in pool_leaves(layer, layout):
             pool = layer[name]
-            stacked = pool.ndim == core_ndim[layout] + 1
+            stacked = pool.ndim == _POOL_LEAF_NDIM[layout][name] + 1
             p = pool.shape[1] if stacked else pool.shape[0]
             safe_src = jnp.clip(src, 0, p - 1)
             tgt = jnp.where((src >= 0) & (dst >= 0), dst, p)
@@ -408,16 +528,19 @@ def snapshot_span(cache: Params, start: jax.Array, width: int) -> Params:
         if layout in PAGED_LAYOUTS:
             bt = layer["block_tables"]
             bt2 = bt[0] if bt.ndim == 3 else bt
+            slot_axis = _SPAN_SLOT_AXIS[layout]
             for name in pool_leaves(layer, layout):
                 pool = layer[name]
-                core = 4 if layout == "paged_mha" else 3
+                core = _POOL_LEAF_NDIM[layout][name]
                 if pool.ndim == core + 1:                 # leading [G]
                     out[name] = jax.vmap(
-                        lambda p: kref.paged_span_gather(p, bt2, start,
-                                                         width))(pool)
+                        lambda p: kref.paged_span_gather(
+                            p, bt2, start, width,
+                            slot_axis=slot_axis))(pool)
                 else:
                     out[name] = kref.paged_span_gather(pool, bt2, start,
-                                                       width)
+                                                       width,
+                                                       slot_axis=slot_axis)
             return out
         # dense / dense_mla: sequence axis is -2
         for name, arr in layer.items():
@@ -467,16 +590,19 @@ def restore_span(cache: Params, snap: Params, start: jax.Array,
         if layout in PAGED_LAYOUTS:
             bt = layer["block_tables"]
             bt2 = bt[0] if bt.ndim == 3 else bt
+            slot_axis = _SPAN_SLOT_AXIS[layout]
             for name in pool_leaves(layer, layout):
                 pool = layer[name]
-                core = 4 if layout == "paged_mha" else 3
+                core = _POOL_LEAF_NDIM[layout][name]
                 if pool.ndim == core + 1:
                     out[name] = jax.vmap(
                         lambda p, sn: kref.paged_span_restore(
-                            p, sn, bt2, start, lo, hi))(pool, s[name])
+                            p, sn, bt2, start, lo, hi,
+                            slot_axis=slot_axis))(pool, s[name])
                 else:
                     out[name] = kref.paged_span_restore(
-                        pool, s[name], bt2, start, lo, hi)
+                        pool, s[name], bt2, start, lo, hi,
+                        slot_axis=slot_axis)
             return out
         for name, arr in layer.items():
             core = 4 if layout == "dense" else 3
@@ -514,3 +640,84 @@ def restore_span(cache: Params, snap: Params, start: jax.Array,
         return {k: rec(v, s.get(k)) for k, v in tree.items()}
 
     return rec(cache, snap)
+
+
+# ---------------------------------------------------------------------------
+# Tiered page memory: host-buffer swap pool (copy_pages across tiers)
+# ---------------------------------------------------------------------------
+
+def make_swap_pool(cache: Params, n_slots: int
+                   ) -> dict[tuple[str, ...], dict[str, np.ndarray]]:
+    """Host-memory mirror of every paged layer's pool (and scale) leaves.
+
+    ``{layer_path: {leaf_name: np[..., n_slots, ...]}}`` — each leaf keeps
+    its device shape with the page axis replaced by ``n_slots`` swap slots.
+    Quantized layouts swap their int8/fp8 bytes, so a swapped page costs the
+    same host bytes as its resident form (and swap-in is bit-exact).
+    """
+    pool: dict[tuple[str, ...], dict[str, np.ndarray]] = {}
+    for path, layout, layer in iter_layers(cache):
+        if layout not in PAGED_LAYOUTS:
+            continue
+        leaves = {}
+        for name in pool_leaves(layer, layout):
+            arr = layer[name]
+            stacked = arr.ndim == _POOL_LEAF_NDIM[layout][name] + 1
+            shape = ((arr.shape[0], n_slots) + arr.shape[2:] if stacked
+                     else (n_slots,) + arr.shape[1:])
+            leaves[name] = np.zeros(shape, arr.dtype)
+        pool[path] = leaves
+    return pool
+
+
+def swap_out_pages(cache: Params, swap_pool: dict, pages, slots) -> int:
+    """Copy device pool pages -> host swap slots (``pages[i] -> slots[i]``).
+
+    The cross-tier half of :func:`copy_pages`: same page-axis gather, but the
+    destination is the host swap pool.  Mutates ``swap_pool`` in place and
+    returns the bytes moved (one device→host transfer per leaf).
+    """
+    pages = np.asarray(pages, np.int32)
+    slots = np.asarray(slots, np.int32)
+    moved = 0
+    for path, layout, layer in iter_layers(cache):
+        if layout not in PAGED_LAYOUTS:
+            continue
+        host = swap_pool[path]
+        for name in pool_leaves(layer, layout):
+            arr = layer[name]
+            stacked = arr.ndim == _POOL_LEAF_NDIM[layout][name] + 1
+            rows = np.asarray(arr[:, pages] if stacked else arr[pages])
+            if stacked:
+                host[name][:, slots] = rows
+            else:
+                host[name][slots] = rows
+            moved += rows.nbytes
+    return moved
+
+
+def swap_in_pages(cache: Params, swap_pool: dict, slots, pages) -> Params:
+    """Copy host swap slots -> device pool pages (``slots[i] -> pages[i]``).
+
+    Returns the updated cache tree; the swapped bytes land bit-exactly
+    (values AND scales for quantized layouts), so a swap-in victim resumes
+    decoding from the identical cache it was preempted with.
+    """
+    slots = np.asarray(slots, np.int32)
+    idx = jnp.asarray(np.asarray(pages, np.int32))
+
+    def fn(path, layout, layer):
+        host = swap_pool[path]
+        out = dict(layer)
+        for name in pool_leaves(layer, layout):
+            arr = layer[name]
+            stacked = arr.ndim == _POOL_LEAF_NDIM[layout][name] + 1
+            if stacked:
+                rows = jnp.asarray(host[name][:, slots])
+                out[name] = arr.at[:, idx].set(rows)
+            else:
+                rows = jnp.asarray(host[name][slots])
+                out[name] = arr.at[idx].set(rows)
+        return out
+
+    return map_layers(cache, fn, layouts=PAGED_LAYOUTS)

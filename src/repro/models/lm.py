@@ -270,21 +270,26 @@ def loss_fn(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
 
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16, *, paged: bool = False,
-                page_size: int = 64, num_pages: int | None = None):
+                page_size: int = 64, num_pages: int | None = None,
+                kv_quant: str = "off"):
     """The CacheSpec registry for this model — one spec per layer slot."""
     return cache_mod.model_cache_specs(cfg, batch, max_len, dtype,
                                       paged=paged, page_size=page_size,
-                                      num_pages=num_pages)
+                                      num_pages=num_pages, kv_quant=kv_quant)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
-               page_size: int = 64, num_pages: int | None = None) -> Params:
+               page_size: int = 64, num_pages: int | None = None,
+               kv_quant: str = "off") -> Params:
     """``paged=True`` gives every full-attention layer (MHA pools, MLA
     latent pools) its own page pool + block tables; ``num_pages`` is per
-    layer.  Layouts come from the CacheSpec registry (models/cache.py)."""
+    layer.  Layouts come from the CacheSpec registry (models/cache.py).
+    ``kv_quant`` ("off" | "int8" | "fp8") swaps paged pools for quantized
+    layouts carrying per-row scale leaves."""
     specs = cache_specs(cfg, batch, max_len, dtype, paged=paged,
-                        page_size=page_size, num_pages=num_pages)
+                        page_size=page_size, num_pages=num_pages,
+                        kv_quant=kv_quant)
     groups = {}
     for i, spec in specs["groups"].items():
         one = spec.init()

@@ -17,11 +17,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.models import cache as cache_mod
 from repro.models import common
 from repro.models.config import ModelConfig
 
 Params = Any
+
+# Every paged-MLA layout this module serves; _q8/_fp8 carry an int8/fp8
+# latent pool plus a per-row f32 scale pool and route to the *_quant kernels.
+_PAGED_MLA = ("paged_mla", "paged_mla_q8", "paged_mla_fp8")
 
 
 def init(key, cfg: ModelConfig) -> Params:
@@ -90,7 +95,8 @@ def forward(p: Params, cfg: ModelConfig, x: jax.Array,
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
-               page_size: int = 64, num_pages: int | None = None) -> Params:
+               page_size: int = 64, num_pages: int | None = None,
+               kv_quant: str = "off") -> Params:
     """Dense latent cache [B, S, r] + [B, S, rd], or a paged latent pool.
 
     Paged mode stores concat([ckv; krope]) rows in a shared pool
@@ -100,7 +106,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     """
     kind = "mla"
     return cache_mod.spec_for(kind, cfg, batch, max_len, dtype, paged=paged,
-                              page_size=page_size, num_pages=num_pages).init()
+                              page_size=page_size, num_pages=num_pages,
+                              kv_quant=kv_quant).init()
 
 
 def _paged_latent_write(cache: Params, ckv: jax.Array, krope: jax.Array,
@@ -124,6 +131,15 @@ def _paged_latent_write(cache: Params, ckv: jax.Array, krope: jax.Array,
     slot = jnp.broadcast_to(tpos % ps, (b, t))
     lat = jnp.concatenate([ckv, krope], axis=-1)
     lat = jnp.pad(lat, ((0, 0), (0, 0), (0, dp - lat.shape[-1])))
+    if "latent_scales" in cache:
+        # Quantized pool: quantize the latent rows and land their scales
+        # through the same drop routing.
+        lq, ls = kref.quantize_rows(lat, pool.dtype)
+        return dict(
+            cache,
+            latent_pages=pool.at[pg, slot, :].set(lq, mode="drop"),
+            latent_scales=cache["latent_scales"].at[pg, slot].set(
+                ls, mode="drop"))
     return dict(cache, latent_pages=pool.at[pg, slot, :].set(
         lat.astype(pool.dtype), mode="drop"))
 
@@ -137,7 +153,7 @@ def prefill(p, cfg, x, cache, mask, positions, impl="ref", chunked=False,
     y = forward(p, cfg, x, mask, positions, impl, chunked=chunked,
                 prefix_len=prefix_len)
     ckv, krope = _latents(p, cfg, x, positions)
-    if cache_mod.layout_of(cache) == "paged_mla":
+    if cache_mod.layout_of(cache) in _PAGED_MLA:
         return y, _paged_latent_write(cache, ckv, krope, lengths)
     new_ckv = jax.lax.dynamic_update_slice(
         cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
@@ -172,16 +188,25 @@ def mixed_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
                        w_uk.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
     scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
-    if cache_mod.layout_of(cache) == "paged_mla":
+    layout = cache_mod.layout_of(cache)
+    if layout in _PAGED_MLA:
         pool = cache["latent_pages"]
         dp = pool.shape[-1]
         lat_new = jnp.concatenate([ckv_t, krope_t], axis=-1)
         lat_new = jnp.pad(lat_new, ((0, 0), (0, 0),
                                     (0, dp - lat_new.shape[-1])))
-        ctx, pool = kops.paged_mla_chunk(
-            q_abs, q_rope, pool, cache["block_tables"], start, span,
-            lat_new, scale=scale, use_pallas=(impl == "pallas"))
-        new_cache = dict(cache, latent_pages=pool)
+        if layout != "paged_mla":
+            ctx, pool, scales = kops.paged_mla_chunk_quant(
+                q_abs, q_rope, pool, cache["latent_scales"],
+                cache["block_tables"], start, span, lat_new, scale=scale,
+                use_pallas=(impl == "pallas"))
+            new_cache = dict(cache, latent_pages=pool,
+                             latent_scales=scales)
+        else:
+            ctx, pool = kops.paged_mla_chunk(
+                q_abs, q_rope, pool, cache["block_tables"], start, span,
+                lat_new, scale=scale, use_pallas=(impl == "pallas"))
+            new_cache = dict(cache, latent_pages=pool)
     else:
         # Dense latent cache: write the span via a position gather, then the
         # same absorbed contractions over the full stream.
@@ -224,7 +249,8 @@ def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     h = cfg.num_heads
     q_nope, q_rope = _queries(p, cfg, x, pos[:, None])            # [B,H,1,*]
     ckv_t, krope_t = _latents(p, cfg, x, pos[:, None])            # [B,1,*]
-    if cache_mod.layout_of(cache) == "paged_mla":
+    layout = cache_mod.layout_of(cache)
+    if layout in _PAGED_MLA:
         # Paged latent cache: O(page) fused write + block-table walk — the
         # one-hot rewrite of the full [B, S, r] latent stream disappears.
         # Absorbed q_abs/scale/contractions are IDENTICAL to the dense path
@@ -239,15 +265,22 @@ def decode_step(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
         dp = pool.shape[-1]
         lat_new = jnp.concatenate([ckv_t[:, 0], krope_t[:, 0]], axis=-1)
         lat_new = jnp.pad(lat_new, ((0, 0), (0, dp - lat_new.shape[-1])))
-        ctx, pool = kops.paged_mla_decode(
-            q_abs, q_rope[:, :, 0], pool, cache["block_tables"], pos,
-            lat_new, scale=scale, use_pallas=(impl == "pallas"))
+        if layout != "paged_mla":
+            ctx, pool, scales = kops.paged_mla_decode_quant(
+                q_abs, q_rope[:, :, 0], pool, cache["latent_scales"],
+                cache["block_tables"], pos, lat_new, scale=scale,
+                use_pallas=(impl == "pallas"))
+            new_cache = dict(cache, latent_pages=pool, latent_scales=scales)
+        else:
+            ctx, pool = kops.paged_mla_decode(
+                q_abs, q_rope[:, :, 0], pool, cache["block_tables"], pos,
+                lat_new, scale=scale, use_pallas=(impl == "pallas"))
+            new_cache = dict(cache, latent_pages=pool)
         w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
         out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32),
                          preferred_element_type=jnp.float32)
         out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
-        return (common.dense(p["w_o"], out),
-                dict(cache, latent_pages=pool))
+        return common.dense(p["w_o"], out), new_cache
     # One-hot masked write (not a scatter): partitions cleanly when the
     # cache is sequence-sharded (see sharding/partition.py mla_cache="seq").
     s_len = cache["ckv"].shape[1]

@@ -304,6 +304,9 @@ class Request:
     retries: int = 0                  # failover re-admissions so far
     max_retries: int = 2
     retry_at: int = 0                 # earliest step admission may bind this
+    # -- tiered page memory -------------------------------------------------
+    swap_slots: list[int] = field(default_factory=list)  # held host slots
+    swap_tokens: int = 0              # context tokens the swapped pages cover
 
     @property
     def context(self) -> list[int]:
@@ -336,7 +339,9 @@ class ContinuousBatchingEngine:
                  max_queue: Optional[int] = None,
                  journal: Optional[Any] = None,
                  spec_decode: str = "off", spec_k: int = 4,
-                 drafter: Optional[Any] = None):
+                 drafter: Optional[Any] = None,
+                 kv_quant: str = "off", swap_tier_pages: int = 0,
+                 swap_min_tokens: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -350,6 +355,13 @@ class ContinuousBatchingEngine:
                              if token_budget is not None else None)
         self.prefill_interleave = prefill_interleave
         self.maxp = -(-max_len // page_size)
+        if kv_quant not in cache_mod.KV_QUANT_MODES:
+            raise ValueError(f"kv_quant must be one of "
+                             f"{cache_mod.KV_QUANT_MODES}, got {kv_quant!r}")
+        if kv_quant != "off" and not paged:
+            raise ValueError("kv_quant requires paged=True (quantized "
+                             "layouts are page-pool layouts)")
+        self.kv_quant = kv_quant
         if paged:
             # Injectable backends: a replicated allocator / prefix cache
             # (serving/replicated.py) swaps in for the host-local ones as
@@ -366,7 +378,8 @@ class ContinuousBatchingEngine:
             self.trash_page = num_pages          # extra physical page
             self.cache = lm.init_cache(cfg, batch, max_len, paged=True,
                                        page_size=page_size,
-                                       num_pages=num_pages + 1)
+                                       num_pages=num_pages + 1,
+                                       kv_quant=kv_quant)
             self.host_bt = np.full((batch, self.maxp), self.trash_page,
                                    np.int32)
             self.cache = lm.set_block_tables(self.cache,
@@ -387,6 +400,24 @@ class ContinuousBatchingEngine:
             self._reset_state = jax.jit(
                 lambda c, m: lm.reset_state_rows(cfg, c, m),
                 donate_argnums=(0,))
+        # Tiered page memory: a host-buffer swap pool of ``swap_tier_pages``
+        # slots.  Preemption victims with enough cached context swap their
+        # pages out instead of recomputing; re-admission swaps them back in
+        # bit-exactly and resumes from the saved cursor.  Recurrent (state)
+        # architectures always recompute — swap restores pages, not carries.
+        self.swap_tier_pages = int(swap_tier_pages)
+        if paged and self.swap_tier_pages > 0 and not self._has_state:
+            self.swap_pool = cache_mod.make_swap_pool(self.cache,
+                                                      self.swap_tier_pages)
+            self._swap_free = list(range(self.swap_tier_pages))
+        else:
+            self.swap_pool = None
+            self._swap_free = []
+        # Swap-vs-recompute break-even: a victim below this many cached
+        # tokens is cheaper to re-prefill (recompute cost scales with
+        # context; swap cost is fixed per page).
+        self.swap_min_tokens = (2 * page_size if swap_min_tokens is None
+                                else int(swap_min_tokens))
         if spec_decode not in ("off", "ngram", "doc"):
             raise ValueError(f"spec_decode must be off/ngram/doc, got "
                              f"{spec_decode!r}")
@@ -459,7 +490,11 @@ class ContinuousBatchingEngine:
                       # carried >= 1 draft, steps that rolled anything back.
                       "draft_tokens": 0, "accepted_tokens": 0,
                       "rollback_tokens": 0, "spec_steps": 0,
-                      "spec_rollbacks": 0}
+                      "spec_rollbacks": 0,
+                      # Tiered page memory: pages moved across tiers plus
+                      # how each preemption resolved (swap vs recompute).
+                      "swap_outs": 0, "swap_ins": 0,
+                      "preempt_swap": 0, "preempt_recompute": 0}
 
     # -- request lifecycle --------------------------------------------------
 
@@ -495,8 +530,17 @@ class ContinuousBatchingEngine:
             self._shed(victim, "shed_queue_full")
         self.queue.append(req)
 
+    def _drop_swap(self, req: Request) -> None:
+        """Return a terminal request's held swap slots to the free list —
+        its saved pages will never be swapped back in."""
+        if req.swap_slots:
+            self._swap_free.extend(req.swap_slots)
+            req.swap_slots = []
+            req.swap_tokens = 0
+
     def _shed(self, req: Request, cause: str) -> None:
         req.status = SHED
+        self._drop_swap(req)
         req.finished_step = self.stats["steps"]
         self.stats["shed"] += 1
         self.stats[cause] += 1
@@ -505,6 +549,7 @@ class ContinuousBatchingEngine:
 
     def _expire(self, req: Request, cause: str) -> None:
         req.status = EXPIRED
+        self._drop_swap(req)
         req.finished_step = self.stats["steps"]
         self.stats["expired"] += 1
         self.stats[cause] += 1
@@ -623,7 +668,26 @@ class ContinuousBatchingEngine:
                 break                          # every queued request backs off
             req = self.queue[cand]
             ctx = req.context
-            if self.paged:
+            swapped = bool(req.swap_slots)
+            if self.paged and swapped:
+                # Swapped-out victim: pull its saved pages back from the
+                # host tier into fresh device pages and resume from the
+                # saved cursor — no recompute chunks for the covered prefix.
+                res = self.allocator.reserve(len(req.swap_slots))
+                if res is None:
+                    break                      # wait for completions
+                pages = res.take()
+                self.cache = cache_mod.swap_in_pages(
+                    self.cache, self.swap_pool, req.swap_slots, pages)
+                self._swap_free.extend(req.swap_slots)
+                self.stats["swap_ins"] += len(pages)
+                req.pages = pages
+                req.safe_upto = 0
+                self.host_bt[row, :] = self.trash_page
+                self.host_bt[row, :len(pages)] = pages
+                self._bt_dirty = True
+                self._last_alloc[row] = self.stats["steps"]
+            elif self.paged:
                 first = min(self.chunk_size, len(ctx)) \
                     if self.prefill_interleave else len(ctx)
                 npages_ctx = self._chunk_pages(len(ctx))
@@ -662,6 +726,13 @@ class ContinuousBatchingEngine:
             req.admit_len = len(ctx)
             req.admitted_step = self.stats["steps"]
             self.row_pos[row] = 0
+            if swapped:
+                # The swapped-in pages already hold positions
+                # [0, swap_tokens): admission streams only the tail.
+                req.filled = req.swap_tokens
+                self.row_pos[row] = req.swap_tokens
+                req.swap_slots = []
+                req.swap_tokens = 0
             reset_rows.append(row)
             admitted += 1
         if admitted:
@@ -685,10 +756,45 @@ class ContinuousBatchingEngine:
 
     # -- incremental growth / COW / preemption ------------------------------
 
-    def _evict_row(self, victim: int, spans: np.ndarray, cause: str) -> None:
-        """Release ``victim``'s pages and re-queue it at the front
-        (preemption by recomputation); per-cause counters stay distinct."""
+    def _try_swap_out(self, victim: int) -> bool:
+        """Swap ``victim``'s cached pages to the host tier if the context is
+        long enough to beat recomputation.  Eligible when: swap tier exists,
+        the cached context clears the break-even (``swap_min_tokens`` —
+        recompute cost grows with context, swap cost is fixed per page),
+        every covering page is privately owned (a shared prefix page stays
+        resident for re-share — recompute is nearly free there anyway), and
+        host slots are available.  Returns True with the request's
+        ``swap_slots``/``swap_tokens`` recording the saved state."""
+        if self.swap_pool is None:
+            return False
         req = self.rows[victim]
+        n_tokens = int(self.row_pos[victim])
+        if n_tokens < self.swap_min_tokens:
+            return False
+        npages = self._chunk_pages(n_tokens)
+        if npages > len(self._swap_free):
+            return False
+        pages = [int(self.host_bt[victim, w]) for w in range(npages)]
+        if any(p == self.trash_page or self.allocator.refcount(p) != 1
+               for p in pages):
+            return False
+        slots = [self._swap_free.pop() for _ in range(npages)]
+        cache_mod.swap_out_pages(self.cache, self.swap_pool, pages, slots)
+        req.swap_slots = slots
+        req.swap_tokens = n_tokens
+        self.stats["swap_outs"] += npages
+        return True
+
+    def _evict_row(self, victim: int, spans: np.ndarray, cause: str) -> None:
+        """Release ``victim``'s pages and re-queue it at the front; a
+        long-context victim swaps its pages to the host tier first
+        (preemption by swap), the rest recompute on re-admission.
+        Per-cause counters stay distinct."""
+        req = self.rows[victim]
+        if self._try_swap_out(victim):
+            self.stats["preempt_swap"] += 1
+        else:
+            self.stats["preempt_recompute"] += 1
         # A COW copy queued this step whose destination dies with the victim
         # must be dropped: the freed page can be re-handed out in this same
         # pass, and a duplicate destination in one batched scatter would
@@ -1159,7 +1265,7 @@ class ContinuousBatchingEngine:
         for _, layout, layer in cache_mod.iter_layers(self.cache):
             for name in cache_mod.pool_leaves(layer, layout):
                 pool = layer[name]
-                core = 4 if layout == "paged_mha" else 3
+                core = cache_mod._POOL_LEAF_NDIM[layout][name]
                 p = pool.shape[1] if pool.ndim == core + 1 else pool.shape[0]
                 total += int(pool.nbytes) * used // p
         return total

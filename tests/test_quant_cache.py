@@ -1,0 +1,406 @@
+"""Quantized page pools + tiered host-swap page memory.
+
+Covers the quantized cache layouts end to end:
+
+  * quant/dequant roundtrip properties — scale is never zero (all-zero
+    rows quantize against scale 1.0) and int8 round-to-nearest bounds the
+    per-element error by scale/2 (fp8 e4m3 by the half-ulp relative bound),
+  * fused quant kernels vs the ``kernels.ref`` gather oracles — pool and
+    scale writes bitwise identical between the Pallas(interpret) and ref
+    paths, attention outputs tight,
+  * snapshot_span/restore_span and host-swap-pool roundtrips bitwise on
+    quantized pools INCLUDING the scale leaves (the generic page machinery
+    iterates _POOL_LEAF_NDIM, so scales must travel with their pages),
+  * the serving stack under ``kv_quant="int8"``: greedy streams identical
+    to bf16 pools, COW prefix sharing, speculative rollback, replication,
+  * tiered memory: swap-preemption recovers a long-context victim in fewer
+    steps than recompute-from-scratch with identical streams and no leaked
+    swap slots or device pages.
+
+Mirrors tests/test_allocator_properties.py's optional-hypothesis pattern:
+explicit seed parameters always run; when ``hypothesis`` is installed (the
+CI property job) the roundtrip bounds are additionally driven by generated
+inputs.  Tier-1 collects and passes without the package.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.kernels import ops, ref
+from repro.models import attention, cache as cache_mod, lm
+from repro.serving.scheduler import ContinuousBatchingEngine, Request
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+QMODES = [m for m in ("int8", "fp8")
+          if m != "fp8" or cache_mod.FP8_DTYPE is not None]
+
+
+def _qdtype(mode: str):
+    return jnp.int8 if mode == "int8" else cache_mod.FP8_DTYPE
+
+
+def _f32(params):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def llm():
+    cfg = configs.reduced(configs.get("olmo-1b"), d_model=32, vocab=128)
+    return cfg, _f32(lm.init(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Quant/dequant roundtrip properties
+# ---------------------------------------------------------------------------
+
+def _check_roundtrip(x: jax.Array, mode: str) -> None:
+    q, s = ref.quantize_rows(x, _qdtype(mode))
+    sn = np.asarray(s)
+    assert np.all(sn > 0), "scale must never be zero"
+    xf = np.asarray(x, np.float32)
+    err = np.abs(np.asarray(ref.dequantize_rows(q, s)) - xf)
+    if mode == "int8":
+        # symmetric round-to-nearest: |x - q*scale| <= scale/2
+        bound = sn[..., None] * 0.5 * (1 + 1e-5) + 1e-7
+    else:
+        # e4m3 (~3 mantissa bits): half-ulp relative error 2^-4 for
+        # normals, plus the denormal floor in q units.
+        bound = np.abs(xf) * 2.0 ** -4 + sn[..., None] * 2.0 ** -9 + 1e-7
+    assert np.all(err <= bound), f"max err {err.max()} over bound ({mode})"
+
+
+@pytest.mark.parametrize("mode", QMODES)
+@pytest.mark.parametrize("seed", range(8))
+def test_quantize_rows_roundtrip_bounds(mode, seed):
+    rng = np.random.default_rng(seed)
+    d = int(2 ** rng.integers(2, 7))
+    mag = float(2.0 ** rng.uniform(-6, 6))
+    x = jnp.asarray(rng.normal(0.0, mag, (3, 5, d)), jnp.float32)
+    _check_roundtrip(x, mode)
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_quantize_all_zero_rows_scale_one(mode):
+    q, s = ref.quantize_rows(jnp.zeros((4, 8), jnp.float32), _qdtype(mode))
+    assert np.all(np.asarray(s) == 1.0)
+    assert np.all(np.asarray(q.astype(jnp.float32)) == 0.0)
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_quantize_mixed_zero_and_huge_rows(mode):
+    x = jnp.stack([jnp.zeros((16,)), jnp.full((16,), 3e4),
+                   jnp.full((16,), -1e-6)]).astype(jnp.float32)
+    _check_roundtrip(x, mode)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1), mi=st.integers(0, 7),
+           logmag=st.floats(-8, 8), d=st.integers(1, 48))
+    def test_quantize_rows_roundtrip_hypothesis(seed, mi, logmag, d):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0.0, 2.0 ** logmag, (2, 3, d)),
+                        jnp.float32)
+        _check_roundtrip(x, QMODES[mi % len(QMODES)])
+
+
+# ---------------------------------------------------------------------------
+# Fused quant kernels vs ref oracles (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def _mha_quant_pool(rng, mode, P=6, Hkv=2, ps=8, D=16):
+    qd = _qdtype(mode)
+    kq, ks = ref.quantize_rows(
+        jnp.asarray(rng.normal(0, 1, (P, Hkv, ps, D)), jnp.float32), qd)
+    vq, vs = ref.quantize_rows(
+        jnp.asarray(rng.normal(0, 1, (P, Hkv, ps, D)), jnp.float32), qd)
+    return kq, ks, vq, vs
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_paged_decode_quant_kernel_matches_oracle(mode):
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, D, ps, maxp = 2, 4, 2, 16, 8, 3
+    kq, ks, vq, vs = _mha_quant_pool(rng, mode, P=B * maxp, Hkv=Hkv, ps=ps,
+                                     D=D)
+    bt = jnp.arange(B * maxp, dtype=jnp.int32).reshape(B, maxp)
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, D)), jnp.float32)
+    pos = jnp.asarray([5, 13], jnp.int32)
+    kn = jnp.asarray(rng.normal(0, 1, (B, Hkv, D)), jnp.float32)
+    vn = jnp.asarray(rng.normal(0, 1, (B, Hkv, D)), jnp.float32)
+    o1, kp1, vp1, ks1, vs1 = ops.paged_decode_attention_quant(
+        q, kq, ks, vq, vs, bt, pos, kn, vn, use_pallas=True)
+    o2, kp2, vp2, ks2, vs2 = ops.paged_decode_attention_quant(
+        q, kq, ks, vq, vs, bt, pos, kn, vn, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=1e-4)
+    for a, b in ((kp1, kp2), (vp1, vp2), (ks1, ks2), (vs1, vs2)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_paged_chunk_quant_kernel_matches_oracle(mode):
+    rng = np.random.default_rng(4)
+    B, Hq, Hkv, D, ps, maxp, C = 2, 2, 1, 16, 8, 4, 6
+    kq, ks, vq, vs = _mha_quant_pool(rng, mode, P=B * maxp, Hkv=Hkv, ps=ps,
+                                     D=D)
+    bt = jnp.arange(B * maxp, dtype=jnp.int32).reshape(B, maxp)
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, C, D)), jnp.float32)
+    start = jnp.asarray([3, 11], jnp.int32)
+    span = jnp.asarray([6, 4], jnp.int32)
+    kn = jnp.asarray(rng.normal(0, 1, (B, Hkv, C, D)), jnp.float32)
+    vn = jnp.asarray(rng.normal(0, 1, (B, Hkv, C, D)), jnp.float32)
+    o1, kp1, vp1, ks1, vs1 = ops.paged_chunk_attention_quant(
+        q, kq, ks, vq, vs, bt, start, span, kn, vn, use_pallas=True)
+    o2, kp2, vp2, ks2, vs2 = ops.paged_chunk_attention_quant(
+        q, kq, ks, vq, vs, bt, start, span, kn, vn, use_pallas=False)
+    # Lanes past a row's span are garbage on both paths; compare valid ones.
+    for b_i in range(B):
+        w = int(span[b_i])
+        np.testing.assert_allclose(
+            np.asarray(o1[b_i, :, :w], np.float32),
+            np.asarray(o2[b_i, :, :w], np.float32), atol=1e-4)
+    for a, b in ((kp1, kp2), (vp1, vp2), (ks1, ks2), (vs1, vs2)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_paged_mla_decode_quant_kernel_matches_oracle(mode):
+    rng = np.random.default_rng(5)
+    B, Hq, r, rd, ps, maxp = 2, 2, 16, 8, 8, 3
+    dp = cache_mod.pad128(r + rd)
+    pool, scales = ref.quantize_rows(
+        jnp.asarray(rng.normal(0, 1, (B * maxp, ps, dp)), jnp.float32),
+        _qdtype(mode))
+    bt = jnp.arange(B * maxp, dtype=jnp.int32).reshape(B, maxp)
+    q_abs = jnp.asarray(rng.normal(0, 1, (B, Hq, r)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(0, 1, (B, Hq, rd)), jnp.float32)
+    pos = jnp.asarray([4, 12], jnp.int32)
+    lat = jnp.asarray(rng.normal(0, 1, (B, dp)), jnp.float32)
+    sc = 1.0 / ((r + rd) ** 0.5)
+    c1, p1, s1 = ops.paged_mla_decode_quant(q_abs, q_rope, pool, scales, bt,
+                                            pos, lat, scale=sc,
+                                            use_pallas=True)
+    c2, p2, s2 = ops.paged_mla_decode_quant(q_abs, q_rope, pool, scales, bt,
+                                            pos, lat, scale=sc,
+                                            use_pallas=False)
+    np.testing.assert_allclose(np.asarray(c1, np.float32),
+                               np.asarray(c2, np.float32), atol=1e-4)
+    assert np.asarray(p1).tobytes() == np.asarray(p2).tobytes()
+    assert np.asarray(s1).tobytes() == np.asarray(s2).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Snapshot/restore + host-swap roundtrips, bitwise on quantized pools
+# ---------------------------------------------------------------------------
+
+def _pool_leaf_bytes(cache):
+    """{(path, leaf): raw bytes} for every paged pool/scale leaf."""
+    out = {}
+    for path, layout, layer in cache_mod.iter_layers(cache):
+        for name in cache_mod.pool_leaves(layer, layout):
+            out[path + (name,)] = np.asarray(layer[name]).tobytes()
+    return out
+
+
+def _quant_prefilled(cfg, params, mode, batch=2, max_len=32, ps=8, plen=10):
+    rng = np.random.default_rng(0)
+    cache = lm.init_cache(cfg, batch, max_len, dtype=jnp.float32,
+                          paged=True, page_size=ps, kv_quant=mode)
+    cache = lm.set_block_tables(
+        cache, attention.default_block_tables(batch, max_len, ps))
+    prompts = jnp.asarray(rng.integers(2, cfg.vocab_size, (batch, plen)),
+                          jnp.int32)
+    _, cache = lm.prefill(params, cfg, prompts, cache)
+    return cache, plen
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_snapshot_restore_span_bitwise_on_quant_pools(llm, mode):
+    cfg, params = llm
+    cache, plen = _quant_prefilled(cfg, params, mode)
+    batch, width = 2, 4
+    start = jnp.full((batch,), plen, jnp.int32)
+    before = _pool_leaf_bytes(cache)
+    snap = cache_mod.snapshot_span(cache, start, width)
+    # Clobber slots inside the window with real decode writes.
+    tok = jnp.asarray([7, 9], jnp.int32)
+    clob = cache
+    for t in range(2):
+        _, clob = lm.decode_step(params, cfg, tok + t, clob,
+                                 start + t)
+    assert _pool_leaf_bytes(clob) != before
+    back = cache_mod.restore_span(clob, snap, start, start, start + width)
+    assert _pool_leaf_bytes(back) == before
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_swap_pool_roundtrip_bitwise_on_quant_pools(llm, mode):
+    cfg, params = llm
+    cache, _ = _quant_prefilled(cfg, params, mode)
+    pages, slots = [0, 1, 3], [2, 0, 1]
+    before = _pool_leaf_bytes(cache)
+    swap_pool = cache_mod.make_swap_pool(cache, n_slots=4)
+    moved = cache_mod.swap_out_pages(cache, swap_pool, pages, slots)
+    assert moved > 0
+
+    def zero_pages(path, layout, layer):
+        out = dict(layer)
+        for name in cache_mod.pool_leaves(layer, layout):
+            leaf = layer[name]
+            core = cache_mod._POOL_LEAF_NDIM[layout][name]
+            idx = jnp.asarray(pages)
+            out[name] = (leaf.at[:, idx].set(0) if leaf.ndim == core + 1
+                         else leaf.at[idx].set(0))
+        return out
+
+    clob = cache_mod.map_layers(cache, zero_pages)
+    assert _pool_leaf_bytes(clob) != before
+    back = cache_mod.swap_in_pages(clob, swap_pool, slots, pages)
+    assert _pool_leaf_bytes(back) == before
+
+
+# ---------------------------------------------------------------------------
+# Serving stack under kv_quant
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, prompts, max_new, **kw):
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    eng.run(reqs)
+    return eng, {r.rid: list(r.tokens) for r in reqs}
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in rng.integers(2, cfg.vocab_size, n)]
+            for n in lens]
+
+
+def test_engine_int8_streams_match_fp32(llm):
+    cfg, params = llm
+    prompts = _prompts(cfg, (6, 11, 4))
+    kw = dict(batch=2, max_len=32, paged=True, page_size=8, chunk_size=8)
+    _, s_off = _run_engine(cfg, params, prompts, 8, **kw)
+    eng, s_q = _run_engine(cfg, params, prompts, 8, kv_quant="int8", **kw)
+    assert s_q == s_off
+    assert eng.stats["completed"] == len(prompts)
+
+
+def test_engine_rejects_quant_without_paged(llm):
+    cfg, params = llm
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                 paged=False, kv_quant="int8")
+    with pytest.raises(ValueError, match="kv_quant"):
+        ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                 paged=True, kv_quant="int4")
+
+
+def test_cow_prefix_sharing_with_int8_pools(llm):
+    cfg, params = llm
+    shared = _prompts(cfg, (13,), seed=2)[0]
+    prompts = [list(shared) for _ in range(3)]
+    kw = dict(batch=3, max_len=32, paged=True, page_size=8, chunk_size=8,
+              kv_quant="int8")
+    _, s_plain = _run_engine(cfg, params, prompts, 8, **kw)
+    eng, s_cow = _run_engine(cfg, params, prompts, 8, prefix_sharing=True,
+                             **kw)
+    assert s_cow == s_plain
+    assert eng.stats["shared_pages"] > 0
+    assert eng.stats["completed"] == 3
+
+
+def test_spec_decode_rollback_with_int8_pools(llm):
+    cfg, params = llm
+    motif = _prompts(cfg, (5,), seed=3)[0]
+    prompts = [(motif * 4)[:18] for _ in range(2)]
+    kw = dict(batch=2, max_len=64, paged=True, page_size=8, chunk_size=8,
+              kv_quant="int8")
+    _, s_off = _run_engine(cfg, params, prompts, 12, **kw)
+    eng, s_spec = _run_engine(cfg, params, prompts, 12, spec_decode="ngram",
+                              spec_k=4, **kw)
+    assert s_spec == s_off
+    assert eng.stats["accepted_tokens"] > 0
+
+
+def test_replicated_server_with_int8_pools(llm):
+    from repro.serving.replicated import MultiEngineServer
+
+    cfg, params = llm
+    prompts = _prompts(cfg, (9, 9, 6, 6), seed=4)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    server = MultiEngineServer(cfg, params, replicas=2, batch=2, max_len=32,
+                               page_size=8, chunk_size=8, kv_quant="int8")
+    for r in reqs:
+        server.submit(r)
+    while server.step():
+        assert server.clock < 5_000
+    server.sync()
+    assert server.stats()["completed"] == len(reqs)
+    assert server.converged()
+
+
+# ---------------------------------------------------------------------------
+# Tiered host-swap page memory
+# ---------------------------------------------------------------------------
+
+SWAP_KW = dict(batch=2, max_len=64, paged=True, page_size=8, num_pages=6,
+               chunk_size=8, swap_min_tokens=16)
+
+
+def test_swap_preemption_beats_recompute_and_streams_match(llm):
+    cfg, params = llm
+    prompts = _prompts(cfg, (24, 6), seed=5)
+    eng0, s0 = _run_engine(cfg, params, prompts, 16, swap_tier_pages=0,
+                           **SWAP_KW)
+    eng1, s1 = _run_engine(cfg, params, prompts, 16, swap_tier_pages=8,
+                           **SWAP_KW)
+    assert eng0.stats["preempt_recompute"] > 0     # scenario really preempts
+    assert eng1.stats["preempt_swap"] > 0
+    assert eng1.stats["swap_outs"] > 0 and eng1.stats["swap_ins"] > 0
+    assert s1 == s0                                # bit-identical streams
+    assert eng1.stats["steps"] < eng0.stats["steps"]
+
+
+def test_swap_tier_leaks_nothing_at_drain(llm):
+    cfg, params = llm
+    prompts = _prompts(cfg, (24, 6), seed=5)
+    eng, _ = _run_engine(cfg, params, prompts, 16, swap_tier_pages=8,
+                         **SWAP_KW)
+    assert eng.stats["swap_ins"] == eng.stats["swap_outs"]
+    assert sorted(eng._swap_free) == list(range(8))   # all slots returned
+    assert eng.allocator.available == eng.allocator.num_pages
+
+
+def test_swap_composes_with_int8_pools(llm):
+    cfg, params = llm
+    prompts = _prompts(cfg, (24, 6), seed=5)
+    _, s_plain = _run_engine(cfg, params, prompts, 16, swap_tier_pages=0,
+                             kv_quant="int8", **SWAP_KW)
+    eng, s_swap = _run_engine(cfg, params, prompts, 16, swap_tier_pages=8,
+                              kv_quant="int8", **SWAP_KW)
+    assert s_swap == s_plain
+    assert eng.stats["preempt_swap"] > 0
+
+
+def test_swap_disabled_for_recurrent_state(llm):
+    cfg, _ = llm
+    cfg = cfg.replace(block_pattern=("attn", "rglru"), num_layers=4)
+    params = _f32(lm.init(jax.random.PRNGKey(2), cfg))
+    eng = ContinuousBatchingEngine(cfg, params, batch=2, max_len=32,
+                                   paged=True, page_size=8,
+                                   swap_tier_pages=4)
+    assert eng.swap_pool is None                   # recurrent rows recompute
