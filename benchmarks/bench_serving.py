@@ -347,6 +347,85 @@ def run_replicated(cfg, params, *, replicas: int, batch: int, max_len: int,
     }
 
 
+def run_disagg(cfg, params, *, replicas: int, batch: int, max_len: int,
+               page_size: int, prompt_len: int, max_new: int,
+               adopt: bool, seed: int = 0) -> tuple[dict, dict]:
+    """Disaggregated prefill/decode sweep: one prefill replica + decode
+    replicas over the CRDT page table, staggered shared-prefix arrivals.
+
+    The first ``batch`` requests arrive at t=0 (cold — routed to the
+    prefill replica); the rest arrive one per step, so same-prompt
+    followers land after the prefill replica has published its filled
+    pages and routing steers them to the decode tier.  With
+    ``adopt=True`` the decode replicas' adoption hooks physically transfer
+    the published pages (rule-3 commit) and admission skips the covered
+    prefill chunks; ``adopt=False`` is the local-prefill baseline —
+    identical topology, routing, and publication, but every decode
+    admission recomputes its prompt.  Returns ``(row, streams)`` where
+    ``streams`` maps rid -> generated tokens (the acceptance section
+    checks the two sweeps match token-for-token: adoption is bitwise).
+    """
+    from repro.serving.replicated import MultiEngineServer
+    from repro.serving.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    prompts = [[int(t) for t in rng.integers(2, cfg.vocab_size, prompt_len)]
+               for _ in range(2)]
+    n_requests = 4 * replicas
+    requests = [Request(rid=i, prompt=list(prompts[(i // 2) % 2]),
+                        max_new_tokens=max_new)
+                for i in range(n_requests)]
+    roles = ["prefill"] + ["decode"] * (replicas - 1)
+    server = MultiEngineServer(cfg, params, replicas=replicas, batch=batch,
+                               max_len=max_len, page_size=page_size,
+                               sync_every=1, chunk_size=page_size,
+                               roles=roles, adopt_pages=adopt)
+    pending = list(requests)
+    for req in pending[:batch]:
+        server.submit(req)
+    pending = pending[batch:]
+    step_times: list[float] = []
+    while True:
+        t0 = time.perf_counter()
+        more = server.step()
+        step_times.append(time.perf_counter() - t0)
+        if pending:
+            server.submit(pending.pop(0))
+            continue
+        if not more:
+            break
+        if server.clock > 50_000:
+            raise RuntimeError("disagg bench runaway")
+    server.sync()                           # final round: frontiers settle
+    s = server.stats()
+    ttft = [r.first_token_step - r.admitted_step for r in requests
+            if r.first_token_step >= 0]
+    row = {
+        "adoption": "on" if adopt else "off",
+        "replicas": replicas, "batch": batch, "page_size": page_size,
+        "n_requests": n_requests, "prompt_len": prompt_len,
+        "us_per_step": 1e6 * statistics.median(step_times),
+        "steps": s["steps"],
+        "gen_tokens": s["gen_tokens"], "completed": s["completed"],
+        "ttft_steps_mean": (statistics.fmean(ttft) if ttft else 0.0),
+        "ttft_steps_max": max(ttft, default=0),
+        "adopted_pages": s["adopted_pages"],
+        "adopted_tokens": s["adopted_tokens"],
+        "prefill_steps_avoided": s["prefill_steps_avoided"],
+        "transferred_pages": s["transferred_pages"],
+        "transfer_bytes": s["transfer_bytes"],
+        "transfer_bytes_per_step": (s["transfer_bytes"] // s["steps"]
+                                    if s["steps"] else 0),
+        "adopt_aborts": s["adopt_aborts"],
+        "cross_replica_hits": s["cross_replica_hits"],
+        "published_prefix_pages": s["published_prefix_pages"],
+        "sync_bytes_per_step": s["sync_bytes_per_step"],
+        "converged": server.converged(),
+    }
+    streams = {r.rid: list(r.tokens) for r in requests}
+    return row, streams
+
+
 def _fault_row(trace: dict, base_steps: int) -> dict:
     srv = trace["server"]
     return {
@@ -788,6 +867,19 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
             page_size=page_size, prompt_len=3 * page_size + 5,
             max_new=max_new))
 
+    # Disaggregation sweep: prefill/decode roles over the CRDT page table,
+    # physical page adoption ON vs OFF on the identical workload (see
+    # run_disagg) — the coordination-vs-data-plane comparison.
+    disagg_rows = []
+    disagg_streams = {}
+    for adopt in (False, True):
+        row, streams = run_disagg(
+            cfg, params, replicas=2, batch=2, max_len=max_len,
+            page_size=page_size, prompt_len=3 * page_size + 5,
+            max_new=max_new, adopt=adopt)
+        disagg_rows.append(row)
+        disagg_streams[adopt] = streams
+
     # Fault sweep: crash failover + load shedding on the real server over
     # seeded faulty gossip (deterministic counters; see run_fault_sweep).
     fault_rows = run_fault_sweep(
@@ -860,6 +952,27 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                 r["cross_replica_hits"] > 0 for r in repl_rows),
             "all_completed": all(r["completed"] == r["n_requests"]
                                  for r in repl_rows),
+        },
+        "disagg": disagg_rows,
+        "disaggregation": {
+            # Acceptance: adoption moved real pages and skipped real prefill
+            # chunks, never made TTFT worse than the local-prefill baseline
+            # on the identical workload, produced token streams identical
+            # to it (transfers are bitwise), and the baseline run proves
+            # the OFF switch truly never moved a byte.
+            "adopted_pages_positive":
+                disagg_rows[1]["adopted_pages"] > 0,
+            "prefill_steps_avoided_positive":
+                disagg_rows[1]["prefill_steps_avoided"] > 0,
+            "ttft_adopt_not_worse": (disagg_rows[1]["ttft_steps_mean"]
+                                     <= disagg_rows[0]["ttft_steps_mean"]),
+            "streams_match": disagg_streams[True] == disagg_streams[False],
+            "baseline_never_adopts": (
+                disagg_rows[0]["adopted_pages"] == 0
+                and disagg_rows[0]["transfer_bytes"] == 0),
+            "all_completed": all(r["completed"] == r["n_requests"]
+                                 for r in disagg_rows),
+            "all_converged": all(r["converged"] for r in disagg_rows),
         },
         "spec_decode": {"engine": spec_rows, "agents": spec_agent_rows},
         "quant": quant_rows,
@@ -969,6 +1082,15 @@ def run_bench(quick: bool = False, out: str | Path = "BENCH_serving.json",
                    f";publishedPages={r['published_prefix_pages']}"
                    f";converged={int(r['converged'])}")
         emit_csv(f"serving/repl_r{r['replicas']},{r['us_per_step']:.1f},"
+                 f"{derived}")
+    for r in disagg_rows:
+        derived = (f"adoptedPages={r['adopted_pages']}"
+                   f";prefillStepsAvoided={r['prefill_steps_avoided']}"
+                   f";xferB/step={r['transfer_bytes_per_step']}"
+                   f";ttftSteps={r['ttft_steps_mean']:.1f}"
+                   f";aborts={r['adopt_aborts']}"
+                   f";converged={int(r['converged'])}")
+        emit_csv(f"serving/disagg_{r['adoption']},{r['us_per_step']:.1f},"
                  f"{derived}")
     for r in fault_rows:
         name = (f"serving/fault_{r['schedule']}"

@@ -21,7 +21,12 @@ quantized page-pool sweep ceiling-gates analytic traffic, floor-gates the
 resident-capacity gain (>=1.8x is an acceptance flag), and checks the int8
 greedy-identity + logit-error-budget flags; the tiered-memory sweep gates
 the swap counters both ways (an increase is thrashing, a decrease means
-the tier quietly disengaged) plus the swap-beats-recompute flags.  A
+the tier quietly disengaged) plus the swap-beats-recompute flags.  The
+disaggregation sweep ceiling-gates transfer traffic / aborts / TTFT,
+floor-gates adopted pages and avoided prefill steps, and checks the
+adoption acceptance flags (TTFT-with <= TTFT-without, bitwise stream
+identity against local prefill, coordination-only baseline moved zero
+bytes).  A
 gated counter missing from either report is a loud failure, and the run
 ends with a one-line-per-counter pass/fail table.
 
@@ -103,6 +108,19 @@ SWAP_COUNTERS = ("steps", "preempt_recompute")
 SWAP_FLOOR_COUNTERS = ("completed", "gen_tokens")
 SWAP_BIDIR_COUNTERS = ("swap_outs", "swap_ins", "preempt_swap")
 
+# Disaggregation sweep counters: role-aware routing, greedy decode and a
+# seeded arrival schedule make every adoption counter bit-identical across
+# reruns of the same commit.  Ceiling-gate the transfer traffic and waste
+# (more bytes shipped per step means the page-transfer path got fatter;
+# more aborts means the epoch check started losing races), the step count
+# and TTFT-in-steps; floor-gate the adoption wins (fewer adopted pages or
+# avoided prefill steps means the cross-replica path quietly disengaged)
+# and the completion counters.
+DISAGG_COUNTERS = ("steps", "transfer_bytes", "transfer_bytes_per_step",
+                   "adopt_aborts", "ttft_steps_mean")
+DISAGG_FLOOR_COUNTERS = ("adopted_pages", "prefill_steps_avoided",
+                         "completed", "gen_tokens")
+
 
 def rows_by_key(report: dict, mode: str) -> dict[tuple, dict]:
     return {(r["batch"], r["skew"]): r
@@ -139,6 +157,10 @@ def quant_rows_by_key(report: dict) -> dict[tuple, dict]:
 
 def swap_rows_by_key(report: dict) -> dict[tuple, dict]:
     return {(r["tier"],): r for r in report.get("swap", [])}
+
+
+def disagg_rows_by_key(report: dict) -> dict[tuple, dict]:
+    return {(r["adoption"],): r for r in report.get("disagg", [])}
 
 
 def timing_value(report: dict, key: tuple) -> tuple[float, str]:
@@ -394,6 +416,43 @@ def check(baseline: dict, current: dict, max_regression: float,
                            ("all_completed",
                             "memory-tier sweep completed all requests")):
             flag_ok = current.get("memory_tiers", {}).get(flag, False)
+            lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
+            ok = ok and flag_ok
+
+    # Disaggregation sweep: ceiling-gate the transfer traffic and TTFT,
+    # floor-gate the adoption wins, and check the acceptance flags — the
+    # adoption-on row must beat (or tie) the coordination-only row on TTFT
+    # while producing bitwise-identical token streams.
+    dbase = disagg_rows_by_key(baseline)
+    dcur = disagg_rows_by_key(current)
+    for key in sorted(dbase):
+        if key not in dcur:
+            ok = False
+            lines.append(f"MISSING disagg row {key} in current run")
+            continue
+        label = f"disagg {key[0]}"
+        for name in DISAGG_COUNTERS:
+            counter(label, name, dbase[key], dcur[key], max_regression)
+        for name in DISAGG_FLOOR_COUNTERS:
+            counter(label, name, dbase[key], dcur[key], max_regression,
+                    floor=True)
+    if dbase and "disagg" in current:
+        for flag, desc in (("adopted_pages_positive",
+                            "decode tier adopted > 0 published pages"),
+                           ("prefill_steps_avoided_positive",
+                            "adoption avoided > 0 prefill steps"),
+                           ("ttft_adopt_not_worse",
+                            "TTFT with adoption <= TTFT without"),
+                           ("streams_match",
+                            "adoption streams token-identical to local "
+                            "prefill"),
+                           ("baseline_never_adopts",
+                            "adoption-off row moved zero pages/bytes"),
+                           ("all_completed",
+                            "disagg sweep completed all requests"),
+                           ("all_converged",
+                            "disagg replicas bitwise converged")):
+            flag_ok = current.get("disaggregation", {}).get(flag, False)
             lines.append(f"{desc}: {'ok' if flag_ok else 'FAIL'}")
             ok = ok and flag_ok
 

@@ -87,6 +87,7 @@ class RunResult:
     prefill_mode: str = "replay"    # replay (token-by-token) | ragged
     shared_prefix_pages: int = 0    # prompt pages shared across (re-)prefills
     replicas: int = 1               # page-table metadata replicas
+    disaggregated: bool = False     # prefill/decode role-partitioned homes
     cross_replica_prefix_hits: int = 0  # prefix pages adopted from a peer
     page_sync_bytes: int = 0        # page-table anti-entropy wire bytes
     agent_failures: int = 0         # page-map failures hit by agent loops
@@ -177,7 +178,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
              kv: str = "dense", prefill: str = "replay",
              page_size: int = 64, chunk_size: int = 32, replicas: int = 1,
              spec_decode: str = "off", spec_k: int = 4,
-             kv_quant: str = "off",
+             kv_quant: str = "off", disaggregate: bool = False,
              time_fn=time.perf_counter) -> RunResult:
     """``kv="paged"`` backs the agents with the paged KV cache.
 
@@ -199,6 +200,9 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
     if kv_quant != "off" and kv != "paged":
         raise ValueError("--kv-quant requires --kv paged (quantized "
                          "layouts are page-pool layouts)")
+    if disaggregate and replicas < 2:
+        raise ValueError("--disaggregate requires --replicas >= 2 (one "
+                         "prefill home plus at least one decode home)")
     chunked = prefill in ("ragged", "chunked")
     if spec_decode not in ("off", "ngram", "doc"):
         raise ValueError(f"spec_decode must be off/ngram/doc, got "
@@ -256,7 +260,8 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
             pool_pages = (n_agents + replicas) * maxp
             mapper = ReplicatedPrefixPageMapper(
                 n_agents, maxp, page_size, trash_page=pool_pages,
-                replicas=replicas, num_pages=pool_pages)
+                replicas=replicas, num_pages=pool_pages,
+                disaggregate=disaggregate)
         else:
             pool_pages = (n_agents + 1) * maxp     # +maxp: remap transient
             mapper = PrefixPageMapper(n_agents, maxp, page_size,
@@ -755,6 +760,7 @@ def run_task(cfg: ModelConfig, params, task: TaskSpec, *, mode: str,
         kv_mode=kv, prefill_mode=prefill,
         shared_prefix_pages=mapper.shared_pages if mapper else 0,
         replicas=replicas,
+        disaggregated=disaggregate,
         cross_replica_prefix_hits=getattr(mapper, "cross_replica_hits", 0),
         page_sync_bytes=getattr(mapper, "sync_bytes", 0),
         agent_failures=stats["agent_fail"],
@@ -825,6 +831,12 @@ def main() -> None:
                     help="quantized page pools (requires --kv paged): pools "
                          "store int8/fp8 values plus per-row f32 scales and "
                          "decode dequantizes inside the fused page walk")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="prefill/decode role partition over the metadata "
+                         "replicas (requires --replicas >= 2): agent 0 "
+                         "homes on the prefill replica and publishes the "
+                         "shared task-header chain; the other agents home "
+                         "on decode replicas and adopt it cross-replica")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -835,7 +847,7 @@ def main() -> None:
                  prefill=args.prefill, page_size=args.page_size,
                  chunk_size=args.chunk_size, replicas=args.replicas,
                  spec_decode=args.spec_decode, spec_k=args.spec_k,
-                 kv_quant=args.kv_quant)
+                 kv_quant=args.kv_quant, disaggregate=args.disaggregate)
     for k, v in sorted(vars(r).items()):
         print(f"{k}: {v}")
 

@@ -23,6 +23,7 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import delta_apply as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lww_merge as _lww
+from repro.kernels import page_transfer as _pxfer
 from repro.kernels import paged_chunk_attention as _pchunk
 from repro.kernels import paged_decode_attention as _pdec
 from repro.kernels import paged_mla_decode as _pmla
@@ -461,6 +462,54 @@ def paged_mla_decode_quant(q_abs, q_rope, latent_pages, latent_scales,
         block_tables.astype(jnp.int32), pos.astype(jnp.int32),
         latent_new.astype(jnp.float32), r=r, scale=scale,
         qmax=_quant_qmax(latent_pages.dtype), interpret=not on_tpu)
+
+
+def _row_tileable(row: tuple, dtype) -> bool:
+    """True when a pool row can be VMEM-staged on TPU: lane dim a multiple
+    of 128 and sublane dim a multiple of the dtype's sublane count."""
+    if len(row) < 2:
+        return False
+    sublane = _SUBLANE.get(jnp.dtype(dtype), 8)
+    return row[-1] % 128 == 0 and row[-2] % sublane == 0
+
+
+def page_transfer(src_pool, dst_pool, src_ids, dst_ids, *,
+                  use_pallas: bool = True):
+    """Batched cross-pool page-row transfer (disaggregated adoption path).
+
+    src_pool: [Ps, ...row]; dst_pool: [Pd, ...row] (same row shape and
+    dtype); src_ids/dst_ids: i32[N] — lane i copies row ``src_ids[i]`` into
+    row ``dst_ids[i]``; -1 on either side drops the lane.  Returns the
+    updated destination pool; the copy is pure DMA, bitwise for any dtype.
+
+    The pool is never padded (same rationale as the paged attention
+    wrappers); rows the TPU cannot VMEM-stage — e.g. tiny scale leaves
+    [ps] / [Hkv, ps] — take the reference gather-scatter instead of
+    raising, since a DMA kernel buys nothing at that size.
+    """
+    if src_pool.shape[1:] != dst_pool.shape[1:] \
+            or src_pool.dtype != dst_pool.dtype:
+        raise ValueError(
+            f"page_transfer: pool rows do not match: src "
+            f"{tuple(src_pool.shape)} ({jnp.dtype(src_pool.dtype).name}) vs "
+            f"dst {tuple(dst_pool.shape)} ({jnp.dtype(dst_pool.dtype).name})")
+    if src_ids.shape != dst_ids.shape or src_ids.ndim != 1:
+        raise ValueError(
+            f"page_transfer: id vectors must be matching 1-D arrays, got "
+            f"src_ids {tuple(src_ids.shape)} vs dst_ids "
+            f"{tuple(dst_ids.shape)}")
+    if src_ids.shape[0] == 0:
+        return dst_pool
+    on_tpu = _on_tpu()
+    if not use_pallas or (on_tpu and not _row_tileable(src_pool.shape[1:],
+                                                       src_pool.dtype)):
+        return ref.page_transfer(src_pool, dst_pool,
+                                 src_ids.astype(jnp.int32),
+                                 dst_ids.astype(jnp.int32))
+    return _pxfer.page_transfer(src_pool, dst_pool,
+                                src_ids.astype(jnp.int32),
+                                dst_ids.astype(jnp.int32),
+                                interpret=not on_tpu)
 
 
 def linear_scan(a, b, h0, *, block_t: int = 128, use_pallas: bool = True):

@@ -605,3 +605,20 @@ def paged_span_restore(pool: jax.Array, snap: jax.Array,
         return pool.at[tgt, :, slot].set(snap.astype(pool.dtype),
                                          mode="drop")
     return pool.at[tgt, slot].set(snap.astype(pool.dtype), mode="drop")
+
+
+def page_transfer(src_pool: jax.Array, dst_pool: jax.Array,
+                  src_ids: jax.Array, dst_ids: jax.Array) -> jax.Array:
+    """Cross-pool page-row transfer oracle: lane i copies
+    ``src_pool[src_ids[i]]`` into ``dst_pool[dst_ids[i]]``; -1 on either
+    side drops the lane.  Pure gather + mode="drop" scatter, so the moved
+    rows are bitwise for any pool dtype and the rest of ``dst_pool`` is
+    untouched.  Pools need the same row shape/dtype but may differ in
+    page count.
+    """
+    p_src = src_pool.shape[0]
+    rows = src_pool[jnp.clip(src_ids, 0, p_src - 1)]
+    keep = (src_ids >= 0) & (dst_ids >= 0) & (dst_ids < dst_pool.shape[0])
+    tgt = jnp.where(keep, jnp.clip(dst_ids, 0, dst_pool.shape[0] - 1),
+                    dst_pool.shape[0])
+    return dst_pool.at[tgt].set(rows, mode="drop")

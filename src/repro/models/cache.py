@@ -477,6 +477,10 @@ def copy_pages(cache: Params, src: jax.Array, dst: jax.Array) -> Params:
     """
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
+    if src.shape != dst.shape or src.ndim != 1:
+        raise ValueError(
+            f"copy_pages: src/dst page-id vectors must be matching 1-D "
+            f"arrays: got src {tuple(src.shape)} vs dst {tuple(dst.shape)}")
 
     def cp(path, layout, layer):
         out = dict(layer)
@@ -495,6 +499,171 @@ def copy_pages(cache: Params, src: jax.Array, dst: jax.Array) -> Params:
         return out
 
     return map_layers(cache, cp, layouts=PAGED_LAYOUTS)
+
+
+# ---------------------------------------------------------------------------
+# Cross-pool page transfer (prefill/decode disaggregation)
+# ---------------------------------------------------------------------------
+#
+# Disaggregated serving moves *physical* page bytes between two engines'
+# caches: the prefill replica fills pages and publishes them through the
+# replicated prefix cache; the decode replica adopts the bytes instead of
+# recomputing the prefix.  All three primitives below iterate CacheSpec
+# pool leaves (_POOL_LEAF_NDIM), so dense/paged/MLA *and* quantized layouts
+# move pool rows + scale rows bitwise with zero call-site special-casing.
+
+def _leaf_mismatch(kind: str, path: tuple, layout: str, name: str,
+                   src, dst) -> ValueError:
+    return ValueError(
+        f"{kind}: pool leaf '{name}' of layer {'/'.join(path)} ({layout}) "
+        f"does not match: src {tuple(src.shape)} "
+        f"({jnp.dtype(src.dtype).name}) vs dst {tuple(dst.shape)} "
+        f"({jnp.dtype(dst.dtype).name})")
+
+
+def export_pages(cache: Params, pages) -> dict:
+    """Gather the physical rows of ``pages`` from every paged layer.
+
+    pages: i32[N] page ids (no -1 lanes: exports are explicit).  Returns
+    ``{'path/to/layer': {leaf: rows}}`` with rows shaped [N, ...] (stacked
+    layers keep their leading [G] axis: [G, N, ...]) — the host-transport
+    half of cross-pool adoption; pair with ``adopt_pages`` on the far side.
+    Device-to-device transfers should use ``copy_pages_across`` instead,
+    which never materializes the rows.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    out: dict = {}
+    for path, layout, layer in iter_layers(cache):
+        if layout not in PAGED_LAYOUTS:
+            continue
+        leaves = {}
+        for name in pool_leaves(layer, layout):
+            pool = layer[name]
+            stacked = pool.ndim == _POOL_LEAF_NDIM[layout][name] + 1
+            p = pool.shape[1] if stacked else pool.shape[0]
+            safe = jnp.clip(pages, 0, p - 1)
+            leaves[name] = pool[:, safe] if stacked else pool[safe]
+        out["/".join(path)] = leaves
+    return out
+
+
+def adopt_pages(cache: Params, rows: dict, pages) -> Params:
+    """Scatter ``rows`` (from a peer's ``export_pages`` at the same page
+    ids) into ``pages`` of this cache's pools.  -1 lanes drop.  Raises with
+    the offending layer name and both shapes on any leaf mismatch."""
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def ad(path, layout, layer):
+        key = "/".join(path)
+        got = rows.get(key)
+        if got is None:
+            raise ValueError(
+                f"adopt_pages: no exported rows for layer {key} ({layout})")
+        out = dict(layer)
+        for name in pool_leaves(layer, layout):
+            pool = layer[name]
+            src = got.get(name)
+            if src is None:
+                raise ValueError(
+                    f"adopt_pages: exported rows for layer {key} ({layout}) "
+                    f"are missing pool leaf '{name}'")
+            src = jnp.asarray(src)
+            stacked = pool.ndim == _POOL_LEAF_NDIM[layout][name] + 1
+            p = pool.shape[1] if stacked else pool.shape[0]
+            n = pages.shape[0]
+            want = ((pool.shape[0], n) + pool.shape[2:]) if stacked \
+                else ((n,) + pool.shape[1:])
+            if tuple(src.shape) != want or src.dtype != pool.dtype:
+                raise _leaf_mismatch("adopt_pages", path, layout, name,
+                                     src, pool)
+            tgt = jnp.where(pages >= 0, jnp.clip(pages, 0, p - 1), p)
+            if stacked:
+                out[name] = pool.at[:, tgt].set(src, mode="drop")
+            else:
+                out[name] = pool.at[tgt].set(src, mode="drop")
+        return out
+
+    return map_layers(cache, ad, layouts=PAGED_LAYOUTS)
+
+
+def copy_pages_across(src_cache: Params, dst_cache: Params, src,
+                      dst=None, *, use_pallas: bool = True
+                      ) -> tuple[Params, int]:
+    """Device-to-device page adoption: copy pool pages ``src[i]`` of
+    ``src_cache`` into pages ``dst[i]`` of ``dst_cache`` in every paged
+    layer (``dst`` defaults to ``src`` — the replicated server's pools
+    share one global page-id space).  -1 lanes drop.
+
+    Runs the batched Pallas gather-scatter transfer kernel per pool leaf
+    (``ops.page_transfer``), so the bytes move pool-row-at-a-time without
+    a host round-trip and land bitwise for every layout — quantized pools
+    carry their scale leaves automatically.  The two caches must agree on
+    layer structure and per-leaf row shape/dtype; page *counts* may differ.
+    Returns ``(updated dst_cache, bytes_moved)``.
+    """
+    from repro.kernels import ops as kops
+
+    src = jnp.asarray(src, jnp.int32)
+    dst = src if dst is None else jnp.asarray(dst, jnp.int32)
+    if src.shape != dst.shape or src.ndim != 1:
+        raise ValueError(
+            f"copy_pages_across: src/dst page-id vectors must be matching "
+            f"1-D arrays: got src {tuple(src.shape)} vs dst "
+            f"{tuple(dst.shape)}")
+    n_valid = int(np.asarray((src >= 0) & (dst >= 0)).sum())
+    src_layers = {path: (layout, layer)
+                  for path, layout, layer in iter_layers(src_cache)
+                  if layout in PAGED_LAYOUTS}
+    moved = 0
+
+    def xfer(path, layout, layer):
+        nonlocal moved
+        peer = src_layers.get(path)
+        if peer is None or peer[0] != layout:
+            raise ValueError(
+                f"copy_pages_across: source cache has no "
+                f"{layout} layer at {'/'.join(path)}"
+                + (f" (found {peer[0]})" if peer else ""))
+        s_layer = peer[1]
+        out = dict(layer)
+        for name in pool_leaves(layer, layout):
+            dpool = layer[name]
+            spool = s_layer.get(name)
+            if spool is None or spool.ndim != dpool.ndim \
+                    or spool.shape[1:] != dpool.shape[1:] \
+                    or spool.dtype != dpool.dtype:
+                raise _leaf_mismatch("copy_pages_across", path, layout,
+                                     name, spool if spool is not None
+                                     else jnp.zeros(()), dpool)
+            stacked = dpool.ndim == _POOL_LEAF_NDIM[layout][name] + 1
+            if stacked:
+                # Flatten the leading [G] axis into the page axis with
+                # per-group id offsets: one kernel call moves all groups.
+                g, p_s = spool.shape[0], spool.shape[1]
+                p_d = dpool.shape[1]
+                row = dpool.shape[2:]
+                off = jnp.arange(g, dtype=jnp.int32)[:, None]
+                sids = jnp.where(src[None, :] >= 0,
+                                 src[None, :] + off * p_s, -1).reshape(-1)
+                dids = jnp.where(dst[None, :] >= 0,
+                                 dst[None, :] + off * p_d, -1).reshape(-1)
+                newp = kops.page_transfer(
+                    spool.reshape((g * p_s,) + row),
+                    dpool.reshape((g * p_d,) + row),
+                    sids, dids, use_pallas=use_pallas)
+                out[name] = newp.reshape(dpool.shape)
+                page_bytes = g * int(np.prod(row, dtype=np.int64)) \
+                    * dpool.dtype.itemsize
+            else:
+                out[name] = kops.page_transfer(spool, dpool, src, dst,
+                                               use_pallas=use_pallas)
+                page_bytes = int(np.prod(dpool.shape[1:], dtype=np.int64)) \
+                    * dpool.dtype.itemsize
+            moved += page_bytes * n_valid
+        return out
+
+    out_cache = map_layers(dst_cache, xfer, layouts=PAGED_LAYOUTS)
+    return out_cache, moved
 
 
 # ---------------------------------------------------------------------------

@@ -111,6 +111,33 @@ def _no_double_free(server: repl.MultiEngineServer) -> bool:
                for r in range(server.replicas) if not server.crashed[r])
 
 
+def _xfer_balanced(server: repl.MultiEngineServer) -> tuple[bool, dict]:
+    """Transfer journal balance: after quiescence every ``J_XFER_BEGIN``
+    is closed by exactly one ``J_XFER_COMMIT`` or ``J_XFER_ABORT`` in the
+    same lane for the same (rid, page, seq).  Transfers are journaled in
+    the ADOPTER's lane, so an exporter crash cannot lose the closer — an
+    unbalanced journal means a transfer left the adopter in limbo."""
+    live = [r for r in range(server.replicas) if not server.crashed[r]]
+    store = server.stores[live[0]]
+    opens: dict[tuple, int] = {}
+    begins = commits = aborts = 0
+    for lane, rid, tag, a, b in store.journal_entries():
+        key = (lane, rid, a, b)
+        if tag == repl.J_XFER_BEGIN:
+            opens[key] = opens.get(key, 0) + 1
+            begins += 1
+        elif tag == repl.J_XFER_COMMIT:
+            opens[key] = opens.get(key, 0) - 1
+            commits += 1
+        elif tag == repl.J_XFER_ABORT:
+            opens[key] = opens.get(key, 0) - 1
+            aborts += 1
+    ok = all(v == 0 for v in opens.values())
+    detail = {"begins": begins, "commits": commits, "aborts": aborts,
+              "unbalanced": [list(k) for k, v in opens.items() if v != 0]}
+    return ok, detail
+
+
 def drain(server: repl.MultiEngineServer, max_rounds: int = 300) -> bool:
     """Quiesce (mirrors the simulator's two-phase scheme): heartbeats
     frozen — no engine steps, no ``maintain`` — gossip rounds until every
@@ -139,24 +166,46 @@ def run_chaos(cfg=None, params=None, *, schedule: str = "lossy",
               sync_every: int = 1, ttl: Optional[int] = None,
               crash_replica: Optional[int] = 1, crash_at: int = 4,
               count: int = 10, prompt_len: int = 12, new_tokens: int = 6,
-              max_queue: Optional[int] = None, max_steps: int = 3000
+              max_queue: Optional[int] = None, max_steps: int = 3000,
+              disagg: bool = False, xfer_crash: bool = False
               ) -> dict[str, Any]:
     """One seeded chaos trial.  Returns the JSON-able fault trace; the
-    headline verdict is ``trace["ok"]``."""
+    headline verdict is ``trace["ok"]``.
+
+    ``disagg=True`` runs a disaggregated topology (replica 0 prefill, the
+    rest decode) and staggers submissions so later requests arrive after
+    the prefill replica has published filled pages — routing sends them to
+    decode replicas, whose adoption hooks physically transfer the bytes.
+    ``xfer_crash=True`` additionally crash-stops the prefill replica in
+    the middle of its first exported transfer (``arm_transfer_crash``), so
+    the trial asserts the adopter rolled back cleanly (the rule-3 epoch
+    re-check aborted) on top of the usual invariants.
+    """
     if cfg is None:
         cfg, params = tiny_model()
     spec = SCHEDULES[schedule]
     channel = FaultyChannel(np.random.default_rng(seed + 1), spec)
+    roles = (["prefill"] + ["decode"] * (replicas - 1)) if disagg else None
     server = repl.MultiEngineServer(
         cfg, params, replicas=replicas, batch=batch, max_len=max_len,
         page_size=page_size, sync_every=sync_every, ttl=ttl,
-        chunk_size=chunk_size, channel=channel, max_queue=max_queue)
+        chunk_size=chunk_size, channel=channel, max_queue=max_queue,
+        roles=roles)
+    if xfer_crash:
+        server.arm_transfer_crash(0)       # exporter dies mid-transfer
+        crash_replica = None               # the transfer IS the crash event
     rng = np.random.default_rng(seed)
     requests = fanout_requests(rng, count, prompt_len, new_tokens)
     events: list[dict] = []
-    for req in requests:
+    pending = list(requests)
+    # Disaggregated mode staggers arrivals (one per step after the first
+    # batch) so the decode tier sees published pages; otherwise everything
+    # arrives at t=0 as before.
+    first_wave = batch if disagg else len(pending)
+    for req in pending[:first_wave]:
         events.append({"t": 0, "event": "submit", "rid": req.rid,
                        "replica": server.submit(req)})
+    pending = pending[first_wave:]
     conservation_ok = True
     steps = 0
     while steps < max_steps:
@@ -165,8 +214,14 @@ def run_chaos(cfg=None, params=None, *, schedule: str = "lossy",
             server.crash(crash_replica)
             events.append({"t": server.clock, "event": "crash",
                            "replica": crash_replica})
+        if pending and steps >= 1:
+            req = pending.pop(0)
+            events.append({"t": server.clock, "event": "submit",
+                           "rid": req.rid, "replica": server.submit(req)})
         more = server.step()
         steps += 1
+        if pending:
+            more = True                    # arrivals still queued here
         for r in range(server.replicas):
             if not server.crashed[r] and not _lane_conservation(server, r):
                 conservation_ok = False
@@ -178,23 +233,35 @@ def run_chaos(cfg=None, params=None, *, schedule: str = "lossy",
     once_ok, once_detail = _exactly_once(server)
     no_dfree = _no_double_free(server)
     converged = bool(server.converged() and channel.in_flight == 0)
+    xfer_ok, xfer_detail = _xfer_balanced(server)
+    invariants = {"exactly_once": once_ok, "converged": converged,
+                  "drained": drained,
+                  "lane_conservation": conservation_ok,
+                  "no_double_free": no_dfree,
+                  "xfer_journal_balanced": xfer_ok}
+    if xfer_crash:
+        # The armed crash must actually have fired mid-transfer, and the
+        # adopter must have aborted (rolled its provisional share back).
+        invariants["xfer_crash_fired"] = bool(server._xfer_crash is None)
+        invariants["adopter_rolled_back"] = bool(server.adopt_aborts >= 1)
+    elif disagg:
+        # No-crash disagg run: the decode tier must actually have adopted.
+        invariants["pages_adopted"] = bool(server.transferred_pages > 0)
     trace = {
         "schedule": schedule, "seed": seed, "replicas": replicas,
         "crash_replica": crash_replica, "crash_at": crash_at,
+        "disagg": disagg, "xfer_crash": xfer_crash,
         "steps": steps, "hit_max_steps": steps >= max_steps,
         "events": events,
         "channel": {"sent": channel.sent, "dropped": channel.dropped,
                     "duplicated": channel.duplicated,
                     "in_flight": channel.in_flight},
         "server": server.stats(),
-        "invariants": {"exactly_once": once_ok, "converged": converged,
-                       "drained": drained,
-                       "lane_conservation": conservation_ok,
-                       "no_double_free": no_dfree},
+        "invariants": invariants,
         "exactly_once_detail": once_detail,
+        "xfer_detail": xfer_detail,
     }
-    trace["ok"] = bool(once_ok and converged and drained
-                       and conservation_ok and no_dfree
+    trace["ok"] = bool(all(invariants.values())
                        and not trace["hit_max_steps"])
     return trace
 
@@ -210,13 +277,20 @@ def main(argv=None) -> int:
     ap.add_argument("--no-crash", action="store_true")
     ap.add_argument("--count", type=int, default=10)
     ap.add_argument("--ttl", type=int, default=None)
+    ap.add_argument("--disagg", action="store_true",
+                    help="prefill/decode roles + staggered arrivals")
+    ap.add_argument("--xfer-crash", action="store_true",
+                    help="crash the prefill exporter mid-transfer "
+                         "(implies --disagg)")
     ap.add_argument("--out", default=None, help="fault-trace JSON path")
     args = ap.parse_args(argv)
     trace = run_chaos(schedule=args.schedule, seed=args.seed,
                       replicas=args.replicas, ttl=args.ttl,
                       crash_replica=None if args.no_crash
                       else args.crash_replica,
-                      crash_at=args.crash_at, count=args.count)
+                      crash_at=args.crash_at, count=args.count,
+                      disagg=args.disagg or args.xfer_crash,
+                      xfer_crash=args.xfer_crash)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(trace, f, indent=2, default=int)
@@ -225,7 +299,10 @@ def main(argv=None) -> int:
     print(f"chaos[{args.schedule} seed={args.seed}] {verdicts} "
           f"recovered={trace['server']['recovered_requests']} "
           f"shed={trace['server']['shed']} "
-          f"retried={trace['server']['retried']}")
+          f"retried={trace['server']['retried']} "
+          f"xfer={trace['xfer_detail']['begins']}b/"
+          f"{trace['xfer_detail']['commits']}c/"
+          f"{trace['xfer_detail']['aborts']}a")
     return 0 if trace["ok"] else 1
 
 

@@ -82,6 +82,7 @@ from repro.core import counter as counter_mod
 from repro.core import delta as delta_mod
 from repro.core import gset, lww
 from repro.core.clock import MAX_CLIENTS, MAX_CLOCK
+from repro.models import cache as cache_mod
 from repro.serving import scheduler as sched_mod
 
 HASH_BITS = 62
@@ -96,8 +97,15 @@ HASH_BITS = 62
 #   GEN    : a = output index, b = token        (one entry per decode step)
 #   DONE / SHED / EXPIRED / FAIL : terminal markers (DONE: a = output len)
 #   ADOPT  : a = retry count — a survivor took ownership after retirement
+#   XFER_BEGIN / XFER_COMMIT / XFER_ABORT : physical page adoption
+#     (disaggregation): a = page, b = publishing lease seq, rid = the
+#     adopting request.  Every BEGIN is closed by exactly one COMMIT or
+#     ABORT in the same lane — the chaos harness asserts the balance, and
+#     an ABORT means the adopter rolled back (the page was never bound to
+#     a row, so discarding the staged bytes is the whole rollback).
 (J_ACCEPT, J_PROMPT, J_GEN, J_DONE,
- J_SHED, J_EXPIRED, J_ADOPT, J_FAIL) = range(8)
+ J_SHED, J_EXPIRED, J_ADOPT, J_FAIL,
+ J_XFER_BEGIN, J_XFER_COMMIT, J_XFER_ABORT) = range(11)
 
 JOURNAL_FIELDS = {"rid": ((), np.int32), "tag": ((), np.int32),
                   "a": ((), np.int32), "b": ((), np.int32)}
@@ -655,12 +663,21 @@ class ReplicatedPrefixCache(sched_mod.PrefixCache):
     (same OrderedDict LRU, same generation validation — the generation now
     being the page's replicated lease epoch).  On top of that, full chain
     pages this replica OWNS are published to the replicated prefix map, and
-    ``lookup`` probes the map for prompt pages resident on peers.  Remote
-    hits are accounted in ``cross_replica_hits`` — the coordination-layer
-    signal the bench gates on; engines do not adopt a peer's physical KV
-    yet (each engine owns a separate device pool — ROADMAP follow-on),
-    while the simulator's abstract replicas adopt for real via
-    ``resolve_remote``.
+    ``resolve_remote`` probes the map for prompt pages resident on peers.
+    ``cross_replica_hits`` counts *committed* uses of a remote page — the
+    share/adoption survived the rule-3 epoch re-check — not raw resolves,
+    so the bench counter only ever counts usable hits.
+
+    Physical adoption needs one more fact registration cannot carry: the
+    local cache registers at reservation time, before the owner's chunk
+    writes land the bytes.  ``mark_filled`` records (page → lease seq) once
+    this engine has physically written a page, and cross-replica
+    publication is DEFERRED until then — the replicated map only ever
+    advertises pages whose bytes landed, so it implicitly carries the
+    data-plane readiness flag an RDMA transport would signal out of band.
+    (Adopters still re-check the exporter's ``filled_seq`` before
+    transferring: a later re-registration of the same prefix may have
+    re-homed the map entry onto a page mid-write.)
     """
 
     def __init__(self, allocator: ReplicatedPageAllocator, page_size: int,
@@ -669,14 +686,46 @@ class ReplicatedPrefixCache(sched_mod.PrefixCache):
         self.store = allocator.store
         self.cross_replica_hits = 0
         self.published = 0
+        self.filled: dict[int, int] = {}   # page -> lease seq at fill time
+        self._pending: dict[int, tuple[int, int]] = {}  # page -> (hash, seq)
+
+    def mark_filled(self, pages: list[int]) -> None:
+        """Record that this engine's pool physically holds ``pages``' bytes
+        (called by the scheduler once the covering writes have landed, and
+        by the server after a committed transfer), and flush any deferred
+        publication for them."""
+        for pg in pages:
+            pg = int(pg)
+            _owner, seq = self.store.lease(pg)
+            self.filled[pg] = seq
+            pend = self._pending.pop(pg, None)
+            if pend is not None and pend[1] == seq:
+                self._do_publish(pend[0], pg, seq)
+
+    def filled_seq(self, page: int) -> Optional[int]:
+        """The lease seq this engine's bytes for ``page`` were written
+        under, or None if unwritten / stale (the epoch moved since: the
+        page was freed-to-zero or re-homed, so the bytes are garbage)."""
+        seq = self.filled.get(int(page))
+        if seq is None:
+            return None
+        _owner, cur = self.store.lease(int(page))
+        return seq if cur == seq else None
+
+    def _do_publish(self, h: int, page: int, seq: int) -> None:
+        self.store.publish_prefix(h, page, seq)
+        self._allocator.mark_exported(page)
+        self.published += 1
 
     def _publish_page(self, key: tuple, page: int) -> None:
         owner, seq = self.store.lease(page)
         if owner != self.store.rid:
             return                         # only the lease owner publishes
-        self.store.publish_prefix(prefix_hash(key), page, seq)
-        self._allocator.mark_exported(page)
-        self.published += 1
+        h = prefix_hash(key)
+        if self.filled_seq(page) == seq:
+            self._do_publish(h, page, seq)
+        else:                              # bytes not landed yet: defer to
+            self._pending[page] = (h, seq)  # mark_filled (publish-on-fill)
 
     def _publish_chain(self, tokens: list[int], pages: list[int]) -> None:
         ps = self.page_size
@@ -713,17 +762,10 @@ class ReplicatedPrefixCache(sched_mod.PrefixCache):
             return None
         return owner, page, seq
 
-    def lookup(self, tokens: list[int], *, boundary: bool = True
-               ) -> list[int]:
-        local = super().lookup(tokens, boundary=boundary)
-        ps = self.page_size
-        n_full = len(tokens) // ps
-        for k in range(min(len(local), n_full) + 1, n_full + 1):
-            hit = self.resolve_remote(tuple(tokens[:k * ps]))
-            if hit is None or hit[0] == self.store.rid:
-                break
-            self.cross_replica_hits += 1
-        return local
+    # NOTE: ``lookup`` is the inherited local-only longest-prefix match.
+    # Remote continuation is the server's adoption hook: it resolves,
+    # transfers the physical bytes, and bumps ``cross_replica_hits`` only
+    # on commit — a resolve the epoch re-check aborts is not a usable hit.
 
 
 # ---------------------------------------------------------------------------
@@ -798,9 +840,22 @@ class MultiEngineServer:
                  journal_capacity: int = 256,
                  max_queue: Optional[int] = None, max_retries: int = 2,
                  adopt_grace: Optional[int] = None,
+                 roles: Optional[list] = None,
+                 adopt_pages: bool = True,
                  **engine_kwargs):
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if roles is None:
+            roles = ["mixed"] * replicas
+        roles = list(roles)
+        if len(roles) != replicas:
+            raise ValueError(f"roles must name every replica: got "
+                             f"{len(roles)} roles for {replicas} replicas")
+        for role in roles:
+            if role not in ("prefill", "decode", "mixed"):
+                raise ValueError(f"role must be prefill/decode/mixed, "
+                                 f"got {role!r}")
+        self.roles = roles
         self.replicas = replicas
         self.sync_every = sync_every
         maxp = -(-max_len // page_size)
@@ -832,8 +887,24 @@ class MultiEngineServer:
                 prefix_cache=self.caches[r], max_queue=max_queue,
                 journal=(lambda rr: lambda kind, req:
                          self._journal(rr, kind, req))(r),
+                role=roles[r],
                 **engine_kwargs)
             for r in range(replicas)]
+        # Disaggregation data plane: decode/mixed replicas adopt published
+        # physical pages from peers at admission (prefill replicas only
+        # export).  The hook runs the rule-3 share + transfer + commit
+        # dance; see ``_adopt``.  ``adopt_pages=False`` keeps the
+        # coordination layer (publication, routing) but never moves bytes —
+        # the local-prefill baseline the disagg bench compares against.
+        if adopt_pages:
+            for r, eng in enumerate(self.engines):
+                if eng.role != "prefill":
+                    eng.adopt_hook = (lambda rr: lambda rid, ctx, shared:
+                                      self._adopt(rr, rid, ctx, shared))(r)
+        self.transfer_bytes = 0            # physical bytes moved by adoption
+        self.transferred_pages = 0         # committed page transfers
+        self.adopt_aborts = 0              # rule-3 aborts (epoch moved/crash)
+        self._xfer_crash: Optional[tuple[int, int]] = None
         self.clock = 0
         self.syncs = 0
         self._rr = 0
@@ -872,23 +943,174 @@ class MultiEngineServer:
         return any(t == J_DONE and r == rid
                    for _, r, t, _a, _b in store.journal_entries())
 
-    def submit(self, req: sched_mod.Request) -> int:
-        """Round-robin dispatch over live replicas; journals the request
-        descriptor in the accepting replica's lane.  Returns the replica."""
-        for _ in range(self.replicas):
-            r = self._rr
-            self._rr = (self._rr + 1) % self.replicas
-            if self.crashed[r] or self.allocators[r].halted:
+    # -- physical page adoption (prefill/decode disaggregation) -------------
+
+    def arm_transfer_crash(self, exporter: int, after: int = 0) -> None:
+        """Chaos hook: crash-stop ``exporter`` in the middle of its
+        (``after``+1)-th exported page transfer — after the adopter's
+        provisional share and BEGIN journal entry, before the commit check
+        — so the epoch re-check must abort and roll the adopter back."""
+        self._xfer_crash = (exporter, after)
+
+    def _adopt(self, r: int, rid: int, ctx: list,
+               shared: list) -> tuple[list, list, int]:
+        """Admission-time adoption hook for decode/mixed replica ``r``.
+
+        Walks the prompt's full-page chain.  Position k's page is, in
+        order of preference: the locally shared page if this engine's pool
+        already holds its bytes (``filled_seq``); otherwise a peer-published
+        page (validated resolve — hash/epoch/owner-live, as
+        ``resolve_remote``) whose exporter reports the bytes landed, pulled
+        by the rule-3 dance — provisional ``share``, physical
+        ``copy_pages_across`` into this engine's pool, then commit iff the
+        publishing epoch is unchanged and the exporter survived the
+        transfer.  An unfilled local page with no adoptable peer copy
+        breaks the covered chain; the remaining locally shared pages are
+        kept as plain mapping targets (the admission stream rewrites them
+        with identical bytes), exactly as before.  An aborted transfer
+        drops the provisional reference and discards the staged bytes: the
+        page was never bound to a row, so the adopter state is untouched.
+        Every transfer is journaled (BEGIN then COMMIT/ABORT) in this
+        replica's lane under the adopting request's rid.
+
+        Returns ``(lead_pages, adopted_pages, covered_tokens)``: the row's
+        full leading page chain (every page already ref-held here — kept
+        locals are shared by this hook, adopted pages by the rule-3
+        commit), the subset that was physically transferred, and how many
+        leading prompt positions are physically cached in this pool.
+        """
+        eng = self.engines[r]
+        cache = self.caches[r]
+        alloc = self.allocators[r]
+        store = self.stores[r]
+        ps = cache.page_size
+        lead: list = []
+        adopted: list = []
+        covered_pages = 0
+        chain_live = True
+        can_adopt = not alloc.halted and not alloc.fenced(alloc.now)
+        n_full = len(ctx) // ps
+        for k in range(1, max(n_full, len(shared)) + 1):
+            local = shared[k - 1] if k <= len(shared) else None
+            if chain_live and local is not None \
+                    and cache.filled_seq(local) is not None:
+                lead.append(local)
+                covered_pages = k
                 continue
-            store = self.stores[r]
-            store.journal_append(
-                req.rid, J_ACCEPT,
-                (len(req.prompt) << 16) | req.max_new_tokens,
-                0 if req.eos_id is None else req.eos_id + 1)
-            for i, t in enumerate(req.prompt):
-                store.journal_append(req.rid, J_PROMPT, i, t)
-            self.engines[r].submit(req)
-            return r
+            if chain_live and can_adopt and k <= n_full:
+                page = self._pull_page(r, rid, tuple(ctx[:k * ps]), lead)
+                if page is not None:
+                    lead.append(page)
+                    adopted.append(page)
+                    covered_pages = k
+                    continue
+            chain_live = False
+            if local is None:
+                break
+            lead.append(local)             # mapping-only use past the break
+        kept = [p for p in lead if p not in set(adopted)]
+        if kept:
+            alloc.share(kept)
+        return lead, adopted, covered_pages * ps
+
+    def _pull_page(self, r: int, rid: int, key: tuple,
+                   lead: list) -> Optional[int]:
+        """One rule-3 physical pull for the chain page covering ``key``;
+        returns the committed page or None (no adoptable copy / abort)."""
+        eng = self.engines[r]
+        cache = self.caches[r]
+        alloc = self.allocators[r]
+        store = self.stores[r]
+        hit = cache.resolve_remote(key)
+        if hit is None:
+            return None
+        owner, page, seq = hit
+        if owner == r or self.crashed[owner] or page in lead:
+            return None
+        if self.caches[owner].filled_seq(page) != seq:
+            return None                    # map entry re-homed mid-write
+        alloc.share([page])
+        store.journal_append(rid, J_XFER_BEGIN, page, seq)
+        newc, nb = cache_mod.copy_pages_across(
+            self.engines[owner].cache, eng.cache, [page])
+        if self._xfer_crash is not None and self._xfer_crash[0] == owner:
+            exp, after = self._xfer_crash
+            if after <= 0:
+                self._xfer_crash = None
+                self.crash(owner)          # exporter dies mid-transfer
+            else:
+                self._xfer_crash = (exp, after - 1)
+        if self.crashed[owner] or store.lease(page) != (owner, seq):
+            store.ref_sub(page)            # roll the provisional share back
+            store.journal_append(rid, J_XFER_ABORT, page, seq)
+            self.adopt_aborts += 1
+            return None
+        eng.cache = newc
+        store.journal_append(rid, J_XFER_COMMIT, page, seq)
+        cache.mark_filled([page])
+        cache.cross_replica_hits += 1
+        self.transferred_pages += 1
+        self.transfer_bytes += nb
+        return page
+
+    # -- request routing ----------------------------------------------------
+
+    def _prefix_published(self, prompt: list) -> bool:
+        """Routing probe: does any live replica's view publish this
+        prompt's first full page?  (Unvalidated — a routing heuristic, not
+        an adoption decision.)"""
+        ps = self.caches[0].page_size
+        if len(prompt) < ps:
+            return False
+        h = prefix_hash(tuple(prompt[:ps]))
+        return any(self.stores[r].lookup_prefix(h) is not None
+                   for r in range(self.replicas) if not self.crashed[r])
+
+    def _accept(self, r: int, req: sched_mod.Request) -> int:
+        store = self.stores[r]
+        store.journal_append(
+            req.rid, J_ACCEPT,
+            (len(req.prompt) << 16) | req.max_new_tokens,
+            0 if req.eos_id is None else req.eos_id + 1)
+        for i, t in enumerate(req.prompt):
+            store.journal_append(req.rid, J_PROMPT, i, t)
+        self.engines[r].submit(req)
+        return r
+
+    def submit(self, req: sched_mod.Request) -> int:
+        """Dispatch a request to a live replica; journals the descriptor in
+        the accepting replica's lane.  Returns the replica.
+
+        All-mixed topology: plain round-robin.  Disaggregated topology:
+        cold prompts (no replica publishes their first page yet) go to
+        prefill-role replicas, warm prompts to decode-role replicas — whose
+        adoption hook pulls the published pages — with mixed replicas as
+        second choice and any live replica as the last resort, so a
+        one-sided crash degrades to the old behavior instead of rejecting.
+        """
+        if all(role == "mixed" for role in self.roles):
+            for _ in range(self.replicas):
+                r = self._rr
+                self._rr = (self._rr + 1) % self.replicas
+                if self.crashed[r] or self.allocators[r].halted:
+                    continue
+                return self._accept(r, req)
+            raise RuntimeError("no live replica to accept the request")
+        want = ("decode" if self._prefix_published(req.prompt)
+                else "prefill")
+        tiers = ([r for r in range(self.replicas) if self.roles[r] == want],
+                 [r for r in range(self.replicas)
+                  if self.roles[r] == "mixed"],
+                 [r for r in range(self.replicas)
+                  if self.roles[r] not in (want, "mixed")])
+        start = self._rr
+        self._rr += 1
+        for tier in tiers:
+            for i in range(len(tier)):
+                r = tier[(start + i) % len(tier)]
+                if self.crashed[r] or self.allocators[r].halted:
+                    continue
+                return self._accept(r, req)
         raise RuntimeError("no live replica to accept the request")
 
     # -- gossip through the channel -----------------------------------------
@@ -1100,11 +1322,16 @@ class MultiEngineServer:
                "recovered_complete": self.recovered_complete,
                "failed_requests": self.failed_requests,
                "lost_requests": self.lost_requests,
-               "dup_done_suppressed": self.dup_done_suppressed}
+               "dup_done_suppressed": self.dup_done_suppressed,
+               "transferred_pages": self.transferred_pages,
+               "transfer_bytes": self.transfer_bytes,
+               "adopt_aborts": self.adopt_aborts}
         for key in ("admitted", "completed", "gen_tokens", "prefill_tokens",
                     "shared_pages", "cow_copies", "preemptions",
                     "prefill_chunks", "decode_stall_steps",
-                    "shed", "expired", "retried", "preempt_fenced"):
+                    "shed", "expired", "retried", "preempt_fenced",
+                    "adopted_pages", "adopted_tokens",
+                    "prefill_steps_avoided"):
             out[key] = sum(e.stats[key] for e in self.engines)
         return out
 
@@ -1140,9 +1367,12 @@ class ReplicatedPrefixPageMapper:
     def __init__(self, num_rows: int, maxp: int, page_size: int,
                  trash_page: int, *, replicas: int = 2,
                  num_pages: Optional[int] = None,
-                 delta_capacity: int = 32):
+                 delta_capacity: int = 32, disaggregate: bool = False):
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if disaggregate and replicas < 2:
+            raise ValueError("disaggregate requires >= 2 metadata replicas "
+                             "(one prefill home + decode homes)")
         num_pages = (num_rows + replicas) * maxp if num_pages is None \
             else num_pages
         if trash_page < num_pages:
@@ -1169,10 +1399,19 @@ class ReplicatedPrefixPageMapper:
         self._row_pages: list[list[int]] = [[] for _ in range(num_rows)]
         self.shared_pages = 0
         self.cross_replica_hits = 0
+        self.disaggregate = disaggregate
         self.now = 0
         self._dirty = True
 
     def _domain(self, row: int) -> int:
+        # Disaggregated homing (orchestrator ``--disaggregate``): agent 0 —
+        # the first to map the shared task header — homes on the prefill
+        # domain 0 and publishes the header chain; every other agent homes
+        # on a decode domain, so its header hits are cross-replica
+        # adoptions of domain 0's filled pages rather than same-domain
+        # local shares.  Default: round-robin.
+        if self.disaggregate:
+            return 0 if row == 0 else 1 + (row - 1) % (self.replicas - 1)
         return row % self.replicas
 
     def map_row(self, row: int, tokens: list[int], horizon: int) -> int:
@@ -1212,6 +1451,16 @@ class ReplicatedPrefixPageMapper:
         if old:
             alloc.free(old)               # after remap: self-prefix shares
         cache.register(tokens[:n_write * ps], pages[:n_write])
+        # The pool is physically shared and the row replays its own prompt
+        # through the serve step, so the chain's bytes land in place —
+        # mark filled here to flush the deferred (publish-on-fill)
+        # publication for the pages this domain owns.
+        cache.mark_filled(pages[:n_write])
+        if self.disaggregate and d == 0 and n_write:
+            # Prefill tier notifies on fill (as a disaggregated deployment
+            # would): push the publication to the decode homes eagerly so
+            # their very next map can adopt instead of re-allocating.
+            self.gossip()
         self.shared_pages += len(shared)
         self._dirty = True
         return len(shared)

@@ -341,13 +341,27 @@ class ContinuousBatchingEngine:
                  spec_decode: str = "off", spec_k: int = 4,
                  drafter: Optional[Any] = None,
                  kv_quant: str = "off", swap_tier_pages: int = 0,
-                 swap_min_tokens: Optional[int] = None):
+                 swap_min_tokens: Optional[int] = None,
+                 role: str = "mixed"):
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.max_len = max_len
         self.paged = paged
         self.page_size = page_size
+        if role not in ("prefill", "decode", "mixed"):
+            raise ValueError(f"role must be prefill/decode/mixed, "
+                             f"got {role!r}")
+        # Disaggregation hint: "prefill" replicas take cold prompts and
+        # publish filled pages; "decode"/"mixed" replicas may install an
+        # ``adopt_hook`` (server-side) that pulls published physical pages
+        # into this engine's pool at admission, skipping the covered
+        # prefill.  The hook is ``(rid, ctx, shared) -> (lead_pages,
+        # adopted_pages, covered_tokens)``: the row's full leading page
+        # chain (every page already ref-held by the hook), the subset that
+        # was physically transferred, and the cached leading positions.
+        self.role = role
+        self.adopt_hook = None
         self.temperature = temperature
         self.prefix_sharing = prefix_sharing and paged
         self.chunk_size = max(1, min(chunk_size, max_len))
@@ -494,7 +508,12 @@ class ContinuousBatchingEngine:
                       # Tiered page memory: pages moved across tiers plus
                       # how each preemption resolved (swap vs recompute).
                       "swap_outs": 0, "swap_ins": 0,
-                      "preempt_swap": 0, "preempt_recompute": 0}
+                      "preempt_swap": 0, "preempt_recompute": 0,
+                      # Disaggregation: physical pages adopted from peer
+                      # pools, prompt tokens those pages covered, and
+                      # prefill chunk steps that adoption skipped.
+                      "adopted_pages": 0, "adopted_tokens": 0,
+                      "prefill_steps_avoided": 0}
 
     # -- request lifecycle --------------------------------------------------
 
@@ -636,6 +655,22 @@ class ContinuousBatchingEngine:
         """Pages covering context positions [0, n_tokens)."""
         return -(-n_tokens // self.page_size)
 
+    def _mark_filled(self, req: Request, upto: Optional[int] = None) -> None:
+        """Tell a filled-page-tracking prefix cache (replicated serving)
+        which of this row's pages physically hold their bytes.  Pages are
+        *published* at reservation time, before the chunk writes land, so
+        physical adoption gates on this — the host-local ``PrefixCache``
+        has no ``mark_filled`` and metadata-only sharing skips the call."""
+        if self.prefix_cache is None:
+            return
+        mf = getattr(self.prefix_cache, "mark_filled", None)
+        if mf is None or not req.pages:
+            return
+        n = int(req.filled if upto is None else upto)
+        pages = req.pages[:n // self.page_size]
+        if pages:
+            mf(pages)
+
     def admit(self) -> int:
         """Bind queued requests to free rows (chunk-granular reservation).
 
@@ -669,6 +704,7 @@ class ContinuousBatchingEngine:
             req = self.queue[cand]
             ctx = req.context
             swapped = bool(req.swap_slots)
+            covered = 0
             if self.paged and swapped:
                 # Swapped-out victim: pull its saved pages back from the
                 # host tier into fresh device pages and resume from the
@@ -698,11 +734,35 @@ class ContinuousBatchingEngine:
                 res = self.allocator.reserve(need)
                 if res is None:
                     break                      # wait for completions
-                if shared:
+                lead = shared
+                if self.prefix_sharing and self.adopt_hook is not None:
+                    # Disaggregated adoption: the hook walks the prompt's
+                    # page chain, keeping filled locally shared pages and
+                    # pulling published peer pages (physical transfer +
+                    # rule-3 commit) where the local copy is missing or
+                    # unwritten.  It returns the row's full leading chain
+                    # with every page already ref-held, so the plain
+                    # ``share(shared)`` below is skipped.  ``covered``
+                    # prompt positions are then already cached, so
+                    # admission streams only the tail, exactly like
+                    # swap-in.  Runs after ``reserve`` so a page-budget
+                    # miss never strands a committed transfer.
+                    lead, adopted, covered = self.adopt_hook(
+                        req.rid, ctx, shared)
+                    covered = max(0, min(covered, len(ctx) - 1))
+                    self.stats["shared_pages"] += len(lead) - len(adopted)
+                    if adopted:
+                        self.stats["adopted_pages"] += len(adopted)
+                    if covered:
+                        self.stats["adopted_tokens"] += covered
+                        full = -(-len(ctx) // self.chunk_size)
+                        rest = -(-(len(ctx) - covered) // self.chunk_size)
+                        self.stats["prefill_steps_avoided"] += full - rest
+                elif shared:
                     self.allocator.share(shared, row=row)
                     self.stats["shared_pages"] += len(shared)
-                req.pages = shared + res.take()
-                req.safe_upto = min(len(shared) * self.page_size, len(ctx))
+                req.pages = lead + res.take()
+                req.safe_upto = min(len(lead) * self.page_size, len(ctx))
                 self.host_bt[row, :] = self.trash_page
                 self.host_bt[row, :len(req.pages)] = req.pages
                 self._bt_dirty = True
@@ -733,6 +793,12 @@ class ContinuousBatchingEngine:
                 self.row_pos[row] = req.swap_tokens
                 req.swap_slots = []
                 req.swap_tokens = 0
+                self._mark_filled(req)
+            elif covered:
+                # Adopted/filled shared pages already hold positions
+                # [0, covered): same tail-only admission as swap-in.
+                req.filled = covered
+                self.row_pos[row] = covered
             reset_rows.append(row)
             admitted += 1
         if admitted:
@@ -1166,6 +1232,7 @@ class ContinuousBatchingEngine:
                     if self.paged:
                         self._rollback_tail_pages(row, pos0 + n_app,
                                                   pos0 + int(spans[row]))
+                self._mark_filled(req, upto=int(self.row_pos[row]))
                 if self._done(req):
                     self._free_row(row)
                     freed = True
@@ -1176,6 +1243,7 @@ class ContinuousBatchingEngine:
                 chunks += 1
                 self.stats["prefill_tokens"] += int(spans[row])
                 if req.admitting:
+                    self._mark_filled(req)
                     continue                  # mid-prompt logits: discarded
                 # Admission complete: this chunk's last logits sampled the
                 # request's first token.  TTFT is recorded below, guarded,
@@ -1183,6 +1251,7 @@ class ContinuousBatchingEngine:
                 # time-to-first-token.
                 if self.prefix_sharing and not req.tokens:
                     self.prefix_cache.register(req.prompt, req.pages)
+            self._mark_filled(req, upto=int(self.row_pos[row]))
             self.token[row] = int(sampled[row])
             req.tokens.append(int(sampled[row]))
             self.stats["gen_tokens"] += 1

@@ -279,6 +279,9 @@ class SimReplica:
             p = pages[0]
             req.owned.append(p)
             self._write(p, now)
+            # The abstract write above already landed the page's bytes, so
+            # publication is immediate (publish-on-fill, as the engine path).
+            self.cache.mark_filled([p])
             self.cache._publish_page(key, p)
         self.requests[req.rid] = req
         self.counters["admitted"] += 1

@@ -213,8 +213,9 @@ def _pool_leaf_bytes(cache):
     return out
 
 
-def _quant_prefilled(cfg, params, mode, batch=2, max_len=32, ps=8, plen=10):
-    rng = np.random.default_rng(0)
+def _quant_prefilled(cfg, params, mode, batch=2, max_len=32, ps=8, plen=10,
+                     seed=0):
+    rng = np.random.default_rng(seed)
     cache = lm.init_cache(cfg, batch, max_len, dtype=jnp.float32,
                           paged=True, page_size=ps, kv_quant=mode)
     cache = lm.set_block_tables(
@@ -268,6 +269,76 @@ def test_swap_pool_roundtrip_bitwise_on_quant_pools(llm, mode):
     assert _pool_leaf_bytes(clob) != before
     back = cache_mod.swap_in_pages(clob, swap_pool, slots, pages)
     assert _pool_leaf_bytes(back) == before
+
+
+# ---------------------------------------------------------------------------
+# Cross-pool page movement (disaggregation transfer primitive)
+# ---------------------------------------------------------------------------
+
+def _page_rows(cache, pages):
+    """{(path, leaf): raw bytes} of the given pool pages — scale rows travel
+    with their payload rows, so a quantized page is only 'moved' when BOTH
+    land bitwise."""
+    out = {}
+    for path, layout, layer in cache_mod.iter_layers(cache):
+        for name in cache_mod.pool_leaves(layer, layout):
+            leaf = np.asarray(layer[name])
+            core = cache_mod._POOL_LEAF_NDIM[layout][name]
+            rows = leaf[:, pages] if leaf.ndim == core + 1 else leaf[pages]
+            out[path + (name,)] = rows.tobytes()
+    return out
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_copy_pages_across_distinct_quant_pools_bitwise(llm, mode):
+    """The disaggregation data plane: pool rows AND scale rows of a
+    quantized page land bitwise in a DIFFERENT engine's pool, and every
+    untouched destination page keeps its prior bytes."""
+    cfg, params = llm
+    src, _ = _quant_prefilled(cfg, params, mode)
+    dst, _ = _quant_prefilled(cfg, params, mode, seed=9)
+    src_ids, dst_ids = [0, 4], [2, 6]
+    assert _page_rows(src, src_ids) != _page_rows(dst, dst_ids)
+    newdst, moved = cache_mod.copy_pages_across(src, dst, src_ids, dst_ids)
+    assert moved > 0
+    assert _page_rows(newdst, dst_ids) == _page_rows(src, src_ids)
+    others = [p for p in range(8) if p not in dst_ids]
+    assert _page_rows(newdst, others) == _page_rows(dst, others)
+
+
+@pytest.mark.parametrize("mode", QMODES)
+def test_export_adopt_roundtrip_quant_bitwise(llm, mode):
+    """Host-transport half (export on the prefill side, adopt on the
+    decode side) moves quantized pages bitwise across distinct pools."""
+    cfg, params = llm
+    src, _ = _quant_prefilled(cfg, params, mode)
+    dst, _ = _quant_prefilled(cfg, params, mode, seed=9)
+    rows = cache_mod.export_pages(src, [1, 5])
+    newdst = cache_mod.adopt_pages(dst, rows, [3, 7])
+    assert _page_rows(newdst, [3, 7]) == _page_rows(src, [1, 5])
+    untouched = [p for p in range(8) if p not in (3, 7)]
+    assert _page_rows(newdst, untouched) == _page_rows(dst, untouched)
+
+
+def test_copy_pages_across_mismatch_names_layer_and_shapes(llm):
+    """A pool-leaf mismatch fails loudly with the layer path, layout and
+    both shapes — not deep inside a kernel call."""
+    cfg, params = llm
+    src, _ = _quant_prefilled(cfg, params, "int8", ps=8)
+    dst, _ = _quant_prefilled(cfg, params, "int8", ps=16)
+    with pytest.raises(ValueError,
+                       match=r"pool leaf '.*' of layer .* does not match"):
+        cache_mod.copy_pages_across(src, dst, [0])
+
+
+def test_adopt_pages_mismatch_names_layer_and_shapes(llm):
+    cfg, params = llm
+    src, _ = _quant_prefilled(cfg, params, "int8", ps=8)
+    dst, _ = _quant_prefilled(cfg, params, "int8", ps=16)
+    rows = cache_mod.export_pages(src, [0])
+    with pytest.raises(ValueError,
+                       match=r"pool leaf '.*' of layer .* does not match"):
+        cache_mod.adopt_pages(dst, rows, [0])
 
 
 # ---------------------------------------------------------------------------
